@@ -1,0 +1,33 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network
+
+
+def max_rate(name: str) -> float:
+    """Max feasible inference rate = 1 / latency with all domains at
+    V_max (the fastest any schedule can run)."""
+    costs = characterize_network(edge_network(name), ACC)
+    fs = [ACC.dvfs(d).freq(ACC.v_max) for d in range(3)]
+    t = sum(max(cy / f for cy, f in zip(c.cycles, fs)) for c in costs)
+    return 1.0 / t
+
+
+def schedule_for(name: str, rate: float, policy: str,
+                 **cfg_kwargs):
+    return compile_power_schedule(
+        edge_network(name), rate,
+        cfg=OrchestratorConfig(policy=policy, **cfg_kwargs),
+        network=name)
+
+
+def timed(fn, *args, **kwargs):
+    tic = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - tic

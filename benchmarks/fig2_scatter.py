@@ -1,0 +1,33 @@
+"""Paper Fig. 2: energy-latency scatter for three SqueezeNet layers under
+independent compute/RRAM/feeder DVFS (0.9-1.2V), nominal point marked."""
+
+from repro.core.edge_builder import layer_states
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network, plan_banks
+from repro.hw.dvfs import voltage_levels
+
+
+def main() -> None:
+    specs = edge_network("squeezenet1.1")
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    # representative layers: early conv, fire-expand3x3, classifier conv
+    picks = {0: specs[0].name, 9: specs[9].name, 25: specs[25].name}
+    rails = voltage_levels(0.9, 1.2, 0.05)   # Fig 2 sweeps 0.9-1.2
+    print("layer,name,v_compute,v_feeder,v_rram,t_us,e_uj,is_nominal")
+    for li, lname in picks.items():
+        states = layer_states(costs[li], li, ACC, plan, rails,
+                              gating=False)
+        best = min(states, key=lambda s: s.e_op)
+        for s in states:
+            nom = all(abs(v - ACC.v_nom) < 1e-9 for v in s.voltages)
+            print(f"{li},{lname},{s.voltages[0]},{s.voltages[1]},"
+                  f"{s.voltages[2]},{s.t_op*1e6:.3f},{s.e_op*1e6:.4f},"
+                  f"{int(nom)}")
+        print(f"# layer {li} min-energy point: V={best.voltages} "
+              f"E={best.e_op*1e6:.4f}uJ T={best.t_op*1e6:.2f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 5: inference-interval energy vs target rate, SqueezeNet,
+five policies (baseline / +gating / +greedy / +gating+greedy / PF-DNN)."""
+
+import numpy as np
+
+from benchmarks.common import max_rate, schedule_for
+
+POLICIES = ("baseline", "gating", "greedy", "greedy_gating", "pfdnn")
+
+
+def main() -> None:
+    name = "squeezenet1.1"
+    rmax = max_rate(name)
+    rates = np.linspace(0.15, 0.97, 8) * rmax
+    print(f"# {name}: max feasible rate {rmax:.1f} Hz")
+    print("rate_hz," + ",".join(f"{p}_uj" for p in POLICIES))
+    rows = {}
+    for rate in rates:
+        vals = []
+        for p in POLICIES:
+            s = schedule_for(name, float(rate), p)
+            vals.append(s.e_total * 1e6 if s else float("nan"))
+        rows[rate] = vals
+        print(f"{rate:.2f}," + ",".join(f"{v:.2f}" for v in vals))
+    # derived: PF-DNN vs baseline at the tightest rate
+    tight = rows[rates[-1]]
+    print(f"# derived: at {rates[-1]:.1f} Hz PF-DNN saves "
+          f"{(1 - tight[-1]/tight[0])*100:.1f}% vs baseline; "
+          f"{(1 - tight[-1]/tight[3])*100:.2f}% vs greedy+gating")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Fig. 6: normalized interval energy across the four edge models
+under tight (0.95 x max rate) and relaxed (0.3 x) deadlines.
+Claims checked: 34-48% vs baseline at max rate; <=~5% extra over
+greedy+gating; convergence when relaxed."""
+
+from benchmarks.common import max_rate, schedule_for
+from repro.models.edge_cnn import EDGE_NETWORKS
+
+POLICIES = ("baseline", "gating", "greedy", "greedy_gating", "pfdnn")
+
+
+def main() -> None:
+    print("model,deadline,policy,energy_uj,normalized")
+    for name in EDGE_NETWORKS:
+        rmax = max_rate(name)
+        for tag, frac in (("tight", 0.95), ("relaxed", 0.30)):
+            base = None
+            for p in POLICIES:
+                s = schedule_for(name, rmax * frac, p)
+                e = s.e_total * 1e6 if s else float("nan")
+                if p == "baseline":
+                    base = e
+                print(f"{name},{tag},{p},{e:.2f},{e/base:.4f}")
+    print("# derived per-model savings at tight deadline:")
+    for name in EDGE_NETWORKS:
+        rmax = max_rate(name)
+        sb = schedule_for(name, rmax * 0.95, "baseline")
+        sg = schedule_for(name, rmax * 0.95, "greedy_gating")
+        sp = schedule_for(name, rmax * 0.95, "pfdnn")
+        if sp is None or sb is None:
+            print(f"#   {name}: infeasible at 0.95x max rate")
+            continue
+        vs_g = (f"{(1 - sp.e_total / sg.e_total) * 100:.2f}%"
+                if sg is not None else
+                "greedy INFEASIBLE (local moves stall — the paper's "
+                "motivating failure mode, Sec 2.2)")
+        print(f"#   {name}: vs baseline "
+              f"{(1 - sp.e_total / sb.e_total) * 100:.1f}% "
+              f"(paper: 34-48%), vs greedy+gating {vs_g} "
+              f"(paper: up to 5%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark harness: one module per paper table/figure (+ the roofline
+table from the dry-run artifacts and the beyond-paper TPU adaptation).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig9]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    etrans_sweep,
+    fig2_scatter,
+    fig5_rate,
+    fig6_models,
+    fig7_rails,
+    fig8_utility,
+    fig9_solver,
+    tpu_orchestration,
+)
+
+
+def _roofline_main() -> None:
+    from repro.launch.roofline import load_all, render_markdown
+
+    for mesh in ("pod16x16",):
+        rows = load_all(mesh)
+        if not rows:
+            print(f"# no dry-run artifacts for {mesh} yet — run "
+                  "scripts/run_dryruns.sh")
+            continue
+        print(render_markdown(rows))
+
+
+BENCHES = {
+    "fig2": ("Paper Fig 2: per-layer DVFS energy-latency scatter",
+             fig2_scatter.main),
+    "fig5": ("Paper Fig 5: energy vs inference rate (5 policies)",
+             fig5_rate.main),
+    "fig6": ("Paper Fig 6: generalization across 4 edge models",
+             fig6_models.main),
+    "fig7": ("Paper Fig 7: rail count, even vs optimized",
+             fig7_rails.main),
+    "fig8": ("Paper Fig 8: marginal-utility ranking",
+             fig8_utility.main),
+    "fig9": ("Paper Fig 9 / §6.5: solver scalability + pruning",
+             fig9_solver.main),
+    "etrans": ("§6.4: E_trans sensitivity / switch suppression",
+               etrans_sweep.main),
+    "tpu": ("Beyond-paper: PF-DNN on TPU dry-run roofline terms",
+            tpu_orchestration.main),
+    "roofline": ("Roofline table from dry-run artifacts",
+                 _roofline_main),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: "
+                         + ",".join(BENCHES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    for key, (title, fn) in BENCHES.items():
+        if key not in only:
+            continue
+        print(f"\n{'=' * 72}\n== [{key}] {title}\n{'=' * 72}")
+        tic = time.perf_counter()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            print(f"!! {key} failed: {type(e).__name__}: {e}")
+        print(f"== [{key}] done in {time.perf_counter() - tic:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Multi-pod dry-run, scripted: lower + compile one cell on the 512-chip
+mesh and print its roofline terms.
+
+    PYTHONPATH=src python examples/multipod_dryrun_demo.py
+"""
+
+# NOTE: repro.launch.dryrun sets
+#   XLA_FLAGS=--xla_force_host_platform_device_count=512
+# as its first import action, so importing it FIRST is required.
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS)
+
+rec = run_cell("tinyllama-1.1b", "train_4k", multi_pod=True)
+print(f"status:   {rec['status']}  mesh={rec['mesh']} "
+      f"devices={rec.get('devices')}")
+if rec["status"] == "OK":
+    m = rec["memory"]
+    c = rec["cost"]
+    print(f"memory:   peak {m['peak_bytes']/2**30:.2f} GiB/device "
+          f"(args {m['argument_bytes']/2**30:.2f}, "
+          f"temps {m['temp_bytes']/2**30:.2f})")
+    print(f"compute:  {c['flops_per_device']/1e12:.2f} TFLOP/device "
+          f"→ {c['flops_per_device']/197e12:.4f} s at 197 TF/s")
+    print(f"memory:   {c['bytes_per_device']/1e9:.1f} GB/device "
+          f"→ {c['bytes_per_device']/819e9:.4f} s at 819 GB/s")
+    print(f"network:  {c['collective_bytes_per_device']/1e9:.2f} "
+          f"GB/device → "
+          f"{c['collective_bytes_per_device']/50e9:.4f} s at 50 GB/s")
+    by_op = c["collective_by_op_per_device"]
+    print("collectives by op:",
+          {k: f"{v/1e9:.2f}GB" for k, v in by_op.items()})

@@ -1,0 +1,58 @@
+"""End-to-end driver: serve a small LM with batched requests while a
+PF-DNN-compiled power schedule governs the co-hosted periodic edge
+workload — the paper's deployment story, end to end.
+
+    PYTHONPATH=src python examples/power_orchestrated_serving.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.hw.edge40nm import EDGE40NM_DEFAULT
+from repro.models.edge_cnn import edge_network
+from repro.models.transformer import init_params
+from repro.perfmodel import characterize_network, plan_banks
+from repro.serve import (
+    EngineConfig,
+    PeriodicScheduler,
+    PowerRuntime,
+    ServingEngine,
+)
+
+# ---- LM serving side: continuous batching over a reduced qwen2 ----
+cfg = get_config("qwen2-7b").reduced()
+params, _ = init_params(cfg, jax.random.PRNGKey(0))
+engine = ServingEngine(cfg, params, EngineConfig(
+    max_batch=4, cache_len=96, max_new_tokens=12, eos_token=-1))
+
+rng = np.random.default_rng(0)
+for i in range(10):
+    engine.submit(list(rng.integers(1, cfg.vocab_size,
+                                    int(rng.integers(4, 20)))))
+done = engine.run_to_completion()
+print(f"[serving] {len(done)} requests completed, "
+      f"{sum(len(r.generated) for r in done)} tokens")
+
+# ---- power-orchestrated periodic inference at 3 frame rates ----
+specs = edge_network("mobilenetv3-small")
+costs = characterize_network(specs, EDGE40NM_DEFAULT)
+plan = plan_banks(costs, EDGE40NM_DEFAULT)
+print("\n[power] rate (Hz) | policy        | uJ/interval | avg mW")
+for rate in (30.0, 90.0, 180.0):
+    for policy in ("greedy_gating", "pfdnn"):
+        sched = compile_power_schedule(
+            specs, rate, cfg=OrchestratorConfig(policy=policy),
+            network="mnv3-small")
+        if sched is None:
+            print(f"   {rate:7.0f} | {policy:13s} | infeasible")
+            continue
+        stats = PeriodicScheduler(
+            PowerRuntime(sched, costs, plan, EDGE40NM_DEFAULT),
+            rate).run(n_intervals=20)
+        print(f"   {rate:7.0f} | {policy:13s} | "
+              f"{stats['avg_interval_energy_uj']:11.2f} | "
+              f"{stats['avg_power_mw']:6.3f}")
+print("\nPF-DNN matches greedy+gating at low rates (abundant slack) and "
+      "wins at high rates — paper §6.1.")

@@ -1,0 +1,43 @@
+"""Quickstart: compile a PF-DNN power schedule for SqueezeNet at 40 fps
+and inspect it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.hw.edge40nm import EDGE40NM_DEFAULT
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network, plan_banks
+from repro.serve import PowerRuntime
+
+# 1. the workload: SqueezeNet1.1 as a sequence of scheduled operations
+specs = edge_network("squeezenet1.1")
+print(f"workload: {len(specs)} layers, "
+      f"{sum(s.macs for s in specs)/1e6:.0f} MMACs, "
+      f"{sum(s.weight_bytes for s in specs)/1e6:.2f} MB weights")
+
+# 2. compile: unified DVFS + power-gating schedule under a 25 ms deadline
+for policy in ("baseline", "greedy_gating", "pfdnn"):
+    sched = compile_power_schedule(
+        specs, target_rate_hz=40.0,
+        cfg=OrchestratorConfig(policy=policy),
+        network="squeezenet1.1")
+    print(sched.summary())
+
+# 3. the compiled artifact: per-anchor register writes for the pg_manager
+sched = compile_power_schedule(
+    specs, 40.0, cfg=OrchestratorConfig(policy="pfdnn"),
+    network="squeezenet1.1")
+prog = sched.program()
+print(f"\ncompiled program: {len(prog)} register writes; first 6:")
+for op in prog[:6]:
+    print("  ", op)
+
+# 4. execute one interval on the power runtime and verify the ledger
+costs = characterize_network(specs, EDGE40NM_DEFAULT)
+plan = plan_banks(costs, EDGE40NM_DEFAULT)
+ledger = PowerRuntime(sched, costs, plan,
+                      EDGE40NM_DEFAULT).execute_interval()
+print(f"\nexecuted interval: {ledger.e_total*1e6:.2f} uJ "
+      f"(compiler predicted {sched.e_total*1e6:.2f} uJ), "
+      f"deadline {'met' if ledger.met_deadline else 'MISSED'}")

@@ -1,0 +1,42 @@
+"""Train a reduced LM for a few hundred steps with checkpointing and a
+mid-run restart — the training-substrate example.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py
+"""
+
+import pathlib
+import tempfile
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.train.elastic import ElasticRun, run_elastic
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import TrainConfig
+
+cfg = get_config("tinyllama-1.1b").reduced(
+    n_layers=2, d_model=128, d_ff=256, vocab_size=512)
+steps = 200
+
+with tempfile.TemporaryDirectory() as tmp:
+    run = ElasticRun(
+        cfg=cfg,
+        tcfg=TrainConfig(optimizer=AdamWConfig(
+            lr=3e-3, warmup_steps=10, total_steps=steps)),
+        data=DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                        global_batch=8),
+        ckpt_dir=pathlib.Path(tmp) / "ckpt",
+        ckpt_every=50,
+    )
+    # phase 1: train half way
+    out = run_elastic(run, total_steps=steps // 2)
+    print(f"phase 1: steps 0..{steps//2 - 1}, "
+          f"loss {out['history'][0]['loss']:.3f} → "
+          f"{out['history'][-1]['loss']:.3f}")
+    # phase 2: fresh process semantics — restore and continue
+    out = run_elastic(run, total_steps=steps)
+    print(f"phase 2: resumed from step {out['resumed_from']}, "
+          f"final loss {out['history'][-1]['loss']:.3f}")
+    first = out["history"][0]
+    last = out["history"][-1]
+    assert last["loss"] < 4.0, "training did not converge"
+    print("done — loss decreased across restart without a hiccup.")

@@ -1,0 +1,51 @@
+"""PowerFlow-DNN core: the paper's contribution as a composable library.
+
+Public API:
+  - ScheduleProblem / StateCost / IdleModel  — §4 problem formulation
+  - solve_lambda_dp / kbest_paths            — §4.3 λ-DP search
+  - refine_candidates                        — §4.3 local refinement
+  - prune_problem                            — §4.3 structure pruning
+  - solve_ilp                                — §4.3 exact oracle
+  - solve_greedy                             — §6 marginal-utility baseline
+  - select_rails / evenly_spaced_rails       — §6.3 rail selection
+  - compile_power_schedule / PowerSchedule   — §3.3 compiler driver
+"""
+
+from repro.core.edge_builder import build_edge_problem, build_idle_model
+from repro.core.greedy import min_energy_path, solve_greedy
+from repro.core.ilp import IlpBlowupError, solve_ilp
+from repro.core.lambda_dp import (
+    SolverStats,
+    dp_best_path,
+    kbest_paths,
+    min_time_path,
+    solve_lambda_dp,
+)
+from repro.core.orchestrator import (
+    POLICIES,
+    OrchestratorConfig,
+    compile_power_schedule,
+)
+from repro.core.problem import IdleModel, ScheduleProblem, StateCost
+from repro.core.pruning import prune_problem, unprune_path
+from repro.core.rails import (
+    all_rail_subsets,
+    evenly_spaced_rails,
+    select_rails,
+)
+from repro.core.refinement import refine_candidates, refine_path
+from repro.core.schedule import PowerSchedule
+
+__all__ = [
+    "ScheduleProblem", "StateCost", "IdleModel",
+    "solve_lambda_dp", "dp_best_path", "kbest_paths", "min_time_path",
+    "SolverStats",
+    "refine_candidates", "refine_path",
+    "prune_problem", "unprune_path",
+    "solve_ilp", "IlpBlowupError",
+    "solve_greedy", "min_energy_path",
+    "select_rails", "evenly_spaced_rails", "all_rail_subsets",
+    "build_edge_problem", "build_idle_model",
+    "compile_power_schedule", "OrchestratorConfig", "POLICIES",
+    "PowerSchedule",
+]

@@ -1,0 +1,137 @@
+"""Build a :class:`ScheduleProblem` for the 40nm edge accelerator.
+
+This is the compiler front-end of §3.3: given the characterized layer
+costs (cycle counts + per-event energies from the performance model) and
+the RRAM bank plan (gating analysis), enumerate each layer's feasible
+operating states under a rail subset R and attach T_op/E_op.
+
+State semantics for layer i under voltages (V_c, V_f, V_r):
+  T_op  = max_d cycles_d / f_d(V_d)       (ping-pong pipelined domains)
+          + wake_events·t_wake            (bank wake anchors, §3.2)
+  E_op  = Σ_d E_dyn,d·(V_d/V_nom)²        (first-order V² scaling, §5.2)
+          + [P_leak,c(V_c) + P_leak,f(V_f) + n_awake·P_leak,bank(V_r)]·T_op
+          + wake_events·E_bank_wake(V_r)
+
+Weightless layers (pool/eltwise/residual-add) may fully gate the RRAM
+domain (V_r = 0) when gating is enabled — RRAM is non-volatile, so no
+state is lost (§1's motivation for RRAM-based weight storage).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.problem import IdleModel, ScheduleProblem, StateCost
+from repro.hw.dvfs import V_GATED
+from repro.hw.edge40nm import (
+    D_COMPUTE,
+    D_FEEDER,
+    D_RRAM,
+    Edge40nmAccelerator,
+)
+from repro.perfmodel.gating import BankPlan
+from repro.perfmodel.layer_costs import LayerCost
+
+
+def build_idle_model(acc: Edge40nmAccelerator, n_banks: int, *,
+                     gating: bool, allow_sleep: bool) -> IdleModel:
+    """Idle power depends on whether the pg_manager can gate banks during
+    the inter-inference interval (gating hardware present or not)."""
+    if gating:
+        # banks gated during idle; pg_manager keeps one bank-equivalent on
+        leak = (acc.leak_compute + acc.leak_feeder + acc.leak_rram_bank)
+        p_idle = leak * (1.0 + acc.idle_residual_dyn)
+    else:
+        p_idle = acc.idle_power(n_banks)
+    return IdleModel(
+        p_idle=p_idle,
+        p_sleep=acc.sleep_power(n_banks),
+        e_sleep_wake=acc.sleep_wake_energy,
+        t_sleep_wake=acc.sleep_wake_latency,
+        allow_sleep=allow_sleep,
+    )
+
+
+def layer_states(cost: LayerCost, layer_idx: int, acc: Edge40nmAccelerator,
+                 plan: BankPlan, rails: Sequence[float], *,
+                 gating: bool) -> list[StateCost]:
+    dvfs_c = acc.dvfs(D_COMPUTE)
+    dvfs_f = acc.dvfs(D_FEEDER)
+    dvfs_r = acc.dvfs(D_RRAM)     # freq model; leakage handled per-bank
+    tm = acc.transitions()
+
+    n_awake = plan.awake_banks(layer_idx, gating)
+    wakes = plan.wake_events(layer_idx, gating)
+    cyc_c, cyc_f, cyc_r = cost.cycles
+    dyn_c, dyn_f, dyn_r = cost.dyn_energy_nom
+
+    rram_options: list[float] = list(rails)
+    if gating and cost.weight_bytes == 0:
+        rram_options.append(V_GATED)
+
+    states: list[StateCost] = []
+    for v_c in rails:
+        f_c = dvfs_c.freq(v_c)
+        if f_c <= 0:
+            continue
+        for v_f in rails:
+            f_f = dvfs_f.freq(v_f)
+            if f_f <= 0:
+                continue
+            for v_r in rram_options:
+                if v_r == V_GATED:
+                    if cyc_r > 0:
+                        continue          # needs weight streaming
+                    t_r = 0.0
+                else:
+                    f_r = dvfs_r.freq(v_r)
+                    if f_r <= 0:
+                        continue
+                    t_r = cyc_r / f_r
+                t_op = max(cyc_c / f_c, cyc_f / f_f, t_r)
+                t_op += wakes * tm.t_wake
+
+                e_dyn = (dyn_c * dvfs_c.dyn_energy_scale(v_c)
+                         + dyn_f * dvfs_f.dyn_energy_scale(v_f)
+                         + (dyn_r * dvfs_r.dyn_energy_scale(v_r)
+                            if v_r != V_GATED else 0.0))
+                p_leak = (dvfs_c.leak_power(v_c)
+                          + dvfs_f.leak_power(v_f))
+                if v_r != V_GATED:
+                    bank = acc.dvfs(D_RRAM, n_rram_banks=1)
+                    p_leak += n_awake * bank.leak_power(v_r)
+                e_wake = wakes * (tm.energy(V_GATED, v_r) / plan.n_banks
+                                  if v_r != V_GATED else 0.0)
+                e_op = e_dyn + p_leak * t_op + e_wake
+                states.append(StateCost(
+                    voltages=(v_c, v_f, v_r),
+                    t_op=float(t_op),
+                    e_op=float(e_op),
+                    label=f"L{layer_idx}:{v_c:.2f}/{v_f:.2f}/{v_r:.2f}",
+                ))
+    return states
+
+
+def build_edge_problem(
+    costs: Sequence[LayerCost],
+    plan: BankPlan,
+    acc: Edge40nmAccelerator,
+    rails: Sequence[float],
+    t_max: float,
+    *,
+    gating: bool = True,
+    allow_sleep: bool = True,
+    e_switch_nom: float | None = None,
+    name: str = "",
+) -> ScheduleProblem:
+    layers = [layer_states(c, i, acc, plan, rails, gating=gating)
+              for i, c in enumerate(costs)]
+    return ScheduleProblem(
+        layer_states=layers,
+        t_max=t_max,
+        idle=build_idle_model(acc, plan.n_banks, gating=gating,
+                              allow_sleep=allow_sleep),
+        transition_model=acc.transitions(e_switch_nom),
+        rails=tuple(rails),
+        name=name,
+    )

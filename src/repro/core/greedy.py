@@ -1,0 +1,74 @@
+"""Layer-wise marginal-utility DVFS heuristic — the paper's ``+greedy``
+baseline (§6), inspired by prior accelerator DVFS work [8, 20, 33].
+
+"Starting from the minimum-energy configuration, the heuristic iteratively
+applies per-layer voltage adjustments that provide the largest latency
+reduction per unit energy increase until the target deadline is met.
+While transition overheads are considered during candidate evaluation,
+decisions are made locally and independently, without jointly optimizing
+power-state assignments across layers."
+
+This is exactly the law-of-equi-marginal-utility policy [3, 34]: spend
+energy where it buys the most time.  Its failure mode — the paper's
+motivation — is that it cannot see inter-layer coupling (transition costs
+of moving *between* rails, shared-rail restrictions across layers).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.problem import ScheduleProblem
+
+
+def min_energy_path(problem: ScheduleProblem) -> list[int]:
+    """Per-layer independent minimum-energy configuration (greedy start)."""
+    return [int(np.argmin(problem.op_arrays(i)[1]))
+            for i in range(problem.n_layers)]
+
+
+def solve_greedy(problem: ScheduleProblem,
+                 max_iters: int = 10_000) -> dict | None:
+    """Marginal-utility ascent to feasibility; None if it never gets there."""
+    path = min_energy_path(problem)
+    ev = problem.evaluate(path)
+    iters = 0
+    while not ev["feasible"] and iters < max_iters:
+        iters += 1
+        best_ratio = -np.inf
+        best_move: tuple[int, int] | None = None
+        for i in range(problem.n_layers):
+            ti, ei = problem.op_arrays(i)
+            cur = path[i]
+            d_t = ti - ti[cur]
+            d_e = ei - ei[cur]
+            # local transition awareness (candidate evaluation only)
+            if i > 0:
+                tt, et = problem.transition_arrays(i - 1)
+                d_t = d_t + tt[path[i - 1], :] - tt[path[i - 1], cur]
+                d_e = d_e + et[path[i - 1], :] - et[path[i - 1], cur]
+            if i + 1 < problem.n_layers:
+                tt, et = problem.transition_arrays(i)
+                d_t = d_t + tt[:, path[i + 1]] - tt[cur, path[i + 1]]
+                d_e = d_e + et[:, path[i + 1]] - et[cur, path[i + 1]]
+            speedup = -d_t
+            cost = d_e
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ratio = np.where(
+                    speedup > 0,
+                    np.where(cost <= 0, np.inf, speedup / cost),
+                    -np.inf,
+                )
+            ratio[cur] = -np.inf
+            j = int(np.argmax(ratio))
+            if ratio[j] > best_ratio:
+                best_ratio = float(ratio[j])
+                best_move = (i, j)
+        if best_move is None or not np.isfinite(best_ratio):
+            return None                      # cannot reach the deadline
+        path[best_move[0]] = best_move[1]
+        ev = problem.evaluate(path)
+    if not ev["feasible"]:
+        return None
+    ev["greedy_iterations"] = iters
+    return ev

@@ -1,0 +1,169 @@
+"""Exact ILP oracle for the §4.2 optimization (paper §4.3 / §6.5).
+
+Used only for validation on small instances — the paper's observation
+that ILP "instantiates binary variables and transition constraints over
+layer-state pairs" and runs out of memory as the layered graph grows is
+reproduced here: the variable count is Σ|S_i| + Σ|S_i||S_{i+1}|, and we
+raise ``IlpBlowupError`` past a configurable budget instead of swapping.
+
+Formulation (HiGHS via scipy.optimize.milp):
+  x[i,s] ∈ {0,1}     layer i uses state s           (Σ_s x[i,s] = 1)
+  y[i,a,b] ∈ [0,1]   flow linking consecutive states; with binary x the
+                     transportation constraints force y integral.
+  u_a, u_s ≥ 0       active-idle / sleep portions of the slack
+  z ∈ {0,1}          duty-cycle decision (§4.2), z=1 ⇒ stay active
+
+  min Σ e_op·x + Σ e_trans·y + P_idle·u_a + P_sleep·u_s + E_wake·(1−z)
+  s.t. flow conservation, u_a+u_s + Σ t_op·x + Σ t_trans·y = T_max,
+       u_a ≤ M·z, u_s ≤ M·(1−z), u_a+u_s ≥ t_wake·(1−z).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from repro.core.problem import ScheduleProblem
+
+
+class IlpBlowupError(RuntimeError):
+    """Raised when the ILP instance exceeds the variable budget
+    (the paper's ILP-out-of-memory regime, §6.5)."""
+
+
+def solve_ilp(problem: ScheduleProblem, *, time_limit: float = 300.0,
+              max_variables: int = 2_000_000) -> dict:
+    """Solve exactly; returns the standard evaluation dict + solver info."""
+    tic = time.perf_counter()
+    L = problem.n_layers
+    sizes = [len(s) for s in problem.layer_states]
+    nx = sum(sizes)
+    ny = sum(a * b for a, b in zip(sizes[:-1], sizes[1:]))
+    n = nx + ny + 3                       # + u_a, u_s, z
+    if n > max_variables:
+        raise IlpBlowupError(
+            f"ILP instance needs {n} variables "
+            f"(Σ|S_i|={nx}, Σ|S_i||S_i+1|={ny}) > budget {max_variables}")
+
+    # Normalize units to O(1): raw instances mix joules (1e-4), transition
+    # joules (1e-9) and seconds (1e-2..1e-6), which trips MIP feasibility/
+    # gap tolerances.  Scale time by 1/T_max and energy by 1/ΣE_op(min).
+    t_scale = 1.0 / problem.t_max
+    e_ref = sum(float(np.min(problem.op_arrays(i)[1])) for i in range(L))
+    e_scale = 1.0 / max(e_ref, 1e-30)
+
+    x_off = np.zeros(L, dtype=int)
+    for i in range(1, L):
+        x_off[i] = x_off[i - 1] + sizes[i - 1]
+    y_off = np.zeros(L - 1, dtype=int)
+    acc = nx
+    for i in range(L - 1):
+        y_off[i] = acc
+        acc += sizes[i] * sizes[i + 1]
+    iu_a, iu_s, iz = n - 3, n - 2, n - 1
+
+    idle = problem.idle
+    tmax = problem.t_max
+    big_m = tmax
+
+    # ---- objective ----
+    c = np.zeros(n)
+    for i in range(L):
+        _, e = problem.op_arrays(i)
+        c[x_off[i]:x_off[i] + sizes[i]] = e * e_scale
+    for i in range(L - 1):
+        _, et = problem.transition_arrays(i)
+        c[y_off[i]:y_off[i] + et.size] = et.ravel() * e_scale
+    # u_a/u_s live in scaled time units → power coefficients get e/t scale
+    c[iu_a] = idle.p_idle * e_scale / t_scale
+    c[iu_s] = idle.p_sleep * e_scale / t_scale
+    c[iz] = -idle.e_sleep_wake * e_scale  # +E_wake·(1−z) → const + (−E_wake)z
+    obj_const = idle.e_sleep_wake * e_scale
+
+    rows, cols, vals = [], [], []
+    lb_list, ub_list = [], []
+    r = 0
+
+    def add_row(idx, coef, lo, hi):
+        nonlocal r
+        rows.extend([r] * len(idx))
+        cols.extend(idx)
+        vals.extend(coef)
+        lb_list.append(lo)
+        ub_list.append(hi)
+        r += 1
+
+    # one state per layer
+    for i in range(L):
+        idx = list(range(x_off[i], x_off[i] + sizes[i]))
+        add_row(idx, [1.0] * sizes[i], 1.0, 1.0)
+
+    # flow conservation
+    for i in range(L - 1):
+        sa, sb = sizes[i], sizes[i + 1]
+        for a in range(sa):
+            idx = [y_off[i] + a * sb + b for b in range(sb)]
+            idx.append(x_off[i] + a)
+            add_row(idx, [1.0] * sb + [-1.0], 0.0, 0.0)
+        for b in range(sb):
+            idx = [y_off[i] + a * sb + b for a in range(sa)]
+            idx.append(x_off[i + 1] + b)
+            add_row(idx, [1.0] * sa + [-1.0], 0.0, 0.0)
+
+    # time budget: Σ t_op x + Σ t_trans y + u_a + u_s = T_max
+    idx, coef = [], []
+    for i in range(L):
+        t, _ = problem.op_arrays(i)
+        idx.extend(range(x_off[i], x_off[i] + sizes[i]))
+        coef.extend((t * t_scale).tolist())
+    for i in range(L - 1):
+        tt, _ = problem.transition_arrays(i)
+        idx.extend(range(y_off[i], y_off[i] + tt.size))
+        coef.extend((tt.ravel() * t_scale).tolist())
+    idx.extend([iu_a, iu_s])
+    coef.extend([1.0, 1.0])
+    add_row(idx, coef, tmax * t_scale, tmax * t_scale)
+
+    # idle-branch switching (scaled time units; M = scaled deadline = 1)
+    m_s = big_m * t_scale
+    add_row([iu_a, iz], [1.0, -m_s], -np.inf, 0.0)          # u_a ≤ M z
+    add_row([iu_s, iz], [1.0, m_s], -np.inf, m_s)           # u_s ≤ M(1−z)
+    if idle.t_sleep_wake > 0:
+        tw = idle.t_sleep_wake * t_scale
+        add_row([iu_a, iu_s, iz], [1.0, 1.0, tw], tw, np.inf)
+
+    a_mat = sp.csr_matrix((vals, (rows, cols)), shape=(r, n))
+    constraints = LinearConstraint(a_mat, np.array(lb_list),
+                                   np.array(ub_list))
+
+    integrality = np.zeros(n)
+    integrality[:nx] = 1                  # x binary; y continuous (TU flow)
+    integrality[iz] = 1
+
+    lb = np.zeros(n)
+    ub = np.ones(n)
+    ub[iu_a] = ub[iu_s] = tmax * t_scale
+    if not idle.allow_sleep:
+        lb[iz] = 1.0
+
+    res = milp(c=c, constraints=constraints, integrality=integrality,
+               bounds=Bounds(lb, ub),
+               options={"time_limit": time_limit, "presolve": True,
+                        "mip_rel_gap": 0.0})
+    wall = time.perf_counter() - tic
+    if res.status != 0 or res.x is None:
+        return {"feasible": False, "status": int(res.status),
+                "message": str(res.message), "wall_time_s": wall}
+
+    path = []
+    for i in range(L):
+        xs = res.x[x_off[i]:x_off[i] + sizes[i]]
+        path.append(int(np.argmax(xs)))
+    out = problem.evaluate(path)
+    out["ilp_objective"] = float((res.fun + obj_const) / e_scale)
+    out["wall_time_s"] = wall
+    out["n_variables"] = n
+    return out

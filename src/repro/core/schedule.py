@@ -1,0 +1,95 @@
+"""The compiled power-schedule artifact (paper §3.3).
+
+"The resulting voltage assignments and memory-gating decisions are
+compiled and programmed into the on-chip memory as a static schedule,
+along with the layer definitions used during run-time execution, while
+the pg_manager manages the inter-layer fine-grained memory-gating
+schedules."
+
+:class:`PowerSchedule` is that artifact: per-layer domain voltages, the
+bank-gating timeline, the duty-cycle decision, energy/latency breakdown,
+and a ``program()`` method that emits the register-write stream a
+pg_manager would consume.  It serializes to JSON for deployment and for
+the serving runtime (serve/power_runtime.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.hw.edge40nm import DOMAINS
+
+
+@dataclasses.dataclass
+class PowerSchedule:
+    policy: str
+    network: str
+    rails: tuple[float, ...]
+    # per layer: domain → voltage (0.0 = gated)
+    layer_voltages: list[tuple[float, ...]]
+    # per layer: number of awake memory banks
+    awake_banks: list[int]
+    t_max: float
+    t_infer: float
+    e_total: float
+    e_op: float
+    e_trans: float
+    e_idle: float
+    z_active_idle: int
+    n_rail_switches: int
+    feasible: bool
+    solver_stats: dict[str, Any] = dataclasses.field(default_factory=dict)
+    domains: tuple[str, ...] = DOMAINS
+
+    @property
+    def energy_uj(self) -> float:
+        return self.e_total * 1e6
+
+    @property
+    def slack(self) -> float:
+        return self.t_max - self.t_infer
+
+    def program(self) -> list[dict[str, Any]]:
+        """Emit the static register-write stream (anchor, domain, value)."""
+        prog: list[dict[str, Any]] = []
+        prev: tuple[float, ...] | None = None
+        for i, volts in enumerate(self.layer_voltages):
+            for d, v in enumerate(volts):
+                if prev is None or prev[d] != v:
+                    prog.append({"anchor": i, "domain": self.domains[d],
+                                 "op": "set_rail" if v > 0 else "gate",
+                                 "value": v})
+            prog.append({"anchor": i, "domain": "rram_banks",
+                         "op": "awake_mask", "value": self.awake_banks[i]})
+            prev = volts
+        prog.append({"anchor": len(self.layer_voltages),
+                     "domain": "chip",
+                     "op": "idle" if self.z_active_idle else "deep_sleep",
+                     "value": self.slack})
+        return prog
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["rails"] = list(self.rails)
+        d["domains"] = list(self.domains)
+        return json.dumps(d, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PowerSchedule":
+        d = json.loads(text)
+        d["rails"] = tuple(d["rails"])
+        d["domains"] = tuple(d["domains"])
+        d["layer_voltages"] = [tuple(v) for v in d["layer_voltages"]]
+        return cls(**d)
+
+    def summary(self) -> str:
+        lines = [
+            f"PowerSchedule[{self.policy}] {self.network}: "
+            f"E={self.energy_uj:.2f}uJ  T={self.t_infer*1e3:.3f}ms"
+            f"/{self.t_max*1e3:.3f}ms  rails={self.rails}  "
+            f"switches={self.n_rail_switches}  "
+            f"z={'active-idle' if self.z_active_idle else 'deep-sleep'}",
+        ]
+        return "\n".join(lines)

@@ -1,0 +1,131 @@
+"""Beyond-paper adaptation: PF-DNN power orchestration for a TPU pod
+serving deadline-constrained periodic inference (DESIGN.md §3.2).
+
+Mapping (paper → pod):
+  layers            → per-(scan-step) transformer-layer phases, with
+                      latency/energy terms derived from the dry-run's
+                      compiled roofline (FLOPs → MXU domain, bytes →
+                      HBM domain, collective bytes → ICI domain)
+  DVFS domains      → MXU / HBM / ICI voltage-frequency domains
+  RRAM bank gating  → idle-block gating: MoE expert banks (top-k of E
+                      active per token), cold KV-cache banks
+  rail scarcity     → pod-level shared supplies (N_max rails)
+  deadline          → 1/R_target serving SLO
+
+The *formulation* (problem.py) and *solvers* (λ-DP/ILP/refinement/
+pruning) are reused unchanged — this module only builds the per-layer
+state spaces from TPU terms, which is exactly the paper's thesis: the
+compiler formulation generalizes across hardware once T_op/E_op/
+transitions are characterized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.problem import IdleModel, ScheduleProblem, StateCost
+from repro.hw.dvfs import V_GATED
+from repro.hw.tpu import TPU_V5E, TpuChipModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuLayerCost:
+    """Per-layer roofline terms for ONE chip (from the dry-run JSON)."""
+
+    name: str
+    flops: float              # per-device HLO FLOPs for this layer
+    hbm_bytes: float          # per-device bytes accessed
+    ici_bytes: float          # per-device collective bytes
+    gateable_fraction: float = 0.0   # idle weight banks (MoE: 1 − k/E)
+
+
+def layer_costs_from_dryrun(record: dict, n_layers: int,
+                            gateable_fraction: float = 0.0,
+                            ) -> list[TpuLayerCost]:
+    """Split a dry-run cell's corrected per-device costs into uniform
+    per-layer phases (the scan body is identical per layer)."""
+    c = record["cost"]
+    return [
+        TpuLayerCost(
+            name=f"L{i}",
+            flops=c["flops_per_device"] / n_layers,
+            hbm_bytes=c["bytes_per_device"] / n_layers,
+            ici_bytes=c["collective_bytes_per_device"] / n_layers,
+            gateable_fraction=gateable_fraction,
+        )
+        for i in range(n_layers)
+    ]
+
+
+def build_tpu_problem(
+    layers: Sequence[TpuLayerCost],
+    rails: Sequence[float],
+    deadline_s: float,
+    *,
+    chip: TpuChipModel = TPU_V5E,
+    gating: bool = True,
+    allow_sleep: bool = True,
+    name: str = "tpu",
+) -> ScheduleProblem:
+    """Layered state graph over (V_mxu, V_hbm, V_ici) assignments."""
+    dv = [chip.dvfs(d) for d in range(3)]
+    tm = chip.transitions()
+
+    def states_for(lc: TpuLayerCost, idx: int) -> list[StateCost]:
+        out = []
+        work = (lc.flops, lc.hbm_bytes, lc.ici_bytes)
+        ici_options = list(rails)
+        if gating and lc.ici_bytes == 0:
+            ici_options.append(V_GATED)
+        for vm in rails:
+            for vh in rails:
+                for vi in ici_options:
+                    volts = (vm, vh, vi)
+                    times = []
+                    e_dyn = 0.0
+                    p_leak = 0.0
+                    for d, v in enumerate(volts):
+                        if v == V_GATED:
+                            continue
+                        thr = dv[d].freq(v)       # throughput at this V
+                        if thr <= 0 or (work[d] > 0 and thr == 0):
+                            times.append(float("inf"))
+                            continue
+                        t_d = work[d] / thr if work[d] else 0.0
+                        times.append(t_d)
+                        # dynamic energy ∝ work · V²; calibrated so that
+                        # nominal-V full-utilization power matches the
+                        # chip's dynamic power budget
+                        p_dyn_nom = chip.dyn_power_nom(d)
+                        e_dyn += (p_dyn_nom * t_d
+                                  * dv[d].dyn_energy_scale(v))
+                        leak = dv[d].leak_power(v)
+                        if d == 0 and gating and lc.gateable_fraction:
+                            # gate idle weight banks (MoE experts):
+                            # remove their share of MXU/SRAM leakage
+                            leak *= (1.0 - 0.9 * lc.gateable_fraction)
+                        p_leak += leak
+                    t_op = max(times)
+                    if t_op == float("inf"):
+                        continue
+                    e_op = e_dyn + p_leak * t_op
+                    out.append(StateCost(volts, float(t_op), float(e_op),
+                                         label=f"L{idx}"))
+        return out
+
+    idle = IdleModel(
+        p_idle=chip.p_leak_total * 1.2,
+        p_sleep=chip.p_leak_total * 0.08,
+        e_sleep_wake=chip.e_switch_nom * 3,
+        t_sleep_wake=chip.t_rail * 4,
+        allow_sleep=allow_sleep,
+    )
+    return ScheduleProblem(
+        layer_states=[states_for(lc, i) for i, lc in enumerate(layers)],
+        t_max=deadline_s,
+        idle=idle,
+        transition_model=tm,
+        rails=tuple(rails),
+        name=name,
+    )

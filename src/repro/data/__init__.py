@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticLMStream,
+    make_global_batch,
+)
+
+__all__ = ["DataConfig", "SyntheticLMStream", "make_global_batch"]

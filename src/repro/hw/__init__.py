@@ -1,0 +1,15 @@
+"""Hardware models: DVFS scaling laws, the paper's 40nm edge accelerator,
+and a TPU-v5e chip model for the beyond-paper adaptation."""
+
+from repro.hw.dvfs import DvfsModel, TransitionModel
+from repro.hw.edge40nm import Edge40nmAccelerator, EDGE40NM_DEFAULT
+from repro.hw.tpu import TpuChipModel, TPU_V5E
+
+__all__ = [
+    "DvfsModel",
+    "TransitionModel",
+    "Edge40nmAccelerator",
+    "EDGE40NM_DEFAULT",
+    "TpuChipModel",
+    "TPU_V5E",
+]

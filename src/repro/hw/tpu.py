@@ -1,0 +1,68 @@
+"""TPU chip model for the beyond-paper adaptation and the roofline.
+
+Hardware constants for the roofline terms (per the evaluation brief):
+  - 197 TFLOP/s bf16 per chip (MXU)
+  - 819 GB/s HBM bandwidth per chip
+  - ~50 GB/s per ICI link
+
+For the PF-DNN-on-TPU adaptation (core/tpu_adapter.py) we expose the chip
+as three DVFS domains — MXU (compute), HBM (memory), ICI (interconnect) —
+with a small discrete voltage space.  Real TPUs expose coarser DVFS than
+the paper's ASIC; the *formulation* is unchanged, only |V| shrinks
+(DESIGN.md §3).  Throughput of each domain scales linearly with its
+frequency; dynamic energy per unit work scales with V².
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.hw.dvfs import DvfsModel, TransitionModel, voltage_levels
+
+TPU_DOMAINS = ("mxu", "hbm", "ici")
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuChipModel:
+    peak_flops_bf16: float = 197e12   # [FLOP/s]
+    hbm_bw: float = 819e9             # [B/s]
+    ici_bw_per_link: float = 50e9     # [B/s/link]
+    hbm_bytes: int = 16 * 1024**3     # v5e HBM capacity
+
+    # Power model (representative v5e-class numbers; used only for the
+    # PF-DNN adaptation's relative comparisons, never as vendor data).
+    v_min: float = 0.7
+    v_max: float = 1.0
+    v_step: float = 0.05
+    v_nom: float = 0.9
+    p_mxu_dyn_nom: float = 120.0      # [W] at full utilization, v_nom
+    p_hbm_dyn_nom: float = 45.0
+    p_ici_dyn_nom: float = 15.0
+    p_leak_total: float = 25.0        # [W] static, split below
+    leak_split: tuple[float, float, float] = (0.6, 0.3, 0.1)
+
+    t_rail: float = 50e-6             # pod-level rail switch [s]
+    t_wake: float = 5e-6
+    e_switch_nom: float = 50e-6       # [J] — large domains, large C
+
+    def levels(self) -> tuple[float, ...]:
+        return voltage_levels(self.v_min, self.v_max, self.v_step)
+
+    def dvfs(self, domain: int) -> DvfsModel:
+        f_nom = (self.peak_flops_bf16, self.hbm_bw,
+                 self.ici_bw_per_link)[domain]  # "frequency" = throughput
+        leak = self.p_leak_total * self.leak_split[domain]
+        return DvfsModel(v_nom=self.v_nom, v_th=0.45, alpha=1.2,
+                         f_nom=f_nom, leak_nom=leak, leak_beta=2.5)
+
+    def dyn_power_nom(self, domain: int) -> float:
+        return (self.p_mxu_dyn_nom, self.p_hbm_dyn_nom,
+                self.p_ici_dyn_nom)[domain]
+
+    def transitions(self) -> TransitionModel:
+        return TransitionModel(t_rail=self.t_rail, t_wake=self.t_wake,
+                               e_switch_nom=self.e_switch_nom,
+                               v_min=self.v_min, v_max=self.v_max)
+
+
+TPU_V5E = TpuChipModel()

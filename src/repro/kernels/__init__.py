@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+  - int8_matmul     the paper's INT8 precision on the MXU
+  - flash_attention fused prefill attention (online softmax, GQA-aware
+                    index maps, causal block skipping)
+  - flash_decode    sequence-tiled decode attention over long KV caches
+
+Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public
+wrapper in ops.py; correctness is swept over shapes/dtypes in
+tests/test_kernels.py with interpret=True (CPU) — the BlockSpec tiling
+targets TPU VMEM/MXU alignment (multiples of 128 on minor dims).
+"""
+
+from repro.kernels.ops import (
+    attention_bshd,
+    decode_bshd,
+    int8_linear,
+    quantize_int8,
+)
+
+__all__ = ["attention_bshd", "decode_bshd", "int8_linear",
+           "quantize_int8"]

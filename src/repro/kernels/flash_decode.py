@@ -1,0 +1,100 @@
+"""Flash-decode Pallas kernel: single-token attention over a long KV
+cache, sequence-split so the HBM→VMEM cache stream is tiled and the
+memory-bound decode step saturates bandwidth.
+
+Grid (B, H, S/bs) with the sequence-block axis minor; the (m, l, acc)
+online-softmax carry sits in VMEM scratch.  Valid-length masking uses a
+per-batch ``length`` operand in SMEM.  On a real mesh the same math
+combines partials *across chips* with a log-sum-exp reduction — that is
+the `shard_kv_seq` hillclimb path; this kernel is the per-chip tile.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bs: int, n_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    s_start = si * bs
+
+    @pl.when(s_start < length)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)               # [1, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bs, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [1, bs]
+        pos = s_start + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        m_sub = jnp.maximum(m_new, 0.5 * NEG_INF)
+        p = jnp.exp(s - m_sub[:, None])
+        corr = jnp.exp(jnp.maximum(m_prev, 0.5 * NEG_INF) - m_sub)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v_ref.dtype), v_ref[0, :, 0, :],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 length: jax.Array, *, bs: int = 256,
+                 interpret: bool = False) -> jax.Array:
+    """q [B, H, D] × cache k/v [B, S, KH, D], length [B] → [B, H, D]."""
+    b, h, d = q.shape
+    _, s, kh, _ = k.shape
+    g = h // kh
+    bs = min(bs, s)
+    assert s % bs == 0, (s, bs)
+    n_s = s // bs
+    grid = (b, h, n_s)
+    scale = 1.0 / math.sqrt(d)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bs=bs, n_s=n_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, si: (bb,)),
+            pl.BlockSpec((1, 1, d), lambda bb, hh, si: (bb, hh, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bb, hh, si, g=g: (bb, si, hh // g, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bb, hh, si, g=g: (bb, si, hh // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bb, hh, si: (bb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

@@ -1,0 +1,73 @@
+"""INT8×INT8→INT32 tiled matmul Pallas kernel (TPU target).
+
+The paper's accelerator computes INT8 MACs (Fig 4); on TPU the analogue
+is int8 MXU issue with int32 accumulation.  Grid over (M/bm, N/bn) with
+a K-reduction loop inside the kernel; per-tile blocks live in VMEM:
+
+    x tile  [bm, bk] int8      w tile  [bk, bn] int8
+    acc     [bm, bn] int32 (VMEM scratch, accumulated across K steps)
+
+Block shapes default to MXU-aligned multiples of 128 on the minor dims
+(int8 native tile on TPU is (32, 128); (128, 128) keeps both operands
+aligned for either orientation).  Dequant scales are applied once at the
+epilogue, fused into the same kernel — the f32 result never bounces
+through HBM in int32 form.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _epilogue():
+        scale = (xs_ref[...][:, None].astype(jnp.float32)
+                 * ws_ref[...][None, :].astype(jnp.float32))
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul(x: jax.Array, w: jax.Array, x_scale: jax.Array,
+                w_scale: jax.Array, *, bm: int = 128, bn: int = 128,
+                bk: int = 128, interpret: bool = False) -> jax.Array:
+    """x [M,K] int8 × w [K,N] int8 → [M,N] f32 (per-row/col dequant)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"dims {(m, n, k)} must tile by {(bm, bn, bk)}"
+    n_k = k // bk
+
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, w, x_scale, w_scale)

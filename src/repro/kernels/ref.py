@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references
+used by tests/test_kernels.py shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x: jax.Array, w: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array) -> jax.Array:
+    """INT8×INT8→INT32 matmul with per-row/per-col dequant scales.
+
+    x [M, K] int8, w [K, N] int8, x_scale [M] f32, w_scale [N] f32
+    → [M, N] f32 = (x·w)_int32 * x_scale ⊗ w_scale
+    """
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * x_scale[:, None].astype(jnp.float32)
+            * w_scale[None, :].astype(jnp.float32))
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True) -> jax.Array:
+    """q [B, H, Sq, D], k/v [B, H, Sk, D] → [B, H, Sq, D] (MHA layout)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.array(d, jnp.float32))
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = (jnp.arange(sq)[:, None] + (sk - sq)
+                >= jnp.arange(sk)[None, :])
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """Decode attention: q [B, H, D], k/v [B, S, H, D], length [B]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhd,bshd->bhs", q, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.array(d, jnp.float32))
+    mask = jnp.arange(k.shape[1])[None, :] < length[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

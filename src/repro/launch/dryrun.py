@@ -1,0 +1,440 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks the device count at init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell with ShapeDtypeStruct inputs — no allocation, 512 placeholder
+host devices standing in for 2 pods × 256 chips of TPU v5e.
+
+Per cell we record:
+  - memory_analysis(): per-device argument/temp/peak bytes (fits-HBM proof)
+  - cost_analysis(): per-device HLO FLOPs and bytes accessed
+  - collective bytes: parsed from the optimized HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+  - MODEL_FLOPS = 6·N(_active)·tokens (train) or 2·N(_active)·B (decode)
+and cache the result under artifacts/dryrun/<arch>_<shape>_<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+import traceback
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_ARR_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}|\[\d+,\d+\])")
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for m in _ARR_RE.finditer(shape_txt):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1
+    g = m.group(1)
+    if g.startswith("[["):
+        return 1
+    if g.startswith("{{"):
+        return max(1, g.count(",") + 1)
+    # iota form: replica_groups=[G,n]
+    inner = g.strip("[]").split(",")
+    return int(inner[1]) if len(inner) == 2 else 1
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum collective *operand* bytes per op kind (global, all devices).
+
+    Result shapes are converted to operand shapes: all-gather results are
+    n× the operand; reduce-scatter results are 1/n of it.
+    """
+    per_op: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        result_bytes = _shape_bytes(m.group("shape"))
+        n = _group_size(line)
+        if op == "all-gather":
+            operand = result_bytes / max(n, 1)
+        elif op == "reduce-scatter":
+            operand = result_bytes * n
+        else:
+            operand = result_bytes
+        per_op[op] = per_op.get(op, 0.0) + operand
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_per_device_by_op": per_op,
+            "counts": counts,
+            "bytes_per_device_total": sum(per_op.values())}
+
+
+def _build_cell(arch: str, shape: str, multi_pod: bool,
+                cfg_overrides: dict | None = None,
+                seq_override: int | None = None):
+    """Returns (jitted_fn, example_args) ready to .lower()."""
+    import dataclasses as dc
+
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.launch import specs as sp
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as tf
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import TrainConfig, make_train_step
+
+    cfg = get_config(arch)
+    donate = False
+    if cfg_overrides:
+        cfg_overrides = dict(cfg_overrides)
+        donate = cfg_overrides.pop("__donate_state", False)
+        if cfg_overrides:
+            cfg = dc.replace(cfg, **cfg_overrides)
+    cell = SHAPES[shape]
+    if seq_override is not None:
+        cell = dc.replace(cell, seq_len=seq_override)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rt = tf.Runtime(mesh=mesh)
+
+    params_sds, params_sh = sp.abstract_model(cfg, mesh)
+
+    if cell.kind == "train":
+        # 1T-class models need bf16 moments + ZeRO sharding to have any
+        # chance of fitting (DESIGN.md §5); smaller models use f32.
+        big = cfg.n_params() > 5e10
+        ocfg = AdamWConfig(
+            moment_dtype="bfloat16" if big else "float32",
+            zero_shard=big)
+        from repro.launch.specs import abstract_opt_state
+        opt_sds, opt_sh = abstract_opt_state(params_sds, params_sh,
+                                             ocfg, mesh)
+        if ocfg.zero_shard:
+            from repro.train.optimizer import _zero_spec
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            _, raw_specs = tf.abstract(cfg)
+            zspec = jax.tree.map(
+                lambda s, x: NamedSharding(
+                    mesh, _zero_spec(s, x.shape, mesh.shape["data"])),
+                raw_specs, params_sds,
+                is_leaf=lambda s: isinstance(s, P))
+            opt_sh = {"m": zspec, "v": zspec, "count": opt_sh["count"]}
+        batch_sds, batch_sh = sp.train_batch_specs(cfg, cell, mesh)
+        step = make_train_step(cfg, TrainConfig(optimizer=ocfg), rt)
+        fn = jax.jit(step, in_shardings=(params_sh, opt_sh, batch_sh))
+        return mesh, cfg, cell, fn, (params_sds, opt_sds, batch_sds)
+
+    if cell.kind == "prefill":
+        batch_sds, batch_sh = sp.train_batch_specs(cfg, cell, mesh)
+        batch_sds.pop("labels")
+        batch_sh.pop("labels")
+
+        def prefill_fn(params, batch):
+            return tf.prefill(params, cfg, batch, rt,
+                              cache_len=cell.seq_len)
+
+        fn = jax.jit(prefill_fn, in_shardings=(params_sh, batch_sh))
+        return mesh, cfg, cell, fn, (params_sds, batch_sds)
+
+    # decode
+    state_sds, state_sh = sp.decode_state_specs(cfg, cell, mesh)
+    tok_sds, tok_sh = sp.decode_token_specs(cell, mesh)
+
+    def decode_fn(params, state, tokens):
+        return tf.decode_step(params, cfg, state, tokens, rt)
+
+    fn = jax.jit(decode_fn, in_shardings=(params_sh, state_sh, tok_sh),
+                 donate_argnums=(1,) if donate else ())
+    return mesh, cfg, cell, fn, (params_sds, state_sds, tok_sds)
+
+
+def _cost_compile(arch: str, shape: str, multi_pod: bool,
+                  overrides: dict,
+                  seq_override: int | None = None,
+                  seq_scale: float = 1.0) -> dict:
+    """Lower+compile a reduced-layer variant with inner scans unrolled and
+    return its per-device cost + collective totals.
+
+    ``seq_override``/``seq_scale``: for architectures whose per-token cost
+    is LINEAR in sequence length (ssm/hybrid — no full attention), the
+    cost variant compiles at a shorter sequence and scales linearly;
+    unrolling 256+ recurrence chunks would otherwise blow up compile time.
+    """
+    overrides = dict(overrides)
+    overrides["inner_unroll"] = True
+    mesh, _, _, fn, args = _build_cell(arch, shape, multi_pod, overrides,
+                                       seq_override)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+        ca = compiled.cost_analysis() or {}
+        coll = parse_collective_bytes(compiled.as_text())
+    s = seq_scale
+    return {
+        "flops": float(ca.get("flops", 0.0)) * s,
+        "bytes": float(ca.get("bytes accessed", 0.0)) * s,
+        "coll": coll["bytes_per_device_total"] * s,
+        "coll_by_op": {k: v * s for k, v in
+                       coll["bytes_per_device_by_op"].items()},
+    }
+
+
+def corrected_costs(arch: str, shape: str, multi_pod: bool,
+                    variant_overrides: dict | None = None) -> dict:
+    """Layer-differencing cost model (XLA prices while-loop bodies once):
+
+        total(L) = base + L · per_layer,  per_layer = cost(2L₀) − cost(L₀)
+
+    computed from two (three for xLSTM's mixed blocks) small-layer-count
+    compiles with inner scans unrolled.  See EXPERIMENTS.md §Dry-run for
+    the methodology note.
+    """
+    from repro.configs import get_config
+
+    from repro.configs import SHAPES
+
+    cfg = get_config(arch)
+    L = cfg.n_layers
+    # python-unrolled layers: scanned bodies are priced once regardless
+    # of trip count, so the cost variants must not use lax.scan
+    ovr_a: dict = {"n_layers": 1, "scan_layers": False}
+    ovr_b: dict = {"n_layers": 2, "scan_layers": False}
+    if variant_overrides:
+        ovr_a.update(variant_overrides)
+        ovr_b.update(variant_overrides)
+    if cfg.family == "audio":
+        ovr_a["n_encoder_layers"] = 1
+        ovr_b["n_encoder_layers"] = 2
+    if cfg.family == "ssm":
+        # keep 1-layer variants pure-mLSTM; cost the sLSTM layer separately
+        ovr_a["slstm_every"] = 0
+        ovr_b["slstm_every"] = 0
+    # linear-in-S families: compile the cost variant at a short sequence
+    # and scale (unrolling hundreds of recurrence chunks is intractable)
+    seq_override = None
+    seq_scale = 1.0
+    cell = SHAPES[shape]
+    if (cfg.family in ("ssm", "hybrid") and cell.kind != "decode"
+            and cell.seq_len > 4096):
+        seq_override = 4096
+        seq_scale = cell.seq_len / 4096
+    a = _cost_compile(arch, shape, multi_pod, ovr_a, seq_override,
+                      seq_scale)
+    b = _cost_compile(arch, shape, multi_pod, ovr_b, seq_override,
+                      seq_scale)
+
+    def combine(key):
+        d = b[key] - a[key]
+        base = a[key] - d
+        return base, d
+
+    out = {}
+    n_special = 0
+    special: dict | None = None
+    if cfg.family == "ssm" and cfg.slstm_every > 0:
+        n_special = L // cfg.slstm_every
+        ovr_s = {"n_layers": 1, "slstm_every": 1, "scan_layers": False}
+        if variant_overrides:
+            ovr_s.update(variant_overrides)
+        special = _cost_compile(arch, shape, multi_pod, ovr_s,
+                                seq_override, seq_scale)
+    for key in ("flops", "bytes", "coll"):
+        base, per_layer = combine(key)
+        total = base + L * per_layer
+        if special is not None:
+            s_layer = special[key] - base
+            total = base + (L - n_special) * per_layer \
+                + n_special * s_layer
+        out[key] = max(total, 0.0)
+    # collective per-op breakdown, linearly extrapolated the same way
+    by_op = {}
+    ops = set(a["coll_by_op"]) | set(b["coll_by_op"])
+    for op in ops:
+        va, vb = a["coll_by_op"].get(op, 0.0), b["coll_by_op"].get(op, 0.0)
+        d = vb - va
+        by_op[op] = max(va - d + L * d, 0.0)
+    out["coll_by_op"] = by_op
+    return out
+
+
+# Named config variants for the §Perf hillclimb — each is one
+# hypothesis→change step measured against the baseline artifact.
+VARIANTS: dict[str, dict] = {
+    "kvseq": {"shard_kv_seq": True},        # seq-sharded KV cache (decode)
+    "cap10": {"capacity_factor": 1.0},      # MoE capacity 1.25 → 1.0
+    "int8disp": {"moe_dispatch_dtype": "int8"},   # int8 EP wire format
+    "cap10int8": {"capacity_factor": 1.0,
+                  "moe_dispatch_dtype": "int8"},
+    "noremat": {"remat": False},            # trade memory for recompute
+    "bigchunk": {"attn_q_chunk": 2048, "attn_kv_chunk": 2048},
+    # decode-state buffer donation: in-place KV-cache update instead of
+    # a full cache copy per step (serving engines always donate)
+    "donate": {"__donate_state": True},
+    "kvseqdonate": {"shard_kv_seq": True, "__donate_state": True},
+}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             force: bool = False, variant: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}_{shape}_{mesh_name}" + (f"_{variant}" if variant else "")
+    out_path = ARTIFACTS / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    from repro.configs import cell_applicable, get_config
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, shape)
+    record: dict = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "variant": variant or "baseline",
+    }
+    if not ok:
+        record.update(status="SKIP", reason=why)
+        _save(out_path, record)
+        return record
+
+    overrides = VARIANTS.get(variant, {}) if variant else {}
+    t0 = time.perf_counter()
+    try:
+        mesh, cfg, cell, fn, args = _build_cell(arch, shape, multi_pod,
+                                                overrides or None)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t1
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            coll = parse_collective_bytes(compiled.as_text())
+        n_dev = mesh.size
+        tokens = (cell.tokens if cell.kind != "decode"
+                  else cell.global_batch)
+        n_active = cfg.active_params()
+        model_flops = (6 if cell.kind == "train" else 2) * n_active * tokens
+        record.update(
+            status="OK",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            devices=n_dev,
+            memory={
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "peak_bytes": int(ma.peak_memory_in_bytes),
+            },
+            cost_raw={
+                "flops_per_device": float(ca.get("flops", 0.0)),
+                "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+            },
+            collectives_raw=coll,
+            model_flops_global=float(model_flops),
+            n_params=int(cfg.n_params()),
+            n_active_params=int(n_active),
+            tokens=int(tokens),
+        )
+        # layer-differencing corrected costs (see corrected_costs())
+        t2 = time.perf_counter()
+        cc = corrected_costs(arch, shape, multi_pod, overrides or None)
+        record["cost"] = {
+            "flops_per_device": cc["flops"],
+            "bytes_per_device": cc["bytes"],
+            "collective_bytes_per_device": cc["coll"],
+            "collective_by_op_per_device": cc["coll_by_op"],
+            "method": "layer-differencing (L=1,2 + unrolled inner scans)",
+            "cost_pass_s": round(time.perf_counter() - t2, 2),
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure verbatim
+        record.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:],
+                      wall_s=round(time.perf_counter() - t0, 2))
+    _save(out_path, record)
+    return record
+
+
+def _save(path: pathlib.Path, record: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(record, indent=2))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="named config variant: " + ",".join(VARIANTS))
+    args = ap.parse_args()
+
+    from repro.configs import all_cells
+
+    if args.list:
+        for arch, shape, ok, why in all_cells():
+            print(f"{arch:24s} {shape:12s} "
+                  f"{'RUN' if ok else 'SKIP(' + why[:40] + ')'}")
+        return
+
+    todo: list[tuple[str, str, bool]] = []
+    if args.all:
+        pods = ([False] if args.single_pod_only
+                else [True] if args.multi_pod_only else [False, True])
+        for arch, shape, ok, _ in all_cells():
+            for mp in pods:
+                todo.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in todo:
+        rec = run_cell(arch, shape, mp, force=args.force,
+                       variant=args.variant)
+        mem = rec.get("memory", {})
+        print(f"{rec['status']:5s} {arch:24s} {shape:12s} "
+              f"{rec['mesh']:11s} "
+              f"peak={mem.get('peak_bytes', 0)/2**30:7.2f}GiB "
+              f"compile={rec.get('compile_s', 0):7.1f}s "
+              f"{rec.get('reason', rec.get('error', ''))[:60]}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

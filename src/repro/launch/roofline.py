@@ -1,0 +1,149 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape), single-pod mesh (256 chips of TPU v5e):
+
+  compute term    = FLOPs_per_device / 197 TFLOP/s
+  memory term     = bytes_per_device / 819 GB/s
+  collective term = collective_bytes_per_device / 50 GB/s per link
+
+(per-device numerator ≡ global/(chips·rate) under SPMD balance).
+Also reports MODEL_FLOPS/HLO_FLOPS (useful-compute ratio; catches remat
+and masked-attention waste) and the dominant term per cell.
+
+Usage: python -m repro.launch.roofline [--mesh pod16x16] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "OK" or "cost" not in rec:
+        return None
+    c = rec["cost"]
+    n_dev = rec["devices"]
+    t_compute = c["flops_per_device"] / PEAK_FLOPS
+    t_memory = c["bytes_per_device"] / HBM_BW
+    t_coll = c["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    hlo_global = c["flops_per_device"] * n_dev
+    ratio = (rec["model_flops_global"] / hlo_global
+             if hlo_global else float("nan"))
+    bound = max(terms.values())
+    # roofline fraction: useful model FLOPs per chip-second at the
+    # bottleneck-implied step time, vs peak
+    frac = (rec["model_flops_global"] / n_dev / bound) / PEAK_FLOPS \
+        if bound > 0 else 0.0
+
+    # Deployment-adjusted memory term: the CPU-backend cost model fuses
+    # far less than the TPU compiler, inflating `bytes accessed`.  The
+    # adjusted term uses the structural HBM-traffic floor — resident
+    # state streamed once per step (weights/optimizer/caches from the
+    # measured argument bytes) plus the same-bias-free collective and
+    # compute terms.  Both fractions are reported; hillclimb deltas use
+    # the prescribed (unadjusted) metric throughout.
+    arg_bytes = rec["memory"]["argument_bytes"]
+    t_memory_adj = arg_bytes / HBM_BW
+    bound_adj = max(t_compute, t_memory_adj, t_coll)
+    frac_adj = (rec["model_flops_global"] / n_dev / bound_adj) \
+        / PEAK_FLOPS if bound_adj > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant", "baseline"),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_adj_s": t_memory_adj,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_hlo_ratio": ratio,
+        "roofline_fraction": frac,
+        "roofline_fraction_adj": frac_adj,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "fits_hbm": rec["memory"]["peak_bytes"] < 16 * 2**30,
+    }
+
+
+def load_all(mesh: str = "pod16x16", variant: str = "baseline"
+             ) -> list[dict]:
+    rows = []
+    for path in sorted(ARTIFACTS.glob(f"*_{mesh}*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("variant", "baseline") != variant:
+            continue
+        if rec.get("status") == "SKIP":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skip": rec["reason"]})
+            continue
+        r = analyze_record(rec)
+        if r:
+            rows.append(r)
+        elif rec.get("status") == "FAIL":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "fail": rec.get("error", "")[:80]})
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | mem(adj) s | "
+           "collective s | dominant | model/HLO | frac | frac(adj) | "
+           "peak GiB | fits |")
+    sep = "|" + "---|" * 12
+    lines = [hdr, sep]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — "
+                         f"| SKIP | — | — | — | — | — |")
+            continue
+        if "fail" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — "
+                         f"| FAIL: {r['fail'][:40]} | — | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_memory_adj_s']:.4f} | "
+            f"{r['t_collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['model_hlo_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['roofline_fraction_adj']:.3f} | {r['peak_gib']:.2f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_all(args.mesh, args.variant)
+    if args.markdown:
+        print(render_markdown(rows))
+        return
+    for r in rows:
+        if "skip" in r:
+            print(f"SKIP {r['arch']:24s} {r['shape']:12s} {r['skip'][:50]}")
+        elif "fail" in r:
+            print(f"FAIL {r['arch']:24s} {r['shape']:12s} {r['fail']}")
+        else:
+            print(f"     {r['arch']:24s} {r['shape']:12s} "
+                  f"c={r['t_compute_s']:8.4f}s m={r['t_memory_s']:8.4f}s "
+                  f"x={r['t_collective_s']:8.4f}s dom={r['dominant']:10s} "
+                  f"frac={r['roofline_fraction']:.3f} "
+                  f"peak={r['peak_gib']:6.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+Nothing here allocates: params, optimizer state, batches, and decode
+caches are all abstract.  The modality frontends are stubs per the
+assignment — whisper gets precomputed frame embeddings, qwen2-vl gets
+M-RoPE position grids.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import transformer as tf
+from repro.models.ssm import GlsState, SlstmState
+from repro.train.optimizer import AdamWConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _bshard(mesh, batch: int):
+    """Batch-dim spec: shard over (pod, data) when divisible."""
+    axes = _batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return axes if batch % n == 0 and batch >= n else None
+
+
+def abstract_model(cfg: ModelConfig, mesh) -> tuple[Any, Any]:
+    """(params SDS tree, params NamedSharding tree)."""
+    params, specs = tf.abstract(cfg)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+    return params, shardings
+
+
+def abstract_opt_state(params_sds: Any, param_shardings: Any,
+                       ocfg: AdamWConfig, mesh):
+    mdt = jnp.bfloat16 if ocfg.moment_dtype == "bfloat16" else jnp.float32
+    m = jax.tree.map(lambda x: SDS(x.shape, mdt), params_sds)
+    state = {"m": m, "v": m, "count": SDS((), jnp.int32)}
+    shardings = {
+        "m": param_shardings, "v": param_shardings,
+        "count": NamedSharding(mesh, P()),
+    }
+    return state, shardings
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    b, s = cell.global_batch, cell.seq_len
+    bs = _bshard(mesh, b)
+    batch = {"tokens": SDS((b, s), jnp.int32),
+             "labels": SDS((b, s), jnp.int32)}
+    shard = {"tokens": NamedSharding(mesh, P(bs, None)),
+             "labels": NamedSharding(mesh, P(bs, None))}
+    if cfg.family == "audio":
+        batch["encoder_frames"] = SDS((b, cfg.encoder_seq, cfg.d_model),
+                                      cfg.jnp_dtype)
+        shard["encoder_frames"] = NamedSharding(mesh, P(bs, None, None))
+    if cfg.family == "vlm":
+        batch["positions"] = SDS((3, b, s), jnp.int32)
+        shard["positions"] = NamedSharding(mesh, P(None, bs, None))
+    return batch, shard
+
+
+def decode_state_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """Abstract decode cache matching transformer.prefill's layout."""
+    b, c = cell.global_batch, cell.seq_len
+    bs = _bshard(mesh, b)
+    l, kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    seq_spec = "model" if cfg.shard_kv_seq else None
+    state: dict = {"lengths": SDS((b,), jnp.int32)}
+    shard: dict = {"lengths": NamedSharding(mesh, P(bs))}
+    dt = cfg.jnp_dtype
+
+    if cfg.family == "ssm":
+        di = cfg.d_model * cfg.proj_factor
+        dh = di // cfg.n_heads
+        layers, lsh = [], []
+        for i in range(l):
+            if tf._is_slstm(cfg, i):
+                st = SlstmState(*(SDS((b, cfg.d_model), jnp.float32)
+                                  for _ in range(4)))
+                sh = SlstmState(*(NamedSharding(mesh, P(bs, None))
+                                  for _ in range(4)))
+            else:
+                st = GlsState(h=SDS((b, cfg.n_heads, dh, dh), jnp.float32),
+                              n=SDS((b, cfg.n_heads, dh), jnp.float32),
+                              m=SDS((b, cfg.n_heads), jnp.float32))
+                sh = GlsState(
+                    h=NamedSharding(mesh, P(bs, None, "model", None)),
+                    n=NamedSharding(mesh, P(bs, None, "model")),
+                    m=NamedSharding(mesh, P(bs, None)))
+            layers.append(st)
+            lsh.append(sh)
+        state["layers"] = layers
+        shard["layers"] = lsh
+        return state, shard
+
+    if cfg.family == "hybrid":
+        w = cfg.window
+        state["k"] = SDS((l, b, w, kh, hd), dt)
+        state["v"] = SDS((l, b, w, kh, hd), dt)
+        kv_sh = NamedSharding(mesh, P(None, bs, None, None, None))
+        shard["k"] = shard["v"] = kv_sh
+        # stacked over layers (scan) — leading L dim unsharded
+        state["mamba"] = GlsState(
+            h=SDS((l, b, cfg.n_heads, cfg.ssm_state, hd), jnp.float32),
+            n=SDS((l, b, cfg.n_heads, cfg.ssm_state), jnp.float32),
+            m=SDS((l, b, cfg.n_heads), jnp.float32))
+        shard["mamba"] = GlsState(
+            h=NamedSharding(mesh, P(None, bs, None, None, None)),
+            n=NamedSharding(mesh, P(None, bs, None, None)),
+            m=NamedSharding(mesh, P(None, bs, None)))
+        return state, shard
+
+    if cfg.is_mla:
+        r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+        state["ckv"] = SDS((l, b, c, r), dt)
+        state["krope"] = SDS((l, b, c, 1, dr), dt)
+        shard["ckv"] = NamedSharding(mesh, P(None, bs, seq_spec, None))
+        shard["krope"] = NamedSharding(mesh,
+                                       P(None, bs, seq_spec, None, None))
+    else:
+        state["k"] = SDS((l, b, c, kh, hd), dt)
+        state["v"] = SDS((l, b, c, kh, hd), dt)
+        kv_sh = NamedSharding(mesh, P(None, bs, seq_spec, None, None))
+        shard["k"] = shard["v"] = kv_sh
+    if cfg.family == "audio":
+        es = cfg.encoder_seq
+        state["xk"] = SDS((l, b, es, kh, hd), dt)
+        state["xv"] = SDS((l, b, es, kh, hd), dt)
+        shard["xk"] = shard["xv"] = NamedSharding(
+            mesh, P(None, bs, None, None, None))
+    return state, shard
+
+
+def decode_token_specs(cell: ShapeCell, mesh):
+    b = cell.global_batch
+    return (SDS((b,), jnp.int32),
+            NamedSharding(mesh, P(_bshard(mesh, b))))

@@ -1,0 +1,86 @@
+"""Training launcher.
+
+Local smoke (CPU, reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 20 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+On a real slice the same entry point builds the production mesh and the
+full config; the dry-run (launch/dryrun.py) proves those lower+compile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.models.transformer import Runtime, init_params
+from repro.train.checkpoint import AsyncCheckpointer, latest_step, \
+    restore_checkpoint
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.trainer import TrainConfig, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized same-family config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    rt = Runtime()
+    tcfg = TrainConfig(optimizer=AdamWConfig(
+        lr=args.lr, warmup_steps=5, total_steps=args.steps))
+
+    params, specs = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_state, _ = adamw_init(params, specs, tcfg.optimizer)
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed)
+    stream = SyntheticLMStream(data)
+
+    start = 0
+    hooks = []
+    if args.ckpt_dir:
+        ckpt_dir = pathlib.Path(args.ckpt_dir)
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            state = {"params": params, "opt": opt_state}
+            state, meta = restore_checkpoint(ckpt_dir, last, state)
+            params, opt_state = state["params"], state["opt"]
+            start = int(meta["next_step"])
+            print(f"resumed from step {last} → continuing at {start}")
+        ckpt = AsyncCheckpointer(ckpt_dir, every_steps=args.ckpt_every)
+        hooks.append(lambda step, p, o, m: ckpt.maybe_save(
+            step, {"params": p, "opt": o}, meta={"next_step": step + 1}))
+
+    def batches():
+        for step in range(start, args.steps):
+            b = stream.batch(step)
+            yield {k: jax.numpy.asarray(v) for k, v in b.items()}
+
+    out = train_loop(cfg, tcfg, rt, params, opt_state, batches(),
+                     hooks=hooks)
+    for m in out["history"]:
+        print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.3f}  {m['step_time_s']*1e3:.0f} ms")
+    if out["history"]:
+        first, last_m = out["history"][0], out["history"][-1]
+        print(f"loss: {first['loss']:.4f} → {last_m['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

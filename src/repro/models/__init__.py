@@ -1,0 +1,3 @@
+"""JAX model zoo: the 10 assigned LM-family architectures plus the
+paper's four edge networks (SqueezeNet1.1, MobileNetV3-Small, ResNet18,
+MobileViT-xxs)."""

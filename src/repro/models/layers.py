@@ -1,0 +1,202 @@
+"""Transformer building blocks: RoPE/M-RoPE, GQA / MLA / sliding-window
+attention (memory-efficient chunked softmax), SwiGLU/GELU FFNs.
+
+All attention paths are pure JAX (jnp + lax) so they lower for any
+backend; the Pallas kernels in ``repro.kernels`` are drop-in TPU
+replacements for the same math (validated against these in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [...] → (cos, sin) of shape [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x [B, S, H, D], positions [B, S] (llama-style half rotation)."""
+    cos, sin = rope_angles(positions, x.shape[-1], theta)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 1e6) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL [arXiv:2409.12191]).
+
+    ``positions`` [3, B, S] carries (temporal, height, width) position
+    grids; the head_dim/2 frequency slots are split across the three
+    sections.  For text-only streams all three grids are equal and M-RoPE
+    reduces to standard RoPE.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # per-frequency-slot section id → which position grid drives it
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)),
+        jnp.array(sections),
+        total_repeat_length=half)
+    pos = positions.astype(jnp.float32)          # [3, B, S]
+    pos_per_slot = pos[sec_id]                   # [half, B, S]
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * freqs   # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ----------------------------------------------------- chunked attention
+
+class AttnChunks(NamedTuple):
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q [B,Sq,KH,G,D] × k [B,Sk,KH,D] → [B,KH,G,Sq,Sk] (f32)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def flash_attention_jnp(
+    q: jax.Array,               # [B, Sq, H, D]
+    k: jax.Array,               # [B, Sk, KH, D]
+    v: jax.Array,               # [B, Sk, KH, D]
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,            # 0 = unbounded (full); >0 sliding window
+    kv_len: jax.Array | None = None,   # [B] valid cache lengths (decode)
+    chunks: AttnChunks = AttnChunks(),
+    unroll: int | bool = 1,     # unrolled for cost-model compiles only
+) -> jax.Array:
+    """Memory-efficient (online-softmax) attention, pure jnp.
+
+    Scans over KV chunks with a running (max, sum, acc) carry so the
+    [Sq, Sk] score matrix is never materialized beyond one
+    [q_chunk, kv_chunk] tile per (batch, head).  Handles GQA (H = KH·G),
+    causal masks, sliding windows, and padded KV (decode).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+
+    qc = min(chunks.q_chunk, sq)
+    kc = min(chunks.kv_chunk, sk)
+    nq = -(-sq // qc)
+    nk = -(-sk // kc)
+    q_pad = nq * qc - sq
+    k_pad = nk * kc - sk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, nq, qc, kh, g, d)
+    kg = k.reshape(b, nk, kc, kh, d)
+    vg = v.reshape(b, nk, kc, kh, d)
+
+    q_pos = (jnp.asarray(q_offset) +
+             (jnp.arange(nq * qc)).reshape(nq, qc))          # [nq, qc]
+
+    def kv_step(carry, inputs):
+        acc, m, l = carry                  # [B,nq,qc,KH,G,D], [...,KH,G]…
+        k_blk, v_blk, k_idx = inputs       # [B,kc,KH,D], [B,kc,KH,D], int
+        k_pos = k_idx * kc + jnp.arange(kc)                   # [kc]
+        s = jnp.einsum("bnqhgd,bkhd->bnhgqk", qg, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((nq, qc, kc), dtype=bool)
+        if causal:
+            mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+        if window > 0:
+            mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
+        if k_pad:
+            mask &= (k_pos < sk)[None, None, :]
+        s = jnp.where(mask[None, :, None, None, :, :], s, NEG_INF)
+        if kv_len is not None:
+            lmask = k_pos[None, :] < kv_len[:, None]          # [B, kc]
+            s = jnp.where(lmask[:, None, None, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)                           # [B,nq,KH,G,qc]
+        m_new = jnp.maximum(m, m_blk)
+        # clamp the subtraction reference so fully-masked rows produce
+        # p == 0 instead of exp(NEG_INF − NEG_INF) == 1; the previous
+        # reference gets the same clamp so corr stays consistent
+        m_sub = jnp.maximum(m_new, 0.5 * NEG_INF)
+        p = jnp.exp(s - m_sub[..., None])
+        corr = jnp.exp(jnp.maximum(m, 0.5 * NEG_INF) - m_sub)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bnhgqk,bkhd->bnqhgd", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 1, 4, 2, 3)[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, nq, qc, kh, g, d), dtype=jnp.float32)
+    m0 = jnp.full((b, nq, kh, g, qc), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, nq, kh, g, qc), dtype=jnp.float32)
+
+    kv_idx = jnp.arange(nk)
+    kg_s = jnp.moveaxis(kg, 1, 0)   # [nk, B, kc, KH, D]
+    vg_s = jnp.moveaxis(vg, 1, 0)
+    (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                  (kg_s, vg_s, kv_idx), unroll=unroll)
+
+    l_t = l.transpose(0, 1, 4, 2, 3)[..., None]               # [B,nq,qc,KH,G,1]
+    out = acc / jnp.maximum(l_t, 1e-30)
+    out = out.reshape(b, nq * qc, h, d)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention_jnp(
+    q: jax.Array,               # [B, 1, H, D]
+    k_cache: jax.Array,         # [B, S, KH, D]
+    v_cache: jax.Array,         # [B, S, KH, D]
+    lengths: jax.Array,         # [B] number of valid cache entries
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Single-token decode attention over a (padded) KV cache."""
+    b, _, h, d = q.shape
+    _, s, kh, _ = k_cache.shape
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, 1, kh, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)
+    mask = pos[None, :] < lengths[:, None]                    # [B, S]
+    if window > 0:
+        mask &= pos[None, :] >= (lengths[:, None] - window)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    dv = v_cache.shape[-1]         # may differ from q's head dim (MLA)
+    return out.reshape(b, 1, h, dv).astype(q.dtype)

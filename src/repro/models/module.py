@@ -1,0 +1,143 @@
+"""Minimal functional module system (no flax dependency).
+
+Params are nested dicts of ``jnp`` arrays.  Every initializer returns a
+``(params, specs)`` pair with identical tree structure, where ``specs``
+holds a :class:`jax.sharding.PartitionSpec` per leaf — the single source
+of truth for how the model shards on the (pod, data, model) mesh.
+
+Conventions:
+  - "model" axis: Megatron-style tensor parallelism (column-parallel up
+    projections, row-parallel down projections, vocab-sharded embeddings)
+  - "data"/"pod" axes: batch (and, for MoE, the expert-parallel axis)
+  - stacked-layer params carry a leading layer axis that is NEVER sharded
+    (scan iterates over it)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = dict
+Specs = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Initializer:
+    """Deferred parameter: shape + spec + init function."""
+
+    shape: tuple[int, ...]
+    spec: P
+    init: Callable[[jax.Array, tuple[int, ...]], jax.Array]
+
+    def materialize(self, key: jax.Array, dtype) -> jax.Array:
+        return self.init(key, self.shape).astype(dtype)
+
+
+def normal_init(stddev: float) -> Callable:
+    def fn(key, shape):
+        return jax.random.normal(key, shape, dtype=jnp.float32) * stddev
+    return fn
+
+
+def zeros_init() -> Callable:
+    def fn(key, shape):
+        return jnp.zeros(shape, dtype=jnp.float32)
+    return fn
+
+
+def ones_init() -> Callable:
+    def fn(key, shape):
+        return jnp.ones(shape, dtype=jnp.float32)
+    return fn
+
+
+def fan_in_init(fan_in: int) -> Callable:
+    return normal_init(1.0 / math.sqrt(fan_in))
+
+
+def dense(name: str, shape: tuple[int, ...], spec: P,
+          fan_in: int | None = None) -> dict[str, Initializer]:
+    fi = fan_in if fan_in is not None else shape[0]
+    return {name: Initializer(shape, spec, fan_in_init(fi))}
+
+
+def materialize(tree: Any, key: jax.Array, dtype=jnp.bfloat16
+                ) -> tuple[Params, Specs]:
+    """Turn a tree of Initializers into (params, specs)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, Initializer))
+    keys = jax.random.split(key, len(leaves))
+    params = [leaf.materialize(k, dtype) for leaf, k in zip(leaves, keys)]
+    specs = [leaf.spec for leaf in leaves]
+    return (jax.tree.unflatten(treedef, params),
+            jax.tree.unflatten(treedef, specs))
+
+
+def abstract_params(tree: Any, dtype=jnp.bfloat16) -> tuple[Any, Specs]:
+    """ShapeDtypeStruct stand-ins (for dry-runs: no allocation)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, Initializer))
+    shapes = [jax.ShapeDtypeStruct(leaf.shape, dtype) for leaf in leaves]
+    specs = [leaf.spec for leaf in leaves]
+    return (jax.tree.unflatten(treedef, shapes),
+            jax.tree.unflatten(treedef, specs))
+
+
+def stack_layer_inits(layer_fn: Callable[[], dict], n_layers: int) -> dict:
+    """Stack per-layer Initializers along a leading (unsharded) layer axis.
+
+    All layers share one structure; scan iterates the leading axis.
+    """
+    proto = layer_fn()
+
+    def stack_leaf(leaf: Initializer) -> Initializer:
+        spec = P(None, *leaf.spec)
+        base_init = leaf.init
+
+        def init(key, shape):
+            keys = jax.random.split(key, shape[0])
+            return jnp.stack([base_init(k, shape[1:]) for k in keys])
+
+        return Initializer((n_layers, *leaf.shape), spec, init)
+
+    return jax.tree.map(stack_leaf, proto,
+                        is_leaf=lambda x: isinstance(x, Initializer))
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+# ---- numerics helpers shared across models ---------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * gamma + beta
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up

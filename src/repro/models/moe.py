@@ -1,0 +1,212 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two interchangeable implementations of the same math (tests assert they
+agree):
+
+  - ``moe_ffn_dense``: per-token gather of expert weights — the oracle,
+    used for small smoke configs and as the reference in tests.
+  - ``moe_ffn_ep``: production path.  Experts are sharded over the mesh's
+    ``data`` axis (expert parallelism) and each expert's hidden dimension
+    over the ``model`` axis (tensor parallelism), so a 1T-parameter MoE
+    fits 256 chips.  Tokens are routed with a capacity-bounded
+    sort-free dispatch and two ``all_to_all`` collectives (the classic
+    GShard/DeepSpeed-MoE schedule) inside ``shard_map``; the expert FFN
+    partial products are ``psum``-reduced over ``model``.
+
+Routing: softmax → top-k → renormalize over the selected experts.
+Tokens beyond an expert's capacity are dropped (contribute zero), the
+standard capacity-factor semantics; tests cover the no-drop regime where
+dense and EP agree exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeDims:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    # EP wire format: int8 dispatch/combine quantization halves the
+    # all_to_all bytes (per-row symmetric scales ride along) — a
+    # beyond-paper optimization for collective-bound MoE training
+    dispatch_dtype: str = "native"    # native | int8
+
+
+def router_topk(x: jax.Array, w_router: jax.Array, dims: MoeDims
+                ) -> tuple[jax.Array, jax.Array]:
+    """x [T, d] → (expert_idx [T, k], combine_w [T, k])."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, dims.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_i, top_p.astype(x.dtype)
+
+
+def _expert_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                w2: jax.Array) -> jax.Array:
+    """SwiGLU expert: x [..., d] with per-expert weights [..., d, f]."""
+    gate = jnp.einsum("...ecd,...edf->...ecf", x, w1)
+    up = jnp.einsum("...ecd,...edf->...ecf", x, w3)
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("...ecf,...efd->...ecd", h, w2)
+
+
+def moe_ffn_dense(x: jax.Array, w_router: jax.Array, w1: jax.Array,
+                  w3: jax.Array, w2: jax.Array, dims: MoeDims) -> jax.Array:
+    """Oracle: gather each token's k expert weight slices. x [T, d]."""
+    t, d = x.shape
+    idx, cw = router_topk(x, w_router, dims)
+    out = jnp.zeros_like(x)
+    for j in range(dims.top_k):
+        e = idx[:, j]                              # [T]
+        w1j = w1[e]                                # [T, d, f]
+        w3j = w3[e]
+        w2j = w2[e]
+        h = jax.nn.silu(jnp.einsum("td,tdf->tf", x, w1j)) * \
+            jnp.einsum("td,tdf->tf", x, w3j)
+        out = out + cw[:, j:j + 1] * jnp.einsum("tf,tfd->td", h, w2j)
+    return out
+
+
+def _make_quantized_a2a(ep_axis: str):
+    """int8-on-the-wire all_to_all with per-row scales — BOTH directions.
+
+    Forward quantizes the dispatch payload; the custom VJP quantizes the
+    gradient payload the same way (the transpose of this all_to_all
+    pattern is itself), so the 2× wire saving holds for fwd, bwd, and
+    remat replays.  Quantization error is bounded by one step per row
+    (≤ amax/127) and, unlike a straight-through hack, the backward wire
+    format is explicit."""
+
+    def _wire(t: jax.Array) -> jax.Array:
+        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        q = jax.lax.all_to_all(q, ep_axis, split_axis=0, concat_axis=0,
+                               tiled=False)
+        scale = jax.lax.all_to_all(scale, ep_axis, split_axis=0,
+                                   concat_axis=0, tiled=False)
+        return (q.astype(jnp.float32) * scale).astype(t.dtype)
+
+    @jax.custom_vjp
+    def qa2a(t):
+        return _wire(t)
+
+    def fwd(t):
+        return _wire(t), None
+
+    def bwd(_, g):
+        return (_wire(g),)
+
+    qa2a.defvjp(fwd, bwd)
+    return qa2a
+
+
+def _dispatch_indices(idx: jax.Array, dims: MoeDims, capacity: int
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flat (token,choice) → (expert, rank-within-expert, valid)."""
+    t, k = idx.shape
+    e_flat = idx.reshape(-1)                       # [T·k]
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    # rank within each expert group among the sorted assignments
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(dims.n_experts),
+                                   side="left")
+    rank_sorted = jnp.arange(t * k) - group_start[sorted_e]
+    rank = jnp.zeros(t * k, dtype=jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    valid = rank < capacity
+    return e_flat, rank, valid
+
+
+def moe_ffn_ep(
+    x: jax.Array,              # [B, S, d] sharded P((dp axes), None, None)
+    w_router: jax.Array,       # [d, E] replicated
+    w1: jax.Array,             # [E, d, f] sharded P(ep_axis, None, tp_axis)
+    w3: jax.Array,
+    w2: jax.Array,             # [E, f, d] sharded P(ep_axis, tp_axis, None)
+    dims: MoeDims,
+    mesh: jax.sharding.Mesh,
+    *,
+    ep_axis: str = "data",
+    tp_axis: str = "model",
+    batch_axes: tuple[str, ...] = ("pod", "data"),
+) -> jax.Array:
+    """Expert-parallel MoE FFN (see module docstring for the schedule)."""
+    ep = mesh.shape[ep_axis]
+    assert dims.n_experts % ep == 0, (dims.n_experts, ep)
+    e_loc = dims.n_experts // ep
+
+    def block(xb, wr, w1b, w3b, w2b):
+        # xb: [B_loc, S, d]; w1b: [E_loc, d, f_loc]; w2b: [E_loc, f_loc, d]
+        b_loc, s, d = xb.shape
+        t_loc = b_loc * s
+        xt = xb.reshape(t_loc, d)
+        idx, cw = router_topk(xt, wr, dims)
+        capacity = max(
+            1,
+            int(dims.top_k * t_loc * dims.capacity_factor)
+            // dims.n_experts)
+        e_flat, rank, valid = _dispatch_indices(idx, dims, capacity)
+
+        # scatter tokens into the [E, C, d] dispatch buffer
+        slot = e_flat * capacity + rank
+        buf = jnp.zeros((dims.n_experts * capacity, d), xt.dtype)
+        tok_rep = jnp.repeat(jnp.arange(t_loc), dims.top_k)
+        buf = buf.at[jnp.where(valid, slot, dims.n_experts * capacity - 1)
+                     ].add(jnp.where(valid[:, None], xt[tok_rep], 0.0),
+                           mode="drop")
+        buf = buf.reshape(ep, e_loc, capacity, d)
+
+        if dims.dispatch_dtype == "int8":
+            a2a = _make_quantized_a2a(ep_axis)
+        else:
+            def a2a(t):
+                return jax.lax.all_to_all(t, ep_axis, split_axis=0,
+                                          concat_axis=0, tiled=False)
+
+        recv = a2a(buf)
+        # recv: [ep_src, E_loc, C, d] → [E_loc, ep_src·C, d]
+        recv = recv.transpose(1, 0, 2, 3).reshape(e_loc, ep * capacity, d)
+
+        # expert FFN, hidden dim TP-sharded over `tp_axis`
+        gate = jnp.einsum("ecd,edf->ecf", recv, w1b)
+        up = jnp.einsum("ecd,edf->ecf", recv, w3b)
+        h = jax.nn.silu(gate) * up
+        part = jnp.einsum("ecf,efd->ecd", h, w2b)
+        part = jax.lax.psum(part, tp_axis)
+
+        # route results back to the source shards
+        back = part.reshape(e_loc, ep, capacity, d).transpose(1, 0, 2, 3)
+        out_buf = a2a(back)
+        out_buf = out_buf.reshape(dims.n_experts * capacity, d)
+
+        # combine: gather each (token, choice) result, weight, and sum
+        gathered = jnp.where(valid[:, None], out_buf[slot], 0.0)
+        contrib = gathered.reshape(t_loc, dims.top_k, d) * cw[..., None]
+        return contrib.sum(axis=1).reshape(b_loc, s, d)
+
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        block,
+        mesh=mesh,
+        in_specs=(P(batch_axes, None, None), P(None, None),
+                  P(ep_axis, None, tp_axis), P(ep_axis, None, tp_axis),
+                  P(ep_axis, tp_axis, None)),
+        out_specs=P(batch_axes, None, None),
+        check_rep=False,
+    )(x, w_router, w1, w3, w2)

@@ -1,0 +1,208 @@
+"""Linear-recurrence sequence mixers: chunked gated linear scan (shared by
+xLSTM's mLSTM and Hymba's Mamba/SSD heads) and the sequential sLSTM.
+
+The recurrence per head (matrix state H ∈ R^{dk×dv}, normalizer N ∈ R^dk):
+
+    H_t = a_t · H_{t-1} + i_t · k_t v_tᵀ          a_t ∈ (0,1], i_t ≥ 0
+    y_t = q_t · H_t   (optionally / max(|q_t·N_t|, exp(−m_t)) for mLSTM)
+
+TPU-native chunked formulation (Mamba-2/SSD-style [arXiv:2405.21060],
+xLSTM [arXiv:2405.04517]): intra-chunk pairs go through an MXU-friendly
+[c × c] decay-masked matmul; inter-chunk state is carried by a
+``lax.scan`` whose per-step work is again matmuls.  Numerics are
+stabilized in log space with a running max ``m`` so the exponential
+input gate of mLSTM cannot overflow (every materialized exponent ≤ 0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_EPS = -1e30
+
+
+class GlsState(NamedTuple):
+    """Inter-chunk carry: true state = exp(m)·(H, N)."""
+
+    h: jax.Array    # [B, HD, Dk, Dv]
+    n: jax.Array    # [B, HD, Dk]
+    m: jax.Array    # [B, HD]
+
+
+def init_gls_state(batch: int, heads: int, dk: int, dv: int,
+                   dtype=jnp.float32) -> GlsState:
+    return GlsState(
+        h=jnp.zeros((batch, heads, dk, dv), dtype),
+        n=jnp.zeros((batch, heads, dk), dtype),
+        m=jnp.full((batch, heads), LOG_EPS, dtype),
+    )
+
+
+def gated_linear_scan(
+    q: jax.Array,          # [B, S, HD, Dk]
+    k: jax.Array,          # [B, S, HD, Dk]
+    v: jax.Array,          # [B, S, HD, Dv]
+    log_a: jax.Array,      # [B, S, HD]  log forget/decay gate (≤ 0)
+    log_i: jax.Array,      # [B, S, HD]  log input gate
+    *,
+    chunk: int = 128,
+    normalized: bool = False,   # True → mLSTM denominator semantics
+    initial: GlsState | None = None,
+    unroll: int | bool = 1,     # unrolled for cost-model compiles only
+) -> tuple[jax.Array, GlsState]:
+    """Chunk-parallel gated linear attention.  Returns (y, final_state)."""
+    b, s, hd, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))  # a=1 ⇒ log 0 ✓
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=LOG_EPS)            # i=0
+
+    f32 = jnp.float32
+    qc = q.reshape(b, nc, c, hd, dk).astype(f32)
+    kc = k.reshape(b, nc, c, hd, dk).astype(f32)
+    vc = v.reshape(b, nc, c, hd, dv).astype(f32)
+    la = jnp.cumsum(log_a.reshape(b, nc, c, hd).astype(f32), axis=2)
+    li = log_i.reshape(b, nc, c, hd).astype(f32)
+    # Convention H_t = a_t H_{t-1} + i_t k_t v_tᵀ ⇒ pair weight for t ≥ s
+    # is exp(La_t − La_s + log i_s) = exp(La_t + b_s) with b_s = li_s − La_s.
+    bgate = li - la
+
+    state0 = initial if initial is not None else init_gls_state(b, hd, dk, dv)
+
+    def chunk_step(carry: GlsState, xs):
+        h, n, m = carry
+        qb, kb, vb, lab, bb = xs      # [B,c,HD,dk], …, [B,c,HD]
+        # stabilizers (per head): μ_t = La_t + max(m, cummax_{s≤t} b_s)
+        bmax = jax.lax.cummax(bb, axis=1)                  # [B,c,HD]
+        mu = lab + jnp.maximum(m[:, None, :], bmax)
+        # inter-chunk contribution
+        w_prev = jnp.exp(m[:, None, :] + lab - mu)         # [B,c,HD]
+        y_inter = jnp.einsum("bchk,bhkv->bchv", qb * w_prev[..., None], h)
+        d_inter = jnp.einsum("bchk,bhk->bch", qb * w_prev[..., None], n)
+        # intra-chunk pairs: D[t,s] = exp(La_t + b_s − μ_t) for s ≤ t
+        expo = lab[:, :, None, :] + bb[:, None, :, :] - mu[:, :, None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri[None, :, :, None], jnp.exp(expo), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qb, kb) * dmat
+        y_intra = jnp.einsum("btsh,bshv->bthv", scores, vb)
+        d_intra = jnp.sum(scores, axis=2)                  # [B,c,HD]
+        y = y_inter + y_intra
+        den = d_inter + d_intra
+        if normalized:
+            # mLSTM denominator: num/den both carry exp(−μ); the true-unit
+            # floor exp(−m_t) = exp(−μ_t) becomes exp(−2μ) in scaled units
+            y = y / jnp.maximum(jnp.abs(den), jnp.exp(-2.0 * mu))[..., None]
+        else:
+            # SSD/Mamba path: gates are bounded (μ ≈ O(1)); undo the
+            # stabilizer scale to return true units
+            y = y * jnp.exp(mu)[..., None]
+        # state update to chunk end
+        la_end = lab[:, -1, :]                             # [B,HD]
+        m_new = la_end + jnp.maximum(m, jnp.max(bb, axis=1))
+        w_old = jnp.exp(m + la_end - m_new)                # [B,HD]
+        w_in = jnp.exp(la_end[:, None, :] + bb - m_new[:, None, :])
+        h_new = (h * w_old[..., None, None]
+                 + jnp.einsum("bshk,bshv->bhkv", kb * w_in[..., None], vb))
+        n_new = (n * w_old[..., None]
+                 + jnp.sum(kb * w_in[..., None], axis=1))
+        return GlsState(h_new, n_new, m_new), y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0)
+               for t in (qc, kc, vc, la, bgate))
+    final, ys = jax.lax.scan(chunk_step, state0, xs, unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * c, hd, dv)[:, :s]
+    return y.astype(v.dtype), final
+
+
+def gls_decode_step(
+    state: GlsState,
+    q: jax.Array,          # [B, HD, Dk]
+    k: jax.Array,
+    v: jax.Array,          # [B, HD, Dv]
+    log_a: jax.Array,      # [B, HD]
+    log_i: jax.Array,
+    *,
+    normalized: bool = False,
+) -> tuple[jax.Array, GlsState]:
+    """Single-token recurrent update (serving decode path)."""
+    h, n, m = state
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    log_a, log_i = log_a.astype(f32), log_i.astype(f32)
+    m_new = jnp.maximum(m + log_a, log_i)
+    w_old = jnp.exp(m + log_a - m_new)[..., None, None]
+    w_in = jnp.exp(log_i - m_new)[..., None, None]
+    h_new = h * w_old + (k[..., :, None] * v[..., None, :]) * w_in
+    n_new = n * w_old[..., 0] + k * w_in[..., 0]
+    y = jnp.einsum("bhk,bhkv->bhv", q, h_new)
+    if normalized:
+        den = jnp.einsum("bhk,bhk->bh", q, n_new)
+        y = y / jnp.maximum(jnp.abs(den),
+                            jnp.exp(-2.0 * m_new))[..., None]
+    else:
+        y = y * jnp.exp(m_new)[..., None]
+    return y, GlsState(h_new, n_new, m_new)
+
+
+# ------------------------------------------------------------- sLSTM
+
+class SlstmState(NamedTuple):
+    c: jax.Array   # [B, D]
+    n: jax.Array   # [B, D]
+    m: jax.Array   # [B, D]
+    h: jax.Array   # [B, D]
+
+
+def init_slstm_state(batch: int, d: int, dtype=jnp.float32) -> SlstmState:
+    z = jnp.zeros((batch, d), dtype)
+    return SlstmState(z, z, jnp.full((batch, d), LOG_EPS, dtype), z)
+
+
+def slstm_scan(
+    x_gates: jax.Array,     # [B, S, 4, D] pre-activations (z, i, f, o)
+    r_weights: jax.Array,   # [4, H, Dh, Dh] block-diag recurrent weights
+    *,
+    n_heads: int,
+    initial: SlstmState | None = None,
+) -> tuple[jax.Array, SlstmState]:
+    """sLSTM (xLSTM [arXiv:2405.04517]): exponential gating with
+    stabilizer state, sequential over time (true recurrence via the
+    block-diagonal R), lowered as a ``lax.scan``."""
+    b, s, _, d = x_gates.shape
+    dh = d // n_heads
+    state0 = initial if initial is not None else init_slstm_state(b, d)
+
+    def step(state: SlstmState, xg):
+        c, n, m, h = state
+        hh = h.reshape(b, n_heads, dh).astype(jnp.float32)
+        rec = jnp.einsum("knij,bnj->kbni",
+                         r_weights.astype(jnp.float32).reshape(
+                             4, n_heads, dh, dh),
+                         hh)                       # [4, B, nH, Dh]
+        rec = rec.reshape(4, b, d)
+        z_pre = xg[:, 0].astype(jnp.float32) + rec[0]
+        i_pre = xg[:, 1].astype(jnp.float32) + rec[1]
+        f_pre = xg[:, 2].astype(jnp.float32) + rec[2]
+        o_pre = xg[:, 3].astype(jnp.float32) + rec[3]
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        log_f = -jax.nn.softplus(-f_pre)           # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(i_pre - m_new) * z
+        n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(i_pre - m_new)
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return SlstmState(c_new, n_new, m_new, h_new), h_new
+
+    xs = jnp.moveaxis(x_gates, 1, 0)               # [S, B, 4, D]
+    final, hs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x_gates.dtype), final

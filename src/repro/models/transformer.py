@@ -1,0 +1,951 @@
+"""Unified LM zoo: dense / MoE / MLA / VLM (scanned layers), xLSTM and
+Hymba hybrids (heterogeneous, unrolled), and the Whisper encoder-decoder.
+
+Three execution paths per architecture:
+  - ``forward_train``: full-sequence causal forward (no cache), feeding
+    the chunked cross-entropy head (never materializes [B, S, V]).
+  - ``prefill``: full-sequence forward that also emits the decode state
+    (KV cache / recurrent states / cross-attention cache).
+  - ``decode_step``: one token through the cached state (serving).
+
+Distribution: weights carry PartitionSpecs (module.py); activations get
+light sharding constraints at block boundaries and GSPMD propagates the
+rest.  MoE layers use the shard_map expert-parallel path when a mesh is
+available (repro.models.moe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    AttnChunks,
+    apply_mrope,
+    apply_rope,
+    decode_attention_jnp,
+    flash_attention_jnp,
+)
+from repro.models.module import (
+    Initializer,
+    dense,
+    layer_norm,
+    materialize,
+    abstract_params,
+    normal_init,
+    ones_init,
+    rms_norm,
+    stack_layer_inits,
+    swiglu,
+    zeros_init,
+)
+
+BATCH_AXES = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution context: mesh presence decides EP vs dense MoE and
+    whether sharding constraints are emitted."""
+
+    mesh: Any = None
+
+    @property
+    def distributed(self) -> bool:
+        return self.mesh is not None and self.mesh.size > 1
+
+
+def constrain(x: jax.Array, rt: Runtime, *spec) -> jax.Array:
+    if not rt.distributed:
+        return x
+    # filter the spec down to axes that exist on the current mesh
+    # (single-pod meshes have no "pod" axis)
+    axes = set(rt.mesh.shape)
+
+    def filt(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in axes else None
+        kept = tuple(a for a in entry if a in axes)
+        return kept if kept else None
+
+    return jax.lax.with_sharding_constraint(
+        x, P(*(filt(e) for e in spec)))
+
+
+# ======================================================================
+# parameter initializers
+# ======================================================================
+
+def _norm_params(cfg: ModelConfig, name: str) -> dict:
+    if cfg.norm == "layernorm":
+        return {f"{name}_g": Initializer((cfg.d_model,), P(None), ones_init()),
+                f"{name}_b": Initializer((cfg.d_model,), P(None), zeros_init())}
+    return {f"{name}_g": Initializer((cfg.d_model,), P(None), ones_init())}
+
+
+def _attn_params(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    kv_spec = P(None, "model") if (kh * hd) % 16 == 0 else P(None, None)
+    pre = "x" if cross else ""
+    p = {}
+    if cfg.is_mla and not cross:
+        r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+        p.update(dense(f"{pre}wq", (d, h * (hd + dr)), P(None, "model")))
+        p.update(dense(f"{pre}wdkv", (d, r + dr), P(None, None)))
+        p.update(dense(f"{pre}wuk", (r, kh * hd), P(None, "model"), fan_in=r))
+        p.update(dense(f"{pre}wuv", (r, kh * hd), P(None, "model"), fan_in=r))
+    else:
+        p.update(dense(f"{pre}wq", (d, h * hd), P(None, "model")))
+        p.update(dense(f"{pre}wk", (d, kh * hd), kv_spec))
+        p.update(dense(f"{pre}wv", (d, kh * hd), kv_spec))
+        if cfg.qkv_bias:
+            p[f"{pre}bq"] = Initializer((h * hd,), P("model"), zeros_init())
+            p[f"{pre}bk"] = Initializer((kh * hd,), P(None), zeros_init())
+            p[f"{pre}bv"] = Initializer((kh * hd,), P(None), zeros_init())
+    p.update(dense(f"{pre}wo", (h * hd, d), P("model", None), fan_in=h * hd))
+    return p
+
+
+def _ffn_params(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "swiglu":
+        return {**dense("w1", (d, f), P(None, "model")),
+                **dense("w3", (d, f), P(None, "model")),
+                **dense("w2", (f, d), P("model", None), fan_in=f)}
+    return {**dense("w1", (d, f), P(None, "model")),
+            **dense("w2", (f, d), P("model", None), fan_in=f)}
+
+
+def _moe_params(cfg: ModelConfig) -> dict:
+    d, fe, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    p = {"router": Initializer((d, e), P(None, None), normal_init(0.02))}
+    p.update(dense("ew1", (e, d, fe), P("data", None, "model"), fan_in=d))
+    p.update(dense("ew3", (e, d, fe), P("data", None, "model"), fan_in=d))
+    p.update(dense("ew2", (e, fe, d), P("data", "model", None), fan_in=fe))
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        p.update(dense("sw1", (d, fs), P(None, "model")))
+        p.update(dense("sw3", (d, fs), P(None, "model")))
+        p.update(dense("sw2", (fs, d), P("model", None), fan_in=fs))
+    return p
+
+
+def _mamba_params(cfg: ModelConfig) -> dict:
+    d, h, hd, ss = cfg.d_model, cfg.n_heads, cfg.hd, cfg.ssm_state
+    bc_spec = P(None, "model") if (h * ss) % 16 == 0 else P(None, None)
+    return {
+        **dense("mB", (d, h * ss), bc_spec),
+        **dense("mC", (d, h * ss), bc_spec),
+        **dense("mX", (d, h * hd), P(None, "model")),
+        **dense("mdt", (d, h), P(None, None)),
+        "ma_log": Initializer((h,), P(None), zeros_init()),
+        "mdt_bias": Initializer((h,), P(None), zeros_init()),
+        "mnorm_g": Initializer((h * hd,), P(None), ones_init()),
+        "anorm_g": Initializer((h * hd,), P(None), ones_init()),
+    }
+
+
+def init_decoder_layer(cfg: ModelConfig) -> dict:
+    p = {**_norm_params(cfg, "ln1"), **_attn_params(cfg),
+         **_norm_params(cfg, "ln2")}
+    if cfg.family == "audio":       # decoder layer: + cross attention
+        p.update(_norm_params(cfg, "lnx"))
+        p.update(_attn_params(cfg, cross=True))
+    if cfg.is_moe:
+        p.update(_moe_params(cfg))
+    elif cfg.d_ff:
+        p.update(_ffn_params(cfg))
+    if cfg.family == "hybrid":
+        p.update(_mamba_params(cfg))
+    return p
+
+
+def init_encoder_layer(cfg: ModelConfig) -> dict:
+    return {**_norm_params(cfg, "ln1"), **_attn_params(cfg),
+            **_norm_params(cfg, "ln2"), **_ffn_params(cfg)}
+
+
+def init_mlstm_layer(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = d * cfg.proj_factor
+    return {
+        **_norm_params(cfg, "ln1"),
+        **dense("w_up", (d, di), P(None, "model")),
+        **dense("w_gate", (d, di), P(None, "model")),
+        **dense("wq", (di, di), P(None, "model"), fan_in=di),
+        **dense("wk", (di, di), P(None, "model"), fan_in=di),
+        **dense("wv", (di, di), P(None, "model"), fan_in=di),
+        **dense("wi", (di, cfg.n_heads), P(None, None), fan_in=di),
+        **dense("wf", (di, cfg.n_heads), P(None, None), fan_in=di),
+        "hnorm_g": Initializer((di,), P(None), ones_init()),
+        **dense("w_down", (di, d), P("model", None), fan_in=di),
+    }
+
+
+def init_slstm_layer(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    return {
+        **_norm_params(cfg, "ln1"),
+        **dense("w_gates", (d, 4 * d), P(None, "model")),
+        "r_gates": Initializer((4, h, dh, dh), P(None, None, None, None),
+                               normal_init(0.05)),
+        "hnorm_g": Initializer((d,), P(None), ones_init()),
+        **dense("w_out", (d, d), P(None, "model")),
+        **dense("w_down", (d, d), P("model", None)),
+    }
+
+
+def init_lm(cfg: ModelConfig) -> dict:
+    vp, d = cfg.padded_vocab, cfg.d_model
+    tree: dict = {
+        "embed": Initializer((vp, d), P("model", None), normal_init(0.02)),
+        **_norm_params(cfg, "lnf"),
+    }
+    if not cfg.tie_embeddings:
+        tree.update(dense("head", (d, vp), P(None, "model")))
+    if cfg.family == "ssm":
+        layers = []
+        for i in range(cfg.n_layers):
+            if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+                layers.append(init_slstm_layer(cfg))
+            else:
+                layers.append(init_mlstm_layer(cfg))
+        tree["layers"] = layers
+    elif not cfg.scan_layers:
+        tree["layers"] = [init_decoder_layer(cfg)
+                          for _ in range(cfg.n_layers)]
+    else:
+        tree["layers"] = stack_layer_inits(
+            lambda: init_decoder_layer(cfg), cfg.n_layers)
+    if cfg.family == "audio":
+        tree["enc_layers"] = stack_layer_inits(
+            lambda: init_encoder_layer(cfg), cfg.n_encoder_layers)
+        tree.update(_norm_params(cfg, "enc_lnf"))
+    return tree
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return materialize(init_lm(cfg), key, cfg.jnp_dtype)
+
+
+def abstract(cfg: ModelConfig):
+    return abstract_params(init_lm(cfg), cfg.jnp_dtype)
+
+
+# ======================================================================
+# block applications
+# ======================================================================
+
+def _norm(p: dict, name: str, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p[f"{name}_g"], p[f"{name}_b"])
+    return rms_norm(x, p[f"{name}_g"])
+
+
+def _rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.family == "audio":
+        return x                     # whisper: sinusoidal at embedding
+    if cfg.mrope_sections:
+        return apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _qkv(p: dict, cfg: ModelConfig, x: jax.Array, pre: str = ""
+         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p[f"{pre}wq"])
+    k = jnp.einsum("bsd,de->bse", x, p[f"{pre}wk"])
+    v = jnp.einsum("bsd,de->bse", x, p[f"{pre}wv"])
+    if cfg.qkv_bias:
+        q = q + p[f"{pre}bq"]
+        k = k + p[f"{pre}bk"]
+        v = v + p[f"{pre}bv"]
+    return (q.reshape(b, s, h, hd), k.reshape(b, s, kh, hd),
+            v.reshape(b, s, kh, hd))
+
+
+def _mla_qkv(p: dict, cfg: ModelConfig, x: jax.Array,
+             positions: jax.Array):
+    """MLA (DeepSeek-V2): latent-compressed KV + decoupled RoPE head.
+
+    Returns (q_nope, q_rope, c_kv, k_rope) — callers assemble either the
+    full-sequence attention (prefill/train) or the absorbed decode form.
+    """
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd + dr)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = _rope(cfg, q_rope, positions)
+    ckv_full = jnp.einsum("bsd,de->bse", x, p["wdkv"])
+    c_kv, k_rope = ckv_full[..., :r], ckv_full[..., r:]
+    k_rope = _rope(cfg, k_rope[:, :, None, :], positions)  # single head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(p: dict, cfg: ModelConfig, c_kv: jax.Array):
+    b, s, _ = c_kv.shape
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    k = jnp.einsum("bsr,re->bse", c_kv, p["wuk"]).reshape(b, s, kh, hd)
+    v = jnp.einsum("bsr,re->bse", c_kv, p["wuv"]).reshape(b, s, kh, hd)
+    return k, v
+
+
+def _attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, rt: Runtime, *,
+                    causal: bool = True, window: int = 0,
+                    return_kv: bool = False):
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    chunks = AttnChunks(cfg.attn_q_chunk, cfg.attn_kv_chunk)
+    if cfg.is_mla:
+        q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+        k_nope, v = _mla_expand_kv(p, cfg, c_kv)
+        # fold the decoupled rope head into an extended head dim; the
+        # 1/sqrt(hd + dr) softmax scale of the concatenated head is
+        # exactly MLA's definition
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_rope, (b, s, cfg.n_kv_heads, cfg.rope_head_dim))], axis=-1)
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                            (0, cfg.rope_head_dim)))
+        out = flash_attention_jnp(q, k, v_pad, causal=causal,
+                                  window=window, chunks=chunks,
+                                  unroll=cfg.inner_unroll)
+        out = out[..., :cfg.hd]
+        kv = (c_kv, k_rope)
+    else:
+        q, k, v = _qkv(p, cfg, x)
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+        out = flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                  chunks=chunks, unroll=cfg.inner_unroll)
+        kv = (k, v)
+    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, s, -1), p["wo"])
+    if return_kv:
+        return out, kv
+    return out
+
+
+def _attention_cross(p: dict, cfg: ModelConfig, x: jax.Array,
+                     k: jax.Array, v: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["xwq"]).reshape(b, s, h, hd)
+    out = flash_attention_jnp(
+        q, k, v, causal=False,
+        chunks=AttnChunks(cfg.attn_q_chunk, cfg.attn_kv_chunk),
+        unroll=cfg.inner_unroll)
+    return jnp.einsum("bsf,fd->bsd", out.reshape(b, s, -1), p["xwo"])
+
+
+def _cross_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
+    b, s, _ = enc_out.shape
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    k = jnp.einsum("bsd,de->bse", enc_out, p["xwk"]).reshape(b, s, kh, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out, p["xwv"]).reshape(b, s, kh, hd)
+    return k, v
+
+
+def _ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = swiglu(jnp.einsum("bsd,df->bsf", x, p["w1"]),
+                   jnp.einsum("bsd,df->bsf", x, p["w3"]))
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+def _moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array, rt: Runtime
+             ) -> jax.Array:
+    b, s, d = x.shape
+    dims = moe_lib.MoeDims(cfg.n_experts, cfg.moe_top_k, d,
+                           cfg.d_ff_expert, cfg.capacity_factor,
+                           dispatch_dtype=cfg.moe_dispatch_dtype)
+    use_ep = (cfg.moe_impl == "ep"
+              or (cfg.moe_impl == "auto" and rt.distributed
+                  and "data" in rt.mesh.shape
+                  and cfg.n_experts % rt.mesh.shape["data"] == 0))
+    if use_ep:
+        baxes = tuple(a for a in BATCH_AXES if a in rt.mesh.shape)
+        out = moe_lib.moe_ffn_ep(x, p["router"], p["ew1"], p["ew3"],
+                                 p["ew2"], dims, rt.mesh,
+                                 batch_axes=baxes)
+    else:
+        out = moe_lib.moe_ffn_dense(
+            x.reshape(b * s, d), p["router"], p["ew1"], p["ew3"],
+            p["ew2"], dims).reshape(b, s, d)
+    if cfg.n_shared_experts:
+        h = swiglu(jnp.einsum("bsd,df->bsf", x, p["sw1"]),
+                   jnp.einsum("bsd,df->bsf", x, p["sw3"]))
+        out = out + jnp.einsum("bsf,fd->bsd", h, p["sw2"])
+    return out
+
+
+def _mamba_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+               state: ssm_lib.GlsState | None = None, *,
+               decode: bool = False):
+    """Mamba-2/SSD head mix (hybrid): returns (y [B,S,H·hd], new_state)."""
+    b = x.shape[0]
+    h, hd, ss = cfg.n_heads, cfg.hd, cfg.ssm_state
+    s = x.shape[1] if not decode else 1
+    xB = jnp.einsum("bsd,de->bse", x, p["mB"]).reshape(b, s, h, ss)
+    xC = jnp.einsum("bsd,de->bse", x, p["mC"]).reshape(b, s, h, ss)
+    xV = jnp.einsum("bsd,de->bse", x, p["mX"]).reshape(b, s, h, hd)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["mdt"]) + p["mdt_bias"])
+    a = -jnp.exp(p["ma_log"].astype(jnp.float32))          # [H] (negative)
+    log_a = (dt.astype(jnp.float32) * a)                   # [B,S,H] ≤ 0
+    log_i = jnp.log(jnp.maximum(dt.astype(jnp.float32), 1e-9))
+    if decode:
+        y, new_state = ssm_lib.gls_decode_step(
+            state, xC[:, 0], xB[:, 0], xV[:, 0],
+            log_a[:, 0], log_i[:, 0], normalized=False)
+        y = y[:, None].astype(x.dtype)                                     # [B,1,H,hd]
+    else:
+        y, new_state = ssm_lib.gated_linear_scan(
+            xC, xB, xV, log_a, log_i, chunk=cfg.gls_chunk,
+            normalized=False, initial=state, unroll=cfg.inner_unroll)
+    y = y.reshape(b, s, h * hd)
+    return y, new_state
+
+
+def decoder_block(p: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, rt: Runtime, *,
+                  enc_out: jax.Array | None = None,
+                  return_kv: bool = False,
+                  mamba_state=None):
+    """One decoder block, full-sequence mode.  Returns (x, extras)."""
+    x = constrain(x, rt, BATCH_AXES, None, None)
+    h = _norm(p, "ln1", x, cfg)
+    window = cfg.window if cfg.family == "hybrid" else 0
+    attn = _attention_full(p, cfg, h, positions, rt, window=window,
+                           return_kv=return_kv)
+    kv = None
+    if return_kv:
+        attn, kv = attn
+    extras: dict = {"kv": kv}
+    if cfg.family == "hybrid":
+        # Hymba: parallel attention + mamba heads in the same block,
+        # per-branch RMS normalization then mean fusion.  H·hd == d_model
+        # for this family, so both branches live in residual space (the
+        # shared output projection is folded into wo / mX).
+        my, mstate = _mamba_mix(p, cfg, h, mamba_state)
+        extras["mamba_state"] = mstate
+        fused = 0.5 * (rms_norm(attn, p["anorm_g"])
+                       + rms_norm(my, p["mnorm_g"]))
+        x = x + fused
+    else:
+        x = x + attn
+    if cfg.family == "audio" and enc_out is not None:
+        hx = _norm(p, "lnx", x, cfg)
+        xk, xv = _cross_kv(p, cfg, enc_out)
+        x = x + _attention_cross(p, cfg, hx, xk, xv)
+        extras["cross_kv"] = (xk, xv)
+    if cfg.is_moe:
+        h2 = _norm(p, "ln2", x, cfg)
+        x = x + _moe_ffn(p, cfg, h2, rt)
+    elif cfg.d_ff:
+        h2 = _norm(p, "ln2", x, cfg)
+        x = x + _ffn(p, cfg, h2)
+    return x, extras
+
+
+def mlstm_block(p: dict, cfg: ModelConfig, x: jax.Array, rt: Runtime,
+                state: ssm_lib.GlsState | None = None, *,
+                decode: bool = False):
+    """xLSTM mLSTM block: up-proj → heads → gated linear scan (matrix
+    memory, exponential gating) → head-norm → output gate → down-proj."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    di = cfg.d_model * cfg.proj_factor
+    dh = di // h
+    hidden = _norm(p, "ln1", x, cfg)
+    u = jnp.einsum("bsd,de->bse", hidden, p["w_up"])
+    g = jnp.einsum("bsd,de->bse", hidden, p["w_gate"])
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"]).reshape(b, s, h, dh) \
+        / jnp.sqrt(jnp.array(dh, dtype=x.dtype))
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"]).reshape(b, s, h, dh)
+    log_i = jnp.einsum("bse,eh->bsh", u, p["wi"]).astype(jnp.float32)
+    f_pre = jnp.einsum("bse,eh->bsh", u, p["wf"]).astype(jnp.float32)
+    log_f = -jax.nn.softplus(-f_pre)          # log sigmoid
+    if decode:
+        y, new_state = ssm_lib.gls_decode_step(
+            state, q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], log_i[:, 0],
+            normalized=True)
+        y = y[:, None].astype(x.dtype)
+    else:
+        y, new_state = ssm_lib.gated_linear_scan(
+            q, k, v, log_f, log_i, chunk=cfg.gls_chunk,
+            normalized=True, initial=state, unroll=cfg.inner_unroll)
+    y = rms_norm(y.reshape(b, s, di), p["hnorm_g"])
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return x + out, new_state
+
+
+def slstm_block(p: dict, cfg: ModelConfig, x: jax.Array, rt: Runtime,
+                state: ssm_lib.SlstmState | None = None, *,
+                decode: bool = False):
+    """xLSTM sLSTM block: true recurrence (block-diagonal R), scan over
+    time; exponential gating with stabilizer."""
+    b, s, d = x.shape
+    hidden = _norm(p, "ln1", x, cfg)
+    gates = jnp.einsum("bsd,de->bse", hidden,
+                       p["w_gates"]).reshape(b, s, 4, d)
+    y, new_state = ssm_lib.slstm_scan(gates, p["r_gates"],
+                                      n_heads=cfg.n_heads, initial=state)
+    y = rms_norm(y, p["hnorm_g"])
+    y = jnp.einsum("bsd,de->bse", y, p["w_out"])
+    out = jnp.einsum("bse,ed->bsd", jax.nn.gelu(y), p["w_down"])
+    return x + out, new_state
+
+
+# ======================================================================
+# embedding / head
+# ======================================================================
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 rt: Runtime) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x.astype(cfg.jnp_dtype), rt, BATCH_AXES, None, None)
+
+
+def _sinusoidal(seq: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2).astype(jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+def lm_head(params: dict, cfg: ModelConfig, x: jax.Array,
+            rt: Runtime) -> jax.Array:
+    """Full logits — only for small sequences (decode / smoke tests)."""
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", _norm(params, "lnf", x, cfg), w)
+    return constrain(logits, rt, BATCH_AXES, None, "model")
+
+
+def chunked_softmax_xent(params: dict, cfg: ModelConfig, x: jax.Array,
+                         labels: jax.Array, rt: Runtime,
+                         chunk: int = 1024) -> jax.Array:
+    """Mean next-token CE without materializing [B, S, V]: scan over
+    sequence chunks; logits stay vocab-sharded on the model axis."""
+    b, s, d = x.shape
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    x = _norm(params, "lnf", x, cfg)
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = jnp.moveaxis(x.reshape(b, nc, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+
+    def step(carry, inp):
+        xb, lb = inp                                    # [B,c,d], [B,c]
+        logits = jnp.einsum("bsd,dv->bsv", xb, w).astype(jnp.float32)
+        logits = constrain(logits, rt, BATCH_AXES, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        valid = lb >= 0
+        nll = jnp.where(valid, lse - picked, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        step, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (xc, lc),
+        unroll=cfg.inner_unroll)
+    return total / jnp.maximum(count, 1)
+
+
+# ======================================================================
+# public entry points
+# ======================================================================
+
+def _positions_for(cfg: ModelConfig, tokens: jax.Array,
+                   positions: jax.Array | None):
+    if positions is not None:
+        return positions
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[None], (3, b, s))    # text-only grids
+    return pos
+
+
+def _encode_audio(params: dict, cfg: ModelConfig, frames: jax.Array,
+                  rt: Runtime) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B, S_enc, d]."""
+    x = frames.astype(cfg.jnp_dtype)
+    x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                           (x.shape[0], x.shape[1]))
+
+    def body(carry, lp):
+        h = carry
+        h = constrain(h, rt, BATCH_AXES, None, None)
+        a = _attention_full(lp, cfg, _norm(lp, "ln1", h, cfg), pos, rt,
+                            causal=False)
+        h = h + a
+        h = h + _ffn(lp, cfg, _norm(lp, "ln2", h, cfg))
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return _norm(params, "enc_lnf", x, cfg)
+
+
+def forward_train(params: dict, cfg: ModelConfig, batch: dict,
+                  rt: Runtime) -> jax.Array:
+    """Full-sequence forward → mean CE loss (the train-step objective)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    pos = _positions_for(cfg, tokens, batch.get("positions"))
+    x = embed_tokens(params, cfg, tokens, rt)
+    if cfg.family == "audio":
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+        enc_out = _encode_audio(params, cfg, batch["encoder_frames"], rt)
+    else:
+        enc_out = None
+
+    if cfg.family == "ssm":
+        for i, lp in enumerate(params["layers"]):
+            base = slstm_block if _is_slstm(cfg, i) else mlstm_block
+
+            def blk(h, lp, base=base):
+                y, _ = base(lp, cfg, h, rt)
+                return y
+
+            fn = jax.checkpoint(blk) if cfg.remat else blk
+            x = fn(x, lp)
+    elif not cfg.scan_layers:
+        def blk(h, lp):
+            y, _ = decoder_block(lp, cfg, h, pos, rt, enc_out=enc_out)
+            return y
+
+        fn = jax.checkpoint(blk) if cfg.remat else blk
+        for lp in params["layers"]:
+            x = fn(x, lp)
+    else:
+        def body(carry, lp):
+            h, _ = decoder_block(lp, cfg, carry, pos, rt, enc_out=enc_out)
+            return h, None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+    return chunked_softmax_xent(params, cfg, x, labels, rt)
+
+
+def _is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return (cfg.family == "ssm" and cfg.slstm_every > 0
+            and (i + 1) % cfg.slstm_every == 0)
+
+
+# ======================================================================
+# prefill / decode (serving)
+# ======================================================================
+
+def _ring_from_prefix(k: jax.Array, window: int, s: int) -> jax.Array:
+    """Pack the last `window` positions of a [B,S,KH,D] prefix into the
+    ring-buffer layout where absolute position t lives at slot t % W."""
+    b, _, kh, d = k.shape
+    w = window
+    take = min(s, w)
+    tail = k[:, s - take:s]                       # [B, take, KH, D]
+    slots = (jnp.arange(s - take, s)) % w         # [take]
+    ring = jnp.zeros((b, w, kh, d), k.dtype)
+    return ring.at[:, slots].set(tail)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, rt: Runtime,
+            cache_len: int) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also builds the decode state.
+
+    Returns (last-position logits [B, V], state).  ``cache_len`` sizes the
+    KV cache (≥ prompt length).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    pos = _positions_for(cfg, tokens, batch.get("positions"))
+    x = embed_tokens(params, cfg, tokens, rt)
+    state: dict = {"lengths": jnp.full((b,), s, jnp.int32)}
+
+    if cfg.family == "audio":
+        x = x + _sinusoidal(s, cfg.d_model, x.dtype)[None]
+        enc_out = _encode_audio(params, cfg, batch["encoder_frames"], rt)
+    else:
+        enc_out = None
+
+    def pad_cache(t: jax.Array) -> jax.Array:     # [B,S,KH,D] → [B,C,KH,D]
+        return jnp.pad(t, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+
+    if cfg.family == "ssm":
+        states = []
+        for i, lp in enumerate(params["layers"]):
+            base = slstm_block if _is_slstm(cfg, i) else mlstm_block
+            x, st = base(lp, cfg, x, rt)
+            states.append(st)
+        state["layers"] = states
+    elif cfg.family == "hybrid":
+        def hybrid_layer(h, lp):
+            h, extras = decoder_block(lp, cfg, h, pos, rt,
+                                      return_kv=True)
+            k, v = extras["kv"]
+            return h, (_ring_from_prefix(k, cfg.window, s),
+                       _ring_from_prefix(v, cfg.window, s),
+                       extras["mamba_state"])
+
+        if cfg.scan_layers:
+            def body(carry, lp):
+                return hybrid_layer(carry, lp)
+            x, (ks, vs, mst) = jax.lax.scan(body, x, params["layers"])
+            state["k"], state["v"], state["mamba"] = ks, vs, mst
+        else:
+            ks, vs, mstates = [], [], []
+            for lp in params["layers"]:
+                x, (k, v, mstate) = hybrid_layer(x, lp)
+                ks.append(k); vs.append(v); mstates.append(mstate)
+            state["k"] = jnp.stack(ks)
+            state["v"] = jnp.stack(vs)
+            state["mamba"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *mstates)
+    elif cfg.scan_layers:
+        def body(carry, lp):
+            h, extras = decoder_block(lp, cfg, carry, pos, rt,
+                                      enc_out=enc_out, return_kv=True)
+            return h, extras
+        x, extras = jax.lax.scan(body, x, params["layers"])
+        if cfg.is_mla:
+            ckv, krope = extras["kv"]             # [L,B,S,r], [L,B,S,1,dr]
+            state["ckv"] = jnp.pad(
+                ckv, ((0, 0), (0, 0), (0, cache_len - s), (0, 0)))
+            state["krope"] = jnp.pad(
+                krope, ((0, 0), (0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+        else:
+            k, v = extras["kv"]                   # [L,B,S,KH,D]
+            state["k"] = jax.vmap(pad_cache)(k)
+            state["v"] = jax.vmap(pad_cache)(v)
+        if cfg.family == "audio":
+            xk, xv = extras["cross_kv"]
+            state["xk"], state["xv"] = xk, xv     # [L,B,Senc,KH,D]
+    else:
+        ks, vs, xks, xvs = [], [], [], []
+        for lp in params["layers"]:
+            x, extras = decoder_block(lp, cfg, x, pos, rt,
+                                      enc_out=enc_out, return_kv=True)
+            k, v = extras["kv"]
+            if cfg.is_mla:                 # (c_kv [B,S,r], k_rope)
+                ks.append(jnp.pad(k, ((0, 0), (0, cache_len - s), (0, 0))))
+                vs.append(jnp.pad(
+                    v, ((0, 0), (0, cache_len - s), (0, 0), (0, 0))))
+            else:
+                ks.append(pad_cache(k))
+                vs.append(pad_cache(v))
+            if cfg.family == "audio":
+                xk, xv = extras["cross_kv"]
+                xks.append(xk)
+                xvs.append(xv)
+        if cfg.is_mla:
+            state["ckv"] = jnp.stack(ks)
+            state["krope"] = jnp.stack(vs)
+        else:
+            state["k"] = jnp.stack(ks)
+            state["v"] = jnp.stack(vs)
+        if cfg.family == "audio":
+            state["xk"] = jnp.stack(xks)
+            state["xv"] = jnp.stack(xvs)
+
+    logits = lm_head(params, cfg, x[:, -1:], rt)[:, 0]
+    return logits, state
+
+
+def _decode_attn_dense(p, cfg, h, state_k, state_v, lengths, rt):
+    """One-token attention against the cache; returns (out, k_new, v_new)."""
+    b = h.shape[0]
+    positions = lengths[:, None]                   # [B,1]
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    q, k, v = _qkv(p, cfg, h)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    ar = jnp.arange(b)
+    if cfg.family == "hybrid":                     # ring buffer
+        slot = lengths % cfg.window
+        ck = state_k.at[ar, slot].set(k[:, 0])
+        cv = state_v.at[ar, slot].set(v[:, 0])
+        valid = jnp.minimum(lengths + 1, cfg.window)
+        out = decode_attention_jnp(q, ck, cv, valid)
+    else:
+        ck = state_k.at[ar, lengths].set(k[:, 0])
+        cv = state_v.at[ar, lengths].set(v[:, 0])
+        out = decode_attention_jnp(q, ck, cv, lengths + 1)
+    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, 1, -1), p["wo"])
+    return out, ck, cv
+
+
+def _decode_attn_mla(p, cfg, h, ckv_cache, krope_cache, lengths):
+    """Absorbed MLA decode: scores in latent space, no K/V expansion."""
+    b = h.shape[0]
+    r, dr, hd, nh = (cfg.kv_lora_rank, cfg.rope_head_dim, cfg.hd,
+                     cfg.n_heads)
+    positions = lengths[:, None]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, h, positions)
+    ar = jnp.arange(b)
+    ckv_cache = ckv_cache.at[ar, lengths].set(c_kv[:, 0])
+    krope_cache = krope_cache.at[ar, lengths].set(k_rope[:, 0])
+    # absorb W_uk into q:  q_eff[h] = q_nope[h] @ W_uk[:, h//g, :]^T
+    # (GQA-grouped MLA repeats each latent head across its query group)
+    g = nh // cfg.n_kv_heads
+    wuk = jnp.repeat(p["wuk"].reshape(r, cfg.n_kv_heads, hd), g, axis=1)
+    q_eff = jnp.einsum("bshe,rhe->bshr", q_nope, wuk)
+    q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)   # [B,1,H,r+dr]
+    k_cat = jnp.concatenate(
+        [ckv_cache[:, :, None, :],
+         krope_cache], axis=-1)                         # [B,C,1,r+dr]
+    # rescale: decode_attention divides by sqrt(r+dr); MLA wants hd+dr
+    q_cat = q_cat * jnp.sqrt(jnp.array((r + dr) / (hd + dr), q_cat.dtype))
+    out_lat = decode_attention_jnp(q_cat, k_cat, ckv_cache[:, :, None, :],
+                                   lengths + 1)         # [B,1,H,r]
+    wuv = jnp.repeat(p["wuv"].reshape(r, cfg.n_kv_heads, hd), g, axis=1)
+    out = jnp.einsum("bshr,rhe->bshe", out_lat, wuv)
+    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, 1, -1), p["wo"])
+    return out, ckv_cache, krope_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: dict,
+                tokens: jax.Array, rt: Runtime) -> tuple[jax.Array, dict]:
+    """One serving step: tokens [B] → (logits [B, V], updated state)."""
+    lengths = state["lengths"]
+    b = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens[:, None], rt)
+    new_state = dict(state)
+
+    if cfg.family == "audio":
+        x = x + jnp.take(_sinusoidal(state["k"].shape[2] + 1, cfg.d_model,
+                                     x.dtype), lengths, axis=0)[:, None]
+
+    if cfg.family == "ssm":
+        new_layers = []
+        for i, (lp, st) in enumerate(zip(params["layers"],
+                                         state["layers"])):
+            base = slstm_block if _is_slstm(cfg, i) else mlstm_block
+            x, st2 = base(lp, cfg, x, rt, state=st, decode=True)
+            new_layers.append(st2)
+        new_state["layers"] = new_layers
+    elif cfg.family == "hybrid":
+        def hybrid_decode_layer(h0, lp, ck, cv, mst):
+            h = _norm(lp, "ln1", h0, cfg)
+            attn, ck2, cv2 = _decode_attn_dense(
+                lp, cfg, h, ck, cv, lengths, rt)
+            my, mst2 = _mamba_mix(lp, cfg, h, mst, decode=True)
+            fused = 0.5 * (rms_norm(attn, lp["anorm_g"])
+                           + rms_norm(my, lp["mnorm_g"]))
+            h0 = h0 + fused
+            h0 = h0 + _ffn(lp, cfg, _norm(lp, "ln2", h0, cfg))
+            return h0, ck2, cv2, mst2
+
+        if cfg.scan_layers:
+            def body(carry, xs):
+                lp, ck, cv, mst = xs
+                h0, ck2, cv2, mst2 = hybrid_decode_layer(
+                    carry, lp, ck, cv, mst)
+                return h0, (ck2, cv2, mst2)
+            xs = (params["layers"], state["k"], state["v"],
+                  state["mamba"])
+            x, (k_new, v_new, m_new) = jax.lax.scan(body, x, xs)
+            new_state["k"], new_state["v"] = k_new, v_new
+            new_state["mamba"] = m_new
+        else:
+            cks, cvs, msts = [], [], []
+            for li, lp in enumerate(params["layers"]):
+                mst = jax.tree.map(lambda t, li=li: t[li],
+                                   state["mamba"])
+                x, ck, cv, mst2 = hybrid_decode_layer(
+                    x, lp, state["k"][li], state["v"][li], mst)
+                cks.append(ck); cvs.append(cv); msts.append(mst2)
+            new_state["k"] = jnp.stack(cks)
+            new_state["v"] = jnp.stack(cvs)
+            new_state["mamba"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *msts)
+    else:
+        has_cross = cfg.family == "audio"
+
+        def layer_fn(hcur, lp, caches):
+            """One decoder layer against its cache slice; returns
+            (h, updated caches). Shared by the scan and unrolled paths."""
+            h = _norm(lp, "ln1", hcur, cfg)
+            if cfg.is_mla:
+                ckv, krope = caches[:2]
+                attn, ckv2, krope2 = _decode_attn_mla(
+                    lp, cfg, h, ckv, krope, lengths)
+                new_caches = (ckv2, krope2) + caches[2:]
+            else:
+                ck, cv = caches[:2]
+                attn, ck2, cv2 = _decode_attn_dense(
+                    lp, cfg, h, ck, cv, lengths, rt)
+                new_caches = (ck2, cv2) + caches[2:]
+            hcur = hcur + attn
+            if has_cross:
+                xk, xv = caches[2], caches[3]
+                hx = _norm(lp, "lnx", hcur, cfg)
+                q = jnp.einsum("bsd,de->bse", hx, lp["xwq"]).reshape(
+                    hcur.shape[0], 1, cfg.n_heads, cfg.hd)
+                xatt = decode_attention_jnp(
+                    q, xk, xv,
+                    jnp.full((hcur.shape[0],), xk.shape[1], jnp.int32))
+                xatt = jnp.einsum(
+                    "bsf,fd->bsd",
+                    xatt.reshape(hcur.shape[0], 1, -1), lp["xwo"])
+                hcur = hcur + xatt
+            h2 = _norm(lp, "ln2", hcur, cfg)
+            hcur = hcur + (_moe_ffn(lp, cfg, h2, rt) if cfg.is_moe
+                           else _ffn(lp, cfg, h2))
+            return hcur, new_caches
+
+        cache_keys = (["ckv", "krope"] if cfg.is_mla else ["k", "v"])
+        if has_cross:
+            cache_keys += ["xk", "xv"]
+
+        if cfg.scan_layers:
+            def body(carry, xs):
+                lp = xs[0]
+                hcur, new_caches = layer_fn(carry, lp, tuple(xs[1:]))
+                return hcur, new_caches
+
+            xs = (params["layers"],) + tuple(state[k] for k in cache_keys)
+            x, outs = jax.lax.scan(body, x, xs)
+            for key, val in zip(cache_keys, outs):
+                new_state[key] = val
+        else:
+            accum: list[list] = [[] for _ in cache_keys]
+            for li, lp in enumerate(params["layers"]):
+                caches = tuple(state[k][li] for k in cache_keys)
+                x, new_caches = layer_fn(x, lp, caches)
+                for slot, val in zip(accum, new_caches):
+                    slot.append(val)
+            for key, slot in zip(cache_keys, accum):
+                new_state[key] = jnp.stack(slot)
+
+    new_state["lengths"] = lengths + 1
+    logits = lm_head(params, cfg, x, rt)[:, 0]
+    return logits, new_state

@@ -1,0 +1,6 @@
+from repro.serve.engine import EngineConfig, ServingEngine
+from repro.serve.power_runtime import PowerRuntime, simulate_interval
+from repro.serve.scheduler import PeriodicScheduler
+
+__all__ = ["ServingEngine", "EngineConfig", "PeriodicScheduler",
+           "PowerRuntime", "simulate_interval"]

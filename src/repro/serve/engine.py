@@ -1,0 +1,127 @@
+"""Batched serving engine with continuous batching.
+
+Slots model: a fixed decode batch of ``max_batch`` slots; finished
+sequences free their slot and the next queued request is prefetched into
+it (prefill) without disturbing the other slots' KV state.  This is the
+standard continuous-batching design (vLLM-style) restricted to a
+fixed-capacity cache per slot — adequate for the paper's deterministic
+periodic workloads and exercised end-to-end in tests and examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Runtime, decode_step, prefill
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8
+    cache_len: int = 256
+    eos_token: int = 0
+    max_new_tokens: int = 64
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, ecfg: EngineConfig,
+                 rt: Runtime | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.rt = rt or Runtime()
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}     # slot → request
+        self.state: dict | None = None
+        self._next_rid = 0
+        self._decode = jax.jit(
+            lambda p, s, t: decode_step(p, cfg, s, t, self.rt))
+
+    # -- request intake ------------------------------------------------
+    def submit(self, prompt: list[int]) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32)))
+        return rid
+
+    # -- internals -----------------------------------------------------
+    def _prefill_batch(self, requests: list[Request]) -> None:
+        """Prefill a fresh batch (uniform right-aligned padding)."""
+        ec = self.ecfg
+        b = ec.max_batch
+        max_len = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, max_len), np.int32)
+        for slot, r in enumerate(requests):
+            toks[slot, max_len - len(r.prompt):] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "audio":
+            batch["encoder_frames"] = jnp.zeros(
+                (b, self.cfg.encoder_seq, self.cfg.d_model),
+                self.cfg.jnp_dtype)
+        logits, state = prefill(self.params, self.cfg, batch, self.rt,
+                                cache_len=ec.cache_len)
+        self.state = state
+        self.active = dict(enumerate(requests))
+        self._last_logits = logits
+
+    def step(self) -> list[tuple[int, int]]:
+        """One engine step; returns [(rid, token)] emitted this step."""
+        ec = self.ecfg
+        if self.state is None:
+            if not self.queue:
+                return []
+            take = self.queue[:ec.max_batch]
+            self.queue = self.queue[ec.max_batch:]
+            self._prefill_batch(take)
+            logits = self._last_logits
+        else:
+            tokens = np.zeros((ec.max_batch,), np.int32)
+            for slot, r in self.active.items():
+                if r.generated:
+                    tokens[slot] = r.generated[-1]
+            logits, self.state = self._decode(
+                self.params, self.state, jnp.asarray(tokens))
+
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        emitted = []
+        for slot, r in list(self.active.items()):
+            if r.done:
+                continue
+            tok = int(next_tokens[slot]) % self.cfg.vocab_size
+            r.generated.append(tok)
+            emitted.append((r.rid, tok))
+            if (tok == ec.eos_token
+                    or len(r.generated) >= ec.max_new_tokens):
+                r.done = True
+        if all(r.done for r in self.active.values()):
+            # batch drained → next batch will prefill fresh
+            self.finished = list(self.active.values())
+            self.active = {}
+            self.state = None
+        return emitted
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                break
+            self.step()
+            if not self.active and hasattr(self, "finished"):
+                done.extend(self.finished)
+                del self.finished
+        return done

@@ -1,0 +1,46 @@
+"""Deadline-constrained periodic inference scheduler (the paper's
+workload class, §1: "inference at a fixed frame rate").
+
+Pairs the serving engine (or an edge-CNN workload) with a compiled
+PowerSchedule: every 1/R_target interval runs exactly one inference
+under the static power schedule and accounts energy per interval.  The
+scheduler is intentionally trivial — determinism is the point (§2.2):
+no predictive/reactive control, no run-time heuristics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.serve.power_runtime import IntervalLedger, PowerRuntime
+
+
+@dataclasses.dataclass
+class PeriodicScheduler:
+    runtime: PowerRuntime
+    target_rate_hz: float
+
+    def run(self, n_intervals: int,
+            on_interval: Callable[[int, IntervalLedger], None] | None = None
+            ) -> dict:
+        """Execute ``n_intervals`` periodic inferences; returns totals."""
+        ledgers = []
+        missed = 0
+        for i in range(n_intervals):
+            led = self.runtime.execute_interval()
+            if not led.met_deadline:
+                missed += 1
+            ledgers.append(led)
+            if on_interval:
+                on_interval(i, led)
+        total_e = sum(l.e_total for l in ledgers)
+        return {
+            "intervals": n_intervals,
+            "total_energy_j": total_e,
+            "avg_interval_energy_uj": total_e / n_intervals * 1e6,
+            "deadline_misses": missed,
+            "avg_power_mw": total_e / (n_intervals / self.target_rate_hz)
+            * 1e3,
+            "ledgers": ledgers,
+        }

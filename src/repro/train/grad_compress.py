@@ -1,0 +1,98 @@
+"""Gradient-compression collectives (distributed-optimization substrate).
+
+At 1000+ node scale the cross-pod (DCN/ICI-limited) gradient reduction
+dominates step time; the standard mitigation is hierarchical reduction
+with a compressed cross-pod stage:
+
+    reduce-scatter within pod (full precision, fast ICI)
+      → int8/bf16 all-reduce across pods (slow links, 4×/2× fewer bytes)
+      → all-gather within pod
+
+``compressed_psum`` implements the compressed stage as a shard_map
+collective: symmetric per-tensor int8 (or bf16) quantization, psum of
+the quantized values, dequantization with the psum'd scale.  Error is
+bounded by the quantization step; the error-feedback variant carries
+the residual to the next step (standard EF-SGD trick) so compression
+bias does not accumulate.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(g: jax.Array, axis_name: str, *,
+                    mode: str = "int8") -> jax.Array:
+    """psum over ``axis_name`` with compressed payload.
+
+    Call inside shard_map.  mode: int8 | bf16 | none.
+    """
+    if mode == "none":
+        return jax.lax.psum(g, axis_name)
+    if mode == "bf16":
+        return jax.lax.psum(g.astype(jnp.bfloat16), axis_name) \
+            .astype(g.dtype)
+    q, scale = _quantize(g)
+    # psum int32 (int8 accumulation overflows); scale via max over pods
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    scale = jax.lax.pmax(scale, axis_name)
+    return (total.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def make_compressed_allreduce(mesh: jax.sharding.Mesh, axis: str = "pod",
+                              mode: str = "int8"):
+    """Tree-level compressed all-reduce over one mesh axis (jit-able)."""
+
+    def reduce_tree(grads: Any) -> Any:
+        from jax.experimental.shard_map import shard_map
+
+        def one(g):
+            def block(gb):
+                return compressed_psum(gb, axis, mode=mode) \
+                    / mesh.shape[axis]
+
+            return shard_map(block, mesh=mesh,
+                             in_specs=P(axis, *([None] * (g.ndim - 1))),
+                             out_specs=P(axis, *([None] * (g.ndim - 1))),
+                             check_rep=False)(g) if g.shape[0] % \
+                mesh.shape[axis] == 0 and g.ndim >= 1 and g.shape[0] >= \
+                mesh.shape[axis] else g
+
+        return jax.tree.map(one, grads)
+
+    return reduce_tree
+
+
+class ErrorFeedback:
+    """EF-compression state: residual carried across steps."""
+
+    def __init__(self, params: Any):
+        self.residual = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads: Any) -> tuple[Any, "ErrorFeedback"]:
+        def one(g, r):
+            g32 = g.astype(jnp.float32) + r
+            q, scale = _quantize(g32)
+            deq = q.astype(jnp.float32) * scale
+            return deq.astype(g.dtype), g32 - deq
+
+        out = jax.tree.map(one, grads, self.residual)
+        compressed = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        self.residual = jax.tree.map(lambda t: t[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+        return compressed, self

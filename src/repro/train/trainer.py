@@ -1,0 +1,87 @@
+"""Training step and loop: value_and_grad → clip → AdamW, with optional
+gradient accumulation (scan over microbatches) and activation remat
+(configured per-model via ModelConfig.remat)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Runtime, forward_train
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    accum_steps: int = 1        # microbatch accumulation (scan)
+
+
+def loss_fn(params: Any, cfg: ModelConfig, batch: dict, rt: Runtime
+            ) -> jax.Array:
+    return forward_train(params, cfg, batch, rt)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, rt: Runtime
+                    ) -> Callable:
+    """Build the pure train-step function (to be jitted / lowered).
+
+    signature: (params, opt_state, batch) → (params, opt_state, metrics)
+    """
+
+    def train_step(params, opt_state, batch):
+        if tcfg.accum_steps > 1:
+            def micro(g_acc, mb):
+                loss_i, g = jax.value_and_grad(loss_fn)(params, cfg, mb, rt)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, loss_i
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(tcfg.accum_steps,
+                                    x.shape[0] // tcfg.accum_steps,
+                                    *x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            grads, losses = jax.lax.scan(micro, g0, mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.accum_steps, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch, rt)
+        new_params, new_state, metrics = adamw_update(
+            grads, opt_state, params, tcfg.optimizer)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, rt: Runtime,
+               params, opt_state, batches, *,
+               jit: bool = True,
+               hooks: list[Callable] | None = None) -> dict:
+    """Simple driver: iterate batches, run steps, fire hooks.
+
+    ``hooks`` receive (step, params, opt_state, metrics) — used by the
+    checkpointer and the fault-tolerance drill in tests.
+    """
+    step_fn = make_train_step(cfg, tcfg, rt)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    history = []
+    for step, batch in enumerate(batches):
+        tic = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["step_time_s"] = time.perf_counter() - tic
+        metrics["step"] = step
+        history.append(metrics)
+        for hook in hooks or ():
+            hook(step, params, opt_state, metrics)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,42 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device; multi-device sharding tests spawn subprocesses
+with their own flags (tests/test_sharding.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core.problem import IdleModel, ScheduleProblem, StateCost
+from repro.hw.dvfs import TransitionModel
+
+
+def random_problem(rng: np.random.Generator, *, n_layers: int,
+                   n_states: int, t_max_scale: float = 1.0,
+                   allow_sleep: bool = True) -> ScheduleProblem:
+    """Random-but-valid layered problem for property tests."""
+    layers = []
+    volt_menu = [0.7, 0.8, 0.9, 1.0, 1.1]
+    for _ in range(n_layers):
+        states = []
+        for _ in range(n_states):
+            v = tuple(rng.choice(volt_menu, size=3))
+            t = float(rng.uniform(1e-5, 1e-3))
+            e = float(rng.uniform(1e-7, 1e-4))
+            states.append(StateCost(v, t, e))
+        layers.append(states)
+    min_t = sum(min(s.t_op for s in states) for states in layers)
+    max_t = sum(max(s.t_op for s in states) for states in layers)
+    t_max = float(min_t + (max_t - min_t) * rng.uniform(0.1, 1.2))
+    t_max *= t_max_scale
+    idle = IdleModel(p_idle=float(rng.uniform(1e-4, 1e-2)),
+                     p_sleep=float(rng.uniform(1e-6, 1e-4)),
+                     e_sleep_wake=float(rng.uniform(1e-9, 1e-7)),
+                     t_sleep_wake=1e-6,
+                     allow_sleep=allow_sleep)
+    return ScheduleProblem(
+        layer_states=layers, t_max=t_max, idle=idle,
+        transition_model=TransitionModel(v_min=0.7, v_max=1.1))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

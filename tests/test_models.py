@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (reduced same-family configs) +
+decode-vs-forward consistency + MoE dense path correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import moe as moe_lib
+from repro.models.transformer import (
+    Runtime,
+    decode_step,
+    forward_train,
+    init_params,
+    lm_head,
+    prefill,
+)
+
+RT = Runtime()
+KEY = jax.random.PRNGKey(0)
+B, S, CACHE = 2, 16, 24
+
+
+def _batch(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        batch["encoder_frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        batch["positions"] = jnp.broadcast_to(pos[None], (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_and_decode(arch):
+    """One forward/train step + prefill + decode on CPU: output shapes
+    correct, no NaNs (the assignment's per-arch smoke contract)."""
+    cfg = get_config(arch).reduced()
+    params, specs = init_params(cfg, KEY)
+    assert jax.tree.structure(params) == jax.tree.structure(specs)
+    batch = _batch(cfg)
+    loss = forward_train(params, cfg, batch, RT)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    logits, state = prefill(params, cfg, batch, RT, cache_len=CACHE)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, state2 = decode_step(params, cfg, state, nxt, RT)
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits2).all()), f"{arch}: NaN in decode"
+    assert int(state2["lengths"][0]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-7b",
+                                  "deepseek-v2-lite-16b", "xlstm-350m",
+                                  "hymba-1.5b"])
+def test_decode_matches_full_forward(arch):
+    """prefill(S tokens) + decode(token S) must equal the full-sequence
+    forward over S+1 tokens at the last position (cache correctness)."""
+    cfg = get_config(arch).reduced()
+    params, _ = init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    # full forward over S+1: last-position logits via prefill(S+1)
+    full_logits, _ = prefill(params, cfg, {"tokens": toks}, RT,
+                             cache_len=CACHE)
+    # prefill S, then decode token S
+    _, state = prefill(params, cfg, {"tokens": toks[:, :S]}, RT,
+                       cache_len=CACHE)
+    dec_logits, _ = decode_step(params, cfg, state, toks[:, S], RT)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_dense_matches_manual():
+    """Dense-MoE oracle agrees with an explicit per-token loop."""
+    dims = moe_lib.MoeDims(n_experts=4, top_k=2, d_model=8, d_ff=16,
+                           capacity_factor=10.0)
+    k = jax.random.split(KEY, 5)
+    t = 6
+    x = jax.random.normal(k[0], (t, 8))
+    wr = jax.random.normal(k[1], (8, 4)) * 0.1
+    w1 = jax.random.normal(k[2], (4, 8, 16))
+    w3 = jax.random.normal(k[3], (4, 8, 16))
+    w2 = jax.random.normal(k[4], (4, 16, 8))
+    out = moe_lib.moe_ffn_dense(x, wr, w1, w3, w2, dims)
+    idx, cw = moe_lib.router_topk(x, wr, dims)
+    expected = np.zeros((t, 8), np.float32)
+    for ti in range(t):
+        for j in range(2):
+            e = int(idx[ti, j])
+            h = (jax.nn.silu(x[ti] @ w1[e]) * (x[ti] @ w3[e]))
+            expected[ti] += float(cw[ti, j]) * np.asarray(h @ w2[e])
+    np.testing.assert_allclose(np.asarray(out), expected, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_vlm_mrope_text_grid_matches_plain_positions():
+    """For text-only streams (equal grids) M-RoPE == standard RoPE, so
+    supplying positions vs not must give identical losses."""
+    cfg = get_config("qwen2-vl-72b").reduced()
+    params, _ = init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    batch1 = {"tokens": tokens, "labels": tokens,
+              "positions": jnp.broadcast_to(pos[None], (3, B, S))}
+    batch2 = {"tokens": tokens, "labels": tokens}
+    l1 = forward_train(params, cfg, batch1, RT)
+    l2 = forward_train(params, cfg, batch2, RT)
+    assert jnp.allclose(l1, l2, rtol=1e-6)
+
+
+def test_param_counts_match_analytic():
+    """module param_count vs ModelConfig.n_params on full configs."""
+    from repro.models.module import param_count
+    from repro.models.transformer import abstract
+
+    for arch in ("tinyllama-1.1b", "qwen2-7b", "phi3-mini-3.8b"):
+        cfg = get_config(arch)
+        sds, _ = abstract(cfg)
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(sds))
+        expect = cfg.n_params()
+        # analytic formula ignores norms/biases (< 0.2%)
+        assert abs(actual - expect) / expect < 5e-3, arch
+
+
+def test_edge_networks_layer_counts():
+    from repro.models.edge_cnn import edge_network
+
+    assert len(edge_network("squeezenet1.1")) == 26
+    assert len(edge_network("resnet18")) == 20
+    assert len(edge_network("mobilenetv3-small")) == 54
+    assert len(edge_network("mobilevit-xxs")) == 70

@@ -1,0 +1,138 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_problem
+from repro.core import (
+    prune_problem,
+    refine_candidates,
+    solve_lambda_dp,
+)
+from repro.core.problem import IdleModel
+from repro.hw.dvfs import DvfsModel, TransitionModel, voltage_levels
+
+
+# ---------------------------------------------------------------- DVFS
+
+@given(v=st.floats(0.5, 1.4))
+@settings(max_examples=50, deadline=None)
+def test_dvfs_frequency_monotone(v):
+    m = DvfsModel()
+    f1, f2 = m.freq(v), m.freq(v + 0.05)
+    assert f2 >= f1 >= 0
+
+
+@given(v=st.floats(0.5, 1.4))
+@settings(max_examples=50, deadline=None)
+def test_leakage_monotone_and_gated_zero(v):
+    m = DvfsModel()
+    assert m.leak_power(0.0) == 0.0
+    assert m.leak_power(v + 0.05) >= m.leak_power(v) >= 0
+
+
+@given(a=st.floats(0.7, 1.3), b=st.floats(0.7, 1.3))
+@settings(max_examples=50, deadline=None)
+def test_transition_energy_symmetric_latency_positive(a, b):
+    tm = TransitionModel()
+    assert tm.energy(a, b) == tm.energy(b, a)
+    assert tm.latency(a, b) >= 0
+    if abs(a - b) > 1e-12:
+        assert tm.energy(a, b) > 0
+    assert tm.energy(a, a) == 0 and tm.latency(a, a) == 0
+
+
+def test_voltage_levels_exact():
+    levels = voltage_levels(0.9, 1.3, 0.05)
+    assert len(levels) == 9
+    assert levels[0] == 0.9 and levels[-1] == 1.3
+
+
+# ---------------------------------------------------------- idle model
+
+@given(slack=st.floats(0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_idle_energy_nonneg_and_bounded_by_active(slack):
+    idle = IdleModel(p_idle=1e-3, p_sleep=1e-5, e_sleep_wake=1e-7,
+                     t_sleep_wake=1e-6)
+    e = idle.energy(slack)
+    assert 0 <= e <= 1e-3 * slack + 1e-12
+
+
+# ------------------------------------------------------------- solvers
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_dp_beats_random_feasible_schedules(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=5, n_states=4)
+    best, cands, _ = solve_lambda_dp(prob)
+    refined = None
+    if cands:
+        refined, _ = refine_candidates(prob, cands)
+    found_feasible = False
+    for _ in range(50):
+        path = [int(rng.integers(len(s))) for s in prob.layer_states]
+        r = prob.evaluate(path)
+        if r["feasible"]:
+            found_feasible = True
+            assert refined is not None, \
+                "solver missed a feasible schedule entirely"
+            assert refined["e_total"] <= r["e_total"] + 1e-15
+    if found_feasible:
+        assert best is not None
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_pruning_never_changes_solution_energy(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=4, n_states=6)
+    pruned, info = prune_problem(prob)
+    assert info["states_after"] <= info["states_before"]
+    b1, c1, _ = solve_lambda_dp(prob)
+    b2, c2, _ = solve_lambda_dp(pruned)
+    assert (b1 is None) == (b2 is None)
+    if b1 is None:
+        return
+    r1, _ = refine_candidates(prob, c1)
+    r2, _ = refine_candidates(pruned, c2)
+    assert abs(r2["e_total"] - r1["e_total"]) <= 1e-9 * max(
+        r1["e_total"], 1e-30) + 1e-15
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_looser_deadline_never_costs_more(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=4, n_states=4,
+                          allow_sleep=True)
+    import dataclasses
+
+    loose = dataclasses.replace(prob)
+    loose = type(prob)(layer_states=prob.layer_states,
+                       t_max=prob.t_max * 1.5, idle=prob.idle,
+                       transition_model=prob.transition_model)
+    b1, c1, _ = solve_lambda_dp(prob)
+    b2, c2, _ = solve_lambda_dp(loose)
+    if b1 is None:
+        return
+    r1, _ = refine_candidates(prob, c1)
+    r2, _ = refine_candidates(loose, c2)
+    # with duty-cycled sleep available, extra slack is never harmful
+    # beyond the (tiny) sleep retention cost on the added interval
+    extra_floor = prob.idle.p_sleep * prob.t_max * 0.5
+    assert r2["e_total"] <= r1["e_total"] + extra_floor + 1e-12
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_evaluate_consistency(seed):
+    """e_total decomposes exactly; feasibility flag matches t_infer."""
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=5, n_states=3)
+    path = [int(rng.integers(len(s))) for s in prob.layer_states]
+    r = prob.evaluate(path)
+    assert r["e_total"] == r["e_op"] + r["e_trans"] + r["e_idle"]
+    assert r["feasible"] == (r["t_infer"] <= prob.t_max + 1e-15)
+    assert r["n_rail_switches"] <= prob.n_layers - 1

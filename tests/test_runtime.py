@@ -1,0 +1,202 @@
+"""Data pipeline, training loop, serving engine, power runtime, gradient
+compression: the distributed-runtime substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.models.transformer import Runtime, init_params
+from repro.perfmodel import characterize_network, plan_banks
+from repro.serve import (
+    EngineConfig,
+    PeriodicScheduler,
+    PowerRuntime,
+    ServingEngine,
+)
+from repro.train.grad_compress import ErrorFeedback, _quantize
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, \
+    lr_schedule, _zero_spec
+from repro.train.trainer import TrainConfig, make_train_step
+
+RT = Runtime()
+
+
+# ------------------------------------------------------------- data
+
+def test_data_stream_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4, seed=3)
+    s1, s2 = SyntheticLMStream(cfg), SyntheticLMStream(cfg)
+    b_direct = s1.batch(17)
+    it = s2.iterate(start_step=17)
+    b_iter = next(it)
+    np.testing.assert_array_equal(b_direct["tokens"], b_iter["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b_direct["labels"][:, :-1],
+                                  b_direct["tokens"][:, 1:])
+    assert b_direct["tokens"].shape == (4, 32)
+    assert b_direct["tokens"].max() < 1000
+
+
+# ---------------------------------------------------------- optimizer
+
+def test_adamw_decreases_quadratic_loss():
+    ocfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                       weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state, _ = adamw_init(params, {"w": None}, ocfg)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}       # d/dw ||w||²
+        params, state, _ = adamw_update(grads, state, params, ocfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_lr_schedule_warmup_and_decay():
+    ocfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(ocfg, jnp.array(5.0))) < 1.0
+    peak = float(lr_schedule(ocfg, jnp.array(10.0)))
+    end = float(lr_schedule(ocfg, jnp.array(100.0)))
+    assert peak == pytest.approx(1.0, rel=0.01)
+    assert end == pytest.approx(0.1, rel=0.05)
+
+
+def test_zero_spec_shards_first_free_axis():
+    from jax.sharding import PartitionSpec as P
+
+    assert _zero_spec(P(None, "model"), (64, 32), 16) == \
+        P("data", "model")
+    assert _zero_spec(P("model", None), (64, 32), 16) == \
+        P("model", "data")
+    # axis not divisible → unchanged
+    assert _zero_spec(P(None,), (7,), 16) == P(None)
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params, specs = init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt0, _ = adamw_init(params, specs, ocfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    step1 = make_train_step(cfg, TrainConfig(optimizer=ocfg), RT)
+    step4 = make_train_step(cfg, TrainConfig(optimizer=ocfg,
+                                             accum_steps=4), RT)
+    p1, _, m1 = step1(params, opt0, batch)
+    p4, _, m4 = step4(params, opt0, batch)
+    assert m1["loss"] == pytest.approx(float(m4["loss"]), rel=5e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_training_reduces_loss_tiny_lm():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params, specs = init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=30)
+    opt, _ = adamw_init(params, specs, ocfg)
+    stream = SyntheticLMStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=8))
+    step = jax.jit(make_train_step(cfg, TrainConfig(optimizer=ocfg), RT))
+    losses = []
+    for i in range(25):
+        b = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+
+# ----------------------------------------------------- grad compression
+
+def test_int8_quantize_error_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 5
+    q, scale = _quantize(g)
+    deq = q.astype(jnp.float32) * scale
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_preserves_gradient_sum():
+    """EF compression: cumulative compressed updates track cumulative
+    true gradients (bias does not accumulate)."""
+    params = {"w": jnp.zeros((64,))}
+    ef = ErrorFeedback(params)
+    rng = jax.random.PRNGKey(1)
+    total_true = jnp.zeros((64,))
+    total_comp = jnp.zeros((64,))
+    for i in range(20):
+        rng, k = jax.random.split(rng)
+        g = {"w": jax.random.normal(k, (64,)) * 0.3}
+        comp, ef = ef.compress(g)
+        total_true += g["w"]
+        total_comp += comp["w"]
+    # residual bound: final difference ≤ one quantization step
+    resid = float(jnp.max(jnp.abs(total_true - total_comp)))
+    assert resid < 0.05
+
+
+# ------------------------------------------------------------- serving
+
+def test_engine_serves_all_requests():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=3, cache_len=64, max_new_tokens=6, eos_token=-1))
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(list(rng.integers(1, cfg.vocab_size, 5)))
+            for _ in range(7)]
+    done = eng.run_to_completion()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert all(len(r.generated) == 6 for r in done)
+
+
+def test_engine_greedy_deterministic():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, cache_len=64, max_new_tokens=5, eos_token=-1))
+        eng.submit([5, 6, 7])
+        eng.submit([9, 10, 11, 12])
+        done = eng.run_to_completion()
+        outs.append({r.rid: tuple(r.generated) for r in done})
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------- power runtime
+
+def test_power_runtime_matches_compiler_prediction():
+    """Executed interval energy == compiled schedule energy (the static
+    schedule IS the deployment semantics)."""
+    specs = edge_network("squeezenet1.1")
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    for policy in ("baseline", "gating", "greedy_gating", "pfdnn_even"):
+        sched = compile_power_schedule(
+            specs, 40.0, cfg=OrchestratorConfig(policy=policy),
+            network="sqz")
+        assert sched is not None, policy
+        led = PowerRuntime(sched, costs, plan, ACC).execute_interval()
+        assert led.met_deadline
+        assert led.e_total == pytest.approx(sched.e_total, rel=1e-6), \
+            policy
+
+
+def test_periodic_scheduler_accounting():
+    specs = edge_network("mobilenetv3-small")
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    sched = compile_power_schedule(
+        specs, 60.0, cfg=OrchestratorConfig(policy="greedy_gating"),
+        network="mnv3")
+    run = PeriodicScheduler(
+        PowerRuntime(sched, costs, plan, ACC), 60.0).run(5)
+    assert run["deadline_misses"] == 0
+    assert run["total_energy_j"] == pytest.approx(
+        5 * sched.e_total, rel=1e-6)

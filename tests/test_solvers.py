@@ -1,0 +1,143 @@
+"""Solver correctness: λ-DP vs brute force, ILP agreement, refinement,
+pruning identity, greedy semantics (paper §4.3, §6.5)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from conftest import random_problem
+from repro.core import (
+    build_edge_problem,
+    dp_best_path,
+    min_energy_path,
+    min_time_path,
+    prune_problem,
+    refine_candidates,
+    solve_greedy,
+    solve_ilp,
+    solve_lambda_dp,
+    unprune_path,
+)
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network, plan_banks
+
+
+def brute_force(problem):
+    """Exact optimum by enumeration (tiny instances only)."""
+    best = None
+    sizes = [range(len(s)) for s in problem.layer_states]
+    for path in itertools.product(*sizes):
+        r = problem.evaluate(list(path))
+        if r["feasible"] and (best is None
+                              or r["e_total"] < best["e_total"]):
+            best = r
+    return best
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_lambda_dp_refine_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=4, n_states=4)
+    exact = brute_force(prob)
+    best, cands, _ = solve_lambda_dp(prob)
+    if exact is None:
+        assert best is None
+        return
+    assert best is not None
+    refined, _ = refine_candidates(prob, cands)
+    gap = refined["e_total"] / exact["e_total"] - 1
+    assert gap <= 5e-3, f"refined gap {gap:.4%} vs brute force"
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_ilp_matches_brute_force(seed):
+    rng = np.random.default_rng(100 + seed)
+    prob = random_problem(rng, n_layers=4, n_states=3)
+    exact = brute_force(prob)
+    ilp = solve_ilp(prob)
+    if exact is None:
+        assert not ilp.get("feasible")
+        return
+    assert ilp["feasible"]
+    assert ilp["e_total"] == pytest.approx(exact["e_total"], rel=1e-6)
+
+
+def test_refinement_never_worse():
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        prob = random_problem(rng, n_layers=6, n_states=5)
+        best, cands, _ = solve_lambda_dp(prob)
+        if best is None:
+            continue
+        refined, _ = refine_candidates(prob, cands)
+        assert refined["e_total"] <= best["e_total"] + 1e-18
+        assert refined["feasible"]
+
+
+def test_pruning_preserves_solution_on_edge_networks():
+    specs = edge_network("squeezenet1.1")
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    for rate in (60.0, 30.0, 10.0):
+        prob = build_edge_problem(costs, plan, ACC, (0.9, 1.05, 1.2),
+                                  1.0 / rate)
+        pruned, info = prune_problem(prob)
+        assert info["states_after"] < info["states_before"]
+        b1, c1, _ = solve_lambda_dp(prob)
+        b2, c2, _ = solve_lambda_dp(pruned)
+        r1, _ = refine_candidates(prob, c1)
+        r2, _ = refine_candidates(pruned, c2)
+        # identical schedules (paper §6.5): same energy to fp precision
+        assert r2["e_total"] == pytest.approx(r1["e_total"], rel=1e-9)
+        # and the unpruned path indices map back consistently
+        orig = unprune_path(r2["path"], info["index_maps"])
+        assert prob.evaluate(orig)["e_total"] == pytest.approx(
+            r2["e_total"], rel=1e-9)
+
+
+def test_min_time_and_min_energy_paths_bracket_dp():
+    rng = np.random.default_rng(11)
+    prob = random_problem(rng, n_layers=5, n_states=4)
+    fastest = prob.evaluate(min_time_path(prob))
+    cheapest_ops = min_energy_path(prob)
+    best, _, _ = solve_lambda_dp(prob)
+    if best is not None:
+        assert best["t_infer"] >= fastest["t_infer"] - 1e-15
+        e_floor = sum(prob.op_arrays(i)[1][s]
+                      for i, s in enumerate(cheapest_ops))
+        assert best["e_op"] >= e_floor - 1e-18
+
+
+def test_greedy_meets_deadline_or_returns_none():
+    rng = np.random.default_rng(21)
+    for _ in range(8):
+        prob = random_problem(rng, n_layers=6, n_states=4)
+        r = solve_greedy(prob)
+        fastest = prob.evaluate(min_time_path(prob))
+        if fastest["feasible"]:
+            assert r is not None and r["feasible"]
+        else:
+            assert r is None
+
+
+def test_infeasible_deadline_returns_none():
+    rng = np.random.default_rng(33)
+    prob = random_problem(rng, n_layers=4, n_states=3,
+                          t_max_scale=1e-6)
+    best, cands, _ = solve_lambda_dp(prob)
+    assert best is None and cands == []
+    assert solve_greedy(prob) is None
+
+
+def test_dp_zero_lambda_is_min_op_energy_with_transitions():
+    rng = np.random.default_rng(5)
+    prob = random_problem(rng, n_layers=3, n_states=3)
+    path = dp_best_path(prob, 0.0)
+    r = prob.evaluate(path)
+    # must be minimal in (e_op + e_trans) over all paths
+    best = min(
+        prob.evaluate(list(p))["e_op"] + prob.evaluate(list(p))["e_trans"]
+        for p in itertools.product(*[range(3)] * 3))
+    assert r["e_op"] + r["e_trans"] == pytest.approx(best, rel=1e-9)
