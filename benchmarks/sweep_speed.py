@@ -1,0 +1,106 @@
+"""Wall-clock benchmark of the rail-subset sweep (compile_power_schedule).
+
+Times the full-sweep policies (`pfdnn`, `pfdnn_nopp`, n_max_rails=3)
+across the edge network configs and emits ``BENCH_sweep.json`` so future
+PRs have a perf trajectory.
+
+Usage:
+    PYTHONPATH=src python benchmarks/sweep_speed.py \
+        [--out BENCH_sweep.json] [--record-baseline]
+
+``--record-baseline`` writes ``benchmarks/baseline_sweep.json`` instead
+(run once against the implementation you want to compare against).  When
+a baseline file exists, the default run folds it into the output and
+reports per-config speedups plus whether rails/energy are identical.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+try:
+    from benchmarks.common import max_rate, schedule_for, timed
+except ImportError:  # direct script run: benchmarks/ is sys.path[0]
+    from common import max_rate, schedule_for, timed
+
+HERE = pathlib.Path(__file__).parent
+BASELINE_PATH = HERE / "baseline_sweep.json"
+
+CONFIGS = [
+    ("squeezenet1.1", 0.90),
+    ("mobilenetv3-small", 0.85),
+]
+POLICIES = ("pfdnn", "pfdnn_nopp")
+N_MAX_RAILS = 3
+
+
+def run_sweeps() -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for network, frac in CONFIGS:
+        rate = max_rate(network) * frac
+        for policy in POLICIES:
+            key = f"{network}|{frac}|{policy}"
+            s, wall = timed(schedule_for, network, rate, policy,
+                            n_max_rails=N_MAX_RAILS)
+            stats = s.solver_stats if s is not None else {}
+            out[key] = {
+                "wall_s": wall,
+                "e_total": s.e_total if s is not None else None,
+                "rails": list(s.rails) if s is not None else None,
+                "subsets_total": stats.get("subsets_total"),
+                "subsets_solved": stats.get("subsets_solved"),
+                "subsets_skipped": stats.get("subsets_skipped"),
+                "subsets_cut": stats.get("subsets_cut"),
+                "dp_calls": stats.get("dp_calls"),
+                "candidates_evaluated": stats.get("candidates_evaluated"),
+            }
+            print(f"{key}: {wall:.2f}s  "
+                  f"E={out[key]['e_total']}  rails={out[key]['rails']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(HERE.parent / "BENCH_sweep.json"))
+    ap.add_argument("--record-baseline", action="store_true",
+                    help="write benchmarks/baseline_sweep.json instead")
+    args = ap.parse_args()
+
+    results = run_sweeps()
+    if args.record_baseline:
+        BASELINE_PATH.write_text(json.dumps(results, indent=1))
+        print(f"baseline recorded to {BASELINE_PATH}")
+        return
+
+    report: dict = {"n_max_rails": N_MAX_RAILS, "current": results}
+    if BASELINE_PATH.exists():
+        baseline = json.loads(BASELINE_PATH.read_text())
+        report["baseline"] = baseline
+        comparison = {}
+        for key, cur in results.items():
+            base = baseline.get(key)
+            if not base:
+                continue
+            comparison[key] = {
+                "speedup": base["wall_s"] / cur["wall_s"]
+                if cur["wall_s"] > 0 else None,
+                "same_rails": base["rails"] == cur["rails"],
+                "same_energy": (
+                    base["e_total"] is None and cur["e_total"] is None) or (
+                    base["e_total"] is not None
+                    and cur["e_total"] is not None
+                    and abs(base["e_total"] - cur["e_total"])
+                    <= 1e-9 * abs(base["e_total"])),
+            }
+            print(f"{key}: speedup {comparison[key]['speedup']:.2f}x  "
+                  f"same_rails={comparison[key]['same_rails']}  "
+                  f"same_energy={comparison[key]['same_energy']}")
+        report["comparison"] = comparison
+    pathlib.Path(args.out).write_text(json.dumps(report, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,10 @@
 
 Public API:
   - ScheduleProblem / StateCost / IdleModel  — §4 problem formulation
-  - solve_lambda_dp / kbest_paths            — §4.3 λ-DP search
+    (ScheduleProblem.evaluate_paths: vectorized batch evaluator)
+  - CompilationContext                       — shared master-table stage
+  - register_policy / get_policy             — policy registry
+  - solve_lambda_dp / dp_paths / kbest_paths — §4.3 λ-DP search
   - refine_candidates                        — §4.3 local refinement
   - prune_problem                            — §4.3 structure pruning
   - solve_ilp                                — §4.3 exact oracle
@@ -11,20 +14,24 @@ Public API:
   - compile_power_schedule / PowerSchedule   — §3.3 compiler driver
 """
 
+from repro.core.context import CompilationContext
 from repro.core.edge_builder import build_edge_problem, build_idle_model
 from repro.core.greedy import min_energy_path, solve_greedy
 from repro.core.ilp import IlpBlowupError, solve_ilp
 from repro.core.lambda_dp import (
     SolverStats,
     dp_best_path,
+    dp_paths,
     kbest_paths,
     min_time_path,
     solve_lambda_dp,
 )
 from repro.core.orchestrator import (
-    POLICIES,
     OrchestratorConfig,
     compile_power_schedule,
+    get_policy,
+    policy_names,
+    register_policy,
 )
 from repro.core.problem import IdleModel, ScheduleProblem, StateCost
 from repro.core.pruning import prune_problem, unprune_path
@@ -36,9 +43,21 @@ from repro.core.rails import (
 from repro.core.refinement import refine_candidates, refine_path
 from repro.core.schedule import PowerSchedule
 
+
+def __getattr__(name: str):
+    # live view of the registry: policies registered after this module's
+    # import still appear in ``repro.core.POLICIES``
+    if name == "POLICIES":
+        return policy_names()
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "ScheduleProblem", "StateCost", "IdleModel",
-    "solve_lambda_dp", "dp_best_path", "kbest_paths", "min_time_path",
+    "CompilationContext", "register_policy", "get_policy",
+    "solve_lambda_dp", "dp_paths", "dp_best_path", "kbest_paths",
+    "min_time_path",
     "SolverStats",
     "refine_candidates", "refine_path",
     "prune_problem", "unprune_path",

@@ -1,0 +1,185 @@
+"""Shared compilation state for the staged compiler pipeline (§3.3).
+
+The rail-subset sweep of §6.5 solves ``Σ C(|V|,k)`` subsets of the same
+network.  Everything that does not depend on the chosen subset is
+computed exactly once here and shared across all of them:
+
+  - layer characterization (cycle counts, per-event energies) and the
+    RRAM bank plan — once per compile;
+  - a **master per-layer state table** over *all* voltage levels (plus
+    the gated RRAM option), from which each subset's
+    :class:`ScheduleProblem` is derived as an index-slice view instead of
+    re-enumerating the voltage cross-product per subset;
+  - **master pairwise transition matrices**, cached by voltage-table
+    *content* (most adjacent layer pairs share one of a handful of
+    distinct state tables), sliced per subset — ``_pairwise_transition``
+    runs once per distinct pair instead of once per subset per layer;
+  - per-subset **energy lower bounds** (Σ_i min E_op) used by the sweep
+    to cut subsets that provably cannot beat the incumbent.
+
+State ordering invariant: the master table enumerates (V_c, V_f, V_r)
+with each domain ascending over sorted levels and the gated RRAM option
+last, exactly as :func:`repro.core.edge_builder.layer_states` does for a
+sorted rail subset — so a subset slice is *elementwise identical* to the
+problem the monolithic builder would have produced.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.edge_builder import build_idle_model, layer_states
+from repro.core.problem import (
+    ScheduleProblem,
+    StateCost,
+    _pairwise_transition,
+)
+from repro.hw.dvfs import V_GATED
+from repro.hw.edge40nm import Edge40nmAccelerator, EDGE40NM_DEFAULT
+from repro.perfmodel.gating import plan_banks
+from repro.perfmodel.layer_costs import LayerSpec, characterize_network
+
+
+class CompilationContext:
+    """Per-compile shared state: characterization, bank plan, master
+    state tables, and the content-keyed transition cache."""
+
+    def __init__(self, specs: Sequence[LayerSpec], target_rate_hz: float,
+                 *, acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
+                 network: str = "net",
+                 e_switch_nom: float | None = None):
+        self.specs = list(specs)
+        self.acc = acc
+        self.network = network
+        self.t_max = 1.0 / target_rate_hz
+        self.costs = characterize_network(self.specs, acc)
+        self.plan = plan_banks(self.costs, acc)
+        self.levels: tuple[float, ...] = acc.levels()
+        self.transition_model = acc.transitions(e_switch_nom)
+        # gating flag -> per-layer master StateCost lists / voltage tables
+        self._master: dict[bool, list[list[StateCost]]] = {}
+        self._master_volts: dict[bool, list[np.ndarray]] = {}
+        self._master_e_op: dict[bool, list[np.ndarray]] = {}
+        self._master_vkey: dict[bool, list[bytes]] = {}
+        # (volts_a content, volts_b content) -> (T, E, switch) matrices
+        self._trans_cache: dict[
+            tuple[bytes, bytes],
+            tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        # (gating, volts content, subset) -> master-state index vector
+        self._slice_cache: dict[tuple[bool, bytes, tuple[float, ...]],
+                                np.ndarray] = {}
+
+    # -- master state table -------------------------------------------
+    def master_states(self, gating: bool) -> list[list[StateCost]]:
+        """Per-layer feasible states over ALL voltage levels (built once
+        per gating flag; every rail subset is a slice of this)."""
+        if gating not in self._master:
+            table = [layer_states(c, i, self.acc, self.plan, self.levels,
+                                  gating=gating)
+                     for i, c in enumerate(self.costs)]
+            self._master[gating] = table
+            self._master_volts[gating] = [
+                np.array([s.voltages for s in states]) for states in table]
+            self._master_e_op[gating] = [
+                np.array([s.e_op for s in states]) for states in table]
+            self._master_vkey[gating] = [
+                v.tobytes() for v in self._master_volts[gating]]
+        return self._master[gating]
+
+    def _subset_indices(self, gating: bool, layer: int,
+                        rails: tuple[float, ...]) -> np.ndarray:
+        """Master-state indices whose voltages all lie in the subset
+        (gated RRAM always allowed — it is not a rail)."""
+        key = (gating, self._master_vkey[gating][layer], rails)
+        if key not in self._slice_cache:
+            volts = self._master_volts[gating][layer]
+            allowed = np.array(sorted(set(rails)) + [V_GATED])
+            mask = np.isin(volts, allowed).all(axis=1)
+            self._slice_cache[key] = np.nonzero(mask)[0]
+        return self._slice_cache[key]
+
+    # -- transition matrices ------------------------------------------
+    def transition_arrays(self, va: np.ndarray, vb: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(T_trans, E_trans, switch) for two voltage tables, cached by
+        table *content* so results are shared across layers and subsets."""
+        return self._transition_keyed(va.tobytes(), vb.tobytes(), va, vb)
+
+    def _transition_keyed(self, ka: bytes, kb: bytes,
+                          va: np.ndarray, vb: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        key = (ka, kb)
+        if key not in self._trans_cache:
+            self._trans_cache[key] = _pairwise_transition(
+                self.transition_model, va, vb)
+        return self._trans_cache[key]
+
+    # -- per-subset problem views -------------------------------------
+    def problem_for(self, rails: Sequence[float], *, gating: bool,
+                    allow_sleep: bool,
+                    via_master: bool = True) -> ScheduleProblem:
+        """Derive the rail subset's :class:`ScheduleProblem` as a slice
+        of the master table, with transition matrices sliced from the
+        content-keyed master cache (nothing is recomputed per subset).
+
+        ``via_master=False`` enumerates the subset's states directly —
+        cheaper for policies that solve a single subset (no sweep to
+        amortize the master table over), unless the master already
+        exists.  Both paths produce elementwise-identical problems.
+        """
+        rails = tuple(rails)
+        if not via_master and gating not in self._master:
+            layers = [layer_states(c, i, self.acc, self.plan, rails,
+                                   gating=gating)
+                      for i, c in enumerate(self.costs)]
+            return ScheduleProblem(
+                layer_states=layers,
+                t_max=self.t_max,
+                idle=build_idle_model(self.acc, self.plan.n_banks,
+                                      gating=gating,
+                                      allow_sleep=allow_sleep),
+                transition_model=self.transition_model,
+                rails=rails,
+                name=self.network,
+            )
+        master = self.master_states(gating)
+        master_volts = self._master_volts[gating]
+        idx = [self._subset_indices(gating, i, rails)
+               for i in range(len(master))]
+        layers = [[states[j] for j in idx_i]
+                  for states, idx_i in zip(master, idx)]
+        problem = ScheduleProblem(
+            layer_states=layers,
+            t_max=self.t_max,
+            idle=build_idle_model(self.acc, self.plan.n_banks,
+                                  gating=gating, allow_sleep=allow_sleep),
+            transition_model=self.transition_model,
+            rails=rails,
+            name=self.network,
+        )
+        vkey = self._master_vkey[gating]
+        for i in range(len(master) - 1):
+            tt, et, sw = self._transition_keyed(
+                vkey[i], vkey[i + 1], master_volts[i], master_volts[i + 1])
+            sel = np.ix_(idx[i], idx[i + 1])
+            problem._trans_cache[i] = (tt[sel], et[sel], sw[sel])
+        return problem
+
+    def min_e_op_bound(self, rails: Sequence[float], *,
+                       gating: bool = True) -> float:
+        """Cheap lower bound on any schedule's E_total under ``rails``:
+        Σ_i min_s E_op (transitions and idle are non-negative).  Used by
+        the sweep to cut subsets that cannot beat the incumbent without
+        building or solving them."""
+        rails = tuple(rails)
+        self.master_states(gating)
+        e_op = self._master_e_op[gating]
+        total = 0.0
+        for i in range(len(e_op)):
+            idx = self._subset_indices(gating, i, rails)
+            if idx.size == 0:
+                return float("inf")
+            total += float(e_op[i][idx].min())
+        return total

@@ -15,6 +15,15 @@ State semantics for layer i under voltages (V_c, V_f, V_r):
 Weightless layers (pool/eltwise/residual-add) may fully gate the RRAM
 domain (V_r = 0) when gating is enabled — RRAM is non-volatile, so no
 state is lost (§1's motivation for RRAM-based weight storage).
+
+``layer_states`` doubles as the master-table builder for
+:class:`repro.core.context.CompilationContext`: called with the full
+level set it enumerates every state the rail sweep can ever use, and the
+per-subset problems are index slices of that table.  The enumeration
+order (each domain ascending over its sorted options, gated RRAM last)
+is the invariant that makes those slices elementwise identical to a
+direct per-subset build — change it only together with
+``CompilationContext._subset_indices``.
 """
 
 from __future__ import annotations

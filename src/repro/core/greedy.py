@@ -19,6 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.problem import ScheduleProblem
+from repro.core.refinement import move_deltas
 
 
 def min_energy_path(problem: ScheduleProblem) -> list[int]:
@@ -29,44 +30,45 @@ def min_energy_path(problem: ScheduleProblem) -> list[int]:
 
 def solve_greedy(problem: ScheduleProblem,
                  max_iters: int = 10_000) -> dict | None:
-    """Marginal-utility ascent to feasibility; None if it never gets there."""
+    """Marginal-utility ascent to feasibility; None if it never gets there.
+
+    Each iteration scores every (layer, alternative-state) replacement —
+    the same Δ(T, E) move deltas refinement uses, with local transition
+    awareness — as one padded [L, S_max] matrix and applies the global
+    best latency-per-energy ratio.
+    """
     path = min_energy_path(problem)
     ev = problem.evaluate(path)
+    n_layers = problem.n_layers
+    sizes = [len(s) for s in problem.layer_states]
+    s_max = max(sizes)
     iters = 0
     while not ev["feasible"] and iters < max_iters:
         iters += 1
-        best_ratio = -np.inf
-        best_move: tuple[int, int] | None = None
-        for i in range(problem.n_layers):
-            ti, ei = problem.op_arrays(i)
-            cur = path[i]
-            d_t = ti - ti[cur]
-            d_e = ei - ei[cur]
-            # local transition awareness (candidate evaluation only)
-            if i > 0:
-                tt, et = problem.transition_arrays(i - 1)
-                d_t = d_t + tt[path[i - 1], :] - tt[path[i - 1], cur]
-                d_e = d_e + et[path[i - 1], :] - et[path[i - 1], cur]
-            if i + 1 < problem.n_layers:
-                tt, et = problem.transition_arrays(i)
-                d_t = d_t + tt[:, path[i + 1]] - tt[cur, path[i + 1]]
-                d_e = d_e + et[:, path[i + 1]] - et[cur, path[i + 1]]
-            speedup = -d_t
-            cost = d_e
-            with np.errstate(divide="ignore", invalid="ignore"):
-                ratio = np.where(
-                    speedup > 0,
-                    np.where(cost <= 0, np.inf, speedup / cost),
-                    -np.inf,
-                )
-            ratio[cur] = -np.inf
-            j = int(np.argmax(ratio))
-            if ratio[j] > best_ratio:
-                best_ratio = float(ratio[j])
-                best_move = (i, j)
-        if best_move is None or not np.isfinite(best_ratio):
+        d_t = np.zeros((n_layers, s_max))
+        d_e = np.zeros((n_layers, s_max))
+        valid = np.zeros((n_layers, s_max), dtype=bool)
+        for i in range(n_layers):
+            dt_i, de_i = move_deltas(problem, path, i)
+            d_t[i, :sizes[i]] = dt_i
+            d_e[i, :sizes[i]] = de_i
+            valid[i, :sizes[i]] = True
+        speedup = -d_t
+        cost = d_e
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratio = np.where(
+                speedup > 0,
+                np.where(cost <= 0, np.inf, speedup / cost),
+                -np.inf,
+            )
+        ratio[~valid] = -np.inf
+        ratio[np.arange(n_layers), path] = -np.inf
+        flat = int(np.argmax(ratio))
+        i, j = divmod(flat, s_max)
+        best_ratio = float(ratio[i, j])
+        if not np.isfinite(best_ratio):
             return None                      # cannot reach the deadline
-        path[best_move[0]] = best_move[1]
+        path[i] = j
         ev = problem.evaluate(path)
     if not ev["feasible"]:
         return None

@@ -11,20 +11,27 @@ solver scales to the large layered graphs of §6.5 (the python-level loop
 is only over layers).
 
 Implementation notes:
+  - ``dp_paths`` is the single DP kernel: k best paths under the generic
+    node cost ``w_e·e + w_t·t``.  ``dp_best_path`` (w_e=1, w_t=μ, k=1),
+    ``min_time_path`` (w_e=0, w_t=1 — the λ→∞ limit) and ``kbest_paths``
+    are thin views of it.
   - ``mu`` is the generic per-second price.  Plain λ-DP uses ``mu = λ``.
     Because the terminal idle energy is linear in the slack for a fixed
     duty-cycle decision z (E_idle = P_z·(T_max − T_infer) + const), running
     the same DP with ``mu = λ − P_z`` yields exact idle-aware paths for
     that branch; both branches are added to the candidate pool.
-  - ``kbest_paths`` generalizes the DP frontier to the k best partial
-    paths per state, used to produce the ≤10 feasible candidates (§4.3).
+  - Candidate paths are costed through the vectorized
+    :meth:`ScheduleProblem.evaluate_paths` batch evaluator.
+  - ``lam_hint`` warm-starts the λ-bisection from a previous solve (the
+    rail-subset sweep passes the last subset's λ*), shrinking both the
+    exponential bracket search and the bisection itself.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Sequence
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -43,43 +50,50 @@ class SolverStats:
     edges_explored: int = 0
 
 
-def dp_best_path(problem: ScheduleProblem, mu: float) -> list[int]:
-    """Single shortest path under per-state cost ``e + mu·t``."""
-    t0, e0 = problem.op_arrays(0)
-    cost = e0 + mu * t0
-    parents: list[np.ndarray] = []
-    for i in range(1, problem.n_layers):
-        tt, et = problem.transition_arrays(i - 1)
-        edge = et + mu * tt                      # [S_prev, S_i]
-        tot = cost[:, None] + edge
-        parent = np.argmin(tot, axis=0)
-        ti, ei = problem.op_arrays(i)
-        cost = tot[parent, np.arange(tot.shape[1])] + ei + mu * ti
-        parents.append(parent)
-    # backtrack
-    s = int(np.argmin(cost))
-    path = [s]
-    for parent in reversed(parents):
-        s = int(parent[s])
-        path.append(s)
-    path.reverse()
-    return path
+# -------------------------------------------------------------- DP kernel
 
+def dp_paths(problem: ScheduleProblem, *, w_e: float = 1.0,
+             w_t: float = 0.0, k: int = 1) -> list[list[int]]:
+    """The one DP kernel: k globally-best paths under ``w_e·e + w_t·t``.
 
-def kbest_paths(problem: ScheduleProblem, mu: float,
-                k: int) -> list[list[int]]:
-    """k globally-best paths under ``e + mu·t`` (k-best DP frontier)."""
+    ``k == 1`` uses the plain argmin recurrence; ``k > 1`` carries a
+    k-best frontier per state.  Both share the same edge weighting and
+    backtrack structure.
+    """
     L = problem.n_layers
     t0, e0 = problem.op_arrays(0)
+
+    def node(i: int) -> np.ndarray:
+        t, e = problem.op_arrays(i)
+        return w_e * e + w_t * t
+
+    if k == 1:
+        cost = w_e * e0 + w_t * t0
+        parents: list[np.ndarray] = []
+        for i in range(1, L):
+            tt, et = problem.transition_arrays(i - 1)
+            edge = w_e * et + w_t * tt               # [S_prev, S_i]
+            tot = cost[:, None] + edge
+            parent = np.argmin(tot, axis=0)
+            cost = tot[parent, np.arange(tot.shape[1])] + node(i)
+            parents.append(parent)
+        s = int(np.argmin(cost))
+        path = [s]
+        for parent in reversed(parents):
+            s = int(parent[s])
+            path.append(s)
+        path.reverse()
+        return [path]
+
     s0 = len(e0)
     costs = np.full((s0, k), np.inf)
-    costs[:, 0] = e0 + mu * t0
+    costs[:, 0] = w_e * e0 + w_t * t0
     # parent bookkeeping: (layer, state, rank) -> (prev_state, prev_rank)
     back: list[tuple[np.ndarray, np.ndarray]] = []
 
     for i in range(1, L):
         tt, et = problem.transition_arrays(i - 1)
-        edge = et + mu * tt                       # [Sp, Sn]
+        edge = w_e * et + w_t * tt                    # [Sp, Sn]
         sp, sn = edge.shape
         cand = (costs[:, :, None] + edge[:, None, :]).reshape(sp * k, sn)
         kk = min(k, sp * k)
@@ -88,10 +102,9 @@ def kbest_paths(problem: ScheduleProblem, mu: float,
         order = np.argsort(vals, axis=0)
         idx = np.take_along_axis(idx, order, axis=0)
         vals = np.take_along_axis(vals, order, axis=0)
-        ti, ei = problem.op_arrays(i)
         new_costs = np.full((sn, k), np.inf)
-        new_costs[:, :kk] = vals.T + (ei + mu * ti)[:, None]
-        prev_state = (idx // k).T                 # [Sn, kk]
+        new_costs[:, :kk] = vals.T + node(i)[:, None]
+        prev_state = (idx // k).T                     # [Sn, kk]
         prev_rank = (idx % k).T
         ps = np.zeros((sn, k), dtype=np.int64)
         pr = np.zeros((sn, k), dtype=np.int64)
@@ -115,33 +128,32 @@ def kbest_paths(problem: ScheduleProblem, mu: float,
     return paths
 
 
+def dp_best_path(problem: ScheduleProblem, mu: float) -> list[int]:
+    """Single shortest path under per-state cost ``e + mu·t``."""
+    return dp_paths(problem, w_e=1.0, w_t=mu, k=1)[0]
+
+
+def kbest_paths(problem: ScheduleProblem, mu: float,
+                k: int) -> list[list[int]]:
+    """k globally-best paths under ``e + mu·t`` (k-best DP frontier)."""
+    return dp_paths(problem, w_e=1.0, w_t=mu, k=k)
+
+
 def min_time_path(problem: ScheduleProblem) -> list[int]:
     """Fastest possible schedule (λ → ∞ limit): minimize time only."""
-    t0, _ = problem.op_arrays(0)
-    cost = t0.astype(float)
-    parents = []
-    for i in range(1, problem.n_layers):
-        tt, _ = problem.transition_arrays(i - 1)
-        tot = cost[:, None] + tt
-        parent = np.argmin(tot, axis=0)
-        ti, _ = problem.op_arrays(i)
-        cost = tot[parent, np.arange(tot.shape[1])] + ti
-        parents.append(parent)
-    s = int(np.argmin(cost))
-    path = [s]
-    for parent in reversed(parents):
-        s = int(parent[s])
-        path.append(s)
-    path.reverse()
-    return path
+    return dp_paths(problem, w_e=0.0, w_t=1.0, k=1)[0]
 
+
+# ------------------------------------------------------------- λ search
 
 def solve_lambda_dp(
     problem: ScheduleProblem,
     *,
     k_candidates: int = 10,
     bisect_iters: int = 48,
+    bisect_rel_tol: float = 0.0,
     collect_idle_branches: bool = True,
+    lam_hint: float | None = None,
 ) -> tuple[dict | None, list[dict], SolverStats]:
     """λ-DP with bisection; returns (best, feasible_candidates, stats).
 
@@ -149,6 +161,11 @@ def solve_lambda_dp(
     by the weighted search; ``feasible_candidates`` are the ≤k best
     distinct feasible paths (input to refinement).  Returns ``best=None``
     when even the fastest schedule misses the deadline.
+
+    ``lam_hint`` seeds the feasibility bracket with a previous solve's
+    λ* (warm start); ``bisect_rel_tol`` terminates the bisection once the
+    bracket is relatively tighter than the tolerance (0 = fixed
+    ``bisect_iters``, the legacy exact behaviour).
     """
     stats = SolverStats()
     tic = time.perf_counter()
@@ -156,19 +173,28 @@ def solve_lambda_dp(
     stats.edges_explored = problem.n_edges()
 
     fastest = min_time_path(problem)
-    fastest_eval = problem.evaluate(fastest)
-    if not fastest_eval["feasible"]:
+    if not problem.evaluate(fastest)["feasible"]:
         stats.wall_time_s = time.perf_counter() - tic
         return None, [], stats
 
     seen: dict[tuple, dict] = {}
 
+    def consider_all(paths: Iterable[Sequence[int]]) -> list[dict]:
+        """Batch-evaluate every not-yet-seen path in one vectorized shot."""
+        keys = [tuple(p) for p in paths]
+        fresh = []
+        for key in keys:
+            if key not in seen and key not in fresh:
+                fresh.append(key)
+        if fresh:
+            batch = problem.evaluate_paths([list(key) for key in fresh])
+            for j, key in enumerate(fresh):
+                seen[key] = ScheduleProblem.result_row(batch, j)
+            stats.candidates_evaluated += len(fresh)
+        return [seen[key] for key in keys]
+
     def consider(path: Sequence[int]) -> dict:
-        key = tuple(path)
-        if key not in seen:
-            seen[key] = problem.evaluate(path)
-            stats.candidates_evaluated += 1
-        return seen[key]
+        return consider_all([path])[0]
 
     consider(fastest)
 
@@ -183,8 +209,10 @@ def solve_lambda_dp(
             feasible_at_zero = r["feasible"]
 
     if not feasible_at_zero:
-        # exponential search for a feasible λ, then bisect
+        # bracket a feasible λ (warm-started or exponential), then bisect
         lam_lo, lam_hi = 0.0, max(problem.idle.p_idle, 1e-3)
+        if lam_hint is not None and lam_hint > 0.0:
+            lam_hi = lam_hint
         for _ in range(80):
             stats.dp_calls += 1
             r = consider(dp_best_path(problem, lam_hi))
@@ -193,6 +221,9 @@ def solve_lambda_dp(
             lam_lo = lam_hi
             lam_hi *= 4.0
         for _ in range(bisect_iters):
+            if bisect_rel_tol > 0.0 and \
+                    lam_hi - lam_lo <= bisect_rel_tol * lam_hi:
+                break
             stats.lambda_iterations += 1
             lam = 0.5 * (lam_lo + lam_hi)
             stats.dp_calls += 1
@@ -203,20 +234,18 @@ def solve_lambda_dp(
                 lam_lo = lam
         stats.lambda_star = lam_hi
         # enrich candidates with the k-best frontier at the critical λ
-        for p in kbest_paths(problem, lam_hi, k_candidates):
-            consider(p)
+        frontier = kbest_paths(problem, lam_hi, k_candidates)
         if collect_idle_branches:
-            for p in kbest_paths(
-                    problem, lam_hi - problem.idle.p_sleep, k_candidates):
-                consider(p)
+            frontier += kbest_paths(
+                problem, lam_hi - problem.idle.p_sleep, k_candidates)
+        consider_all(frontier)
     else:
         # deadline slack is abundant: idle-priced unconstrained optima
-        for p in kbest_paths(problem, 0.0, k_candidates):
-            consider(p)
+        frontier = kbest_paths(problem, 0.0, k_candidates)
         if collect_idle_branches:
-            for p in kbest_paths(problem, -problem.idle.p_sleep,
-                                 k_candidates):
-                consider(p)
+            frontier += kbest_paths(problem, -problem.idle.p_sleep,
+                                    k_candidates)
+        consider_all(frontier)
 
     feas = sorted((r for r in seen.values() if r["feasible"]),
                   key=lambda r: r["e_total"])

@@ -1,111 +1,41 @@
 """Top-level compiler driver (paper §3.3 + §6 policy definitions).
 
-``compile_power_schedule`` runs the full PF-DNN pipeline: characterize
-layers → bank plan → (per rail subset) build the layered state graph →
-prune → λ-DP → refinement → rail selection → emit the PowerSchedule.
+``compile_power_schedule`` runs the staged PF-DNN pipeline:
 
-Policies reproduced for the paper's comparisons (§6):
-  baseline       fixed V_max everywhere, no gating, active idle — the
-                 "aggressive baseline without power orchestration" [5]
-  gating         baseline + fine-grained RRAM bank gating [26, 27]
-  greedy         marginal-utility layer-wise DVFS on evenly spaced rails
-  greedy_gating  both of the above
-  pfdnn          the proposed method: unified problem, λ-DP + refinement
-                 + structure pruning + optimized rail selection
-  pfdnn_even     pfdnn restricted to evenly spaced rails (§6.3 ablation)
-  pfdnn_nopp     pfdnn without pruning (solver-runtime ablation, §6.5)
-  ilp            exact oracle on the pfdnn-selected rails (§4.3)
+  characterize layers → bank plan → master state table  (CompilationContext)
+  → policy lookup                                       (policy registry)
+  → per-subset solve (slice view → prune → λ-DP → refinement)
+  → rail selection (warm-started, incumbent-cut sweep)
+  → emit the PowerSchedule
+
+The per-policy solve strategies live in :mod:`repro.core.policies`; the
+shared precomputation lives in :mod:`repro.core.context`.  This module
+is only the driver: validate, build the context, dispatch.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Sequence
 
-from repro.core.edge_builder import build_edge_problem, build_idle_model
-from repro.core.greedy import solve_greedy
-from repro.core.ilp import solve_ilp
-from repro.core.lambda_dp import solve_lambda_dp
-from repro.core.problem import ScheduleProblem
-from repro.core.pruning import prune_problem, unprune_path
-from repro.core.rails import (
-    all_rail_subsets,
-    evenly_spaced_rails,
-    select_rails,
+from repro.core.context import CompilationContext
+from repro.core.policies import (          # noqa: F401  (re-exports)
+    OrchestratorConfig,
+    get_policy,
+    policy_names,
+    register_policy,
 )
-from repro.core.refinement import refine_candidates
 from repro.core.schedule import PowerSchedule
 from repro.hw.edge40nm import Edge40nmAccelerator, EDGE40NM_DEFAULT
-from repro.perfmodel.gating import plan_banks
-from repro.perfmodel.layer_costs import LayerSpec, characterize_network
+from repro.perfmodel.layer_costs import LayerSpec
 
-POLICIES = ("baseline", "gating", "greedy", "greedy_gating",
-            "pfdnn", "pfdnn_even", "pfdnn_nopp", "ilp")
-
-
-@dataclasses.dataclass
-class OrchestratorConfig:
-    policy: str = "pfdnn"
-    n_max_rails: int = 3
-    e_switch_nom: float | None = None   # None → accelerator default (1 nJ)
-    k_candidates: int = 10              # §4.3: up to ten candidate paths
-    max_moves: int = 8                  # §4.3: up to eight replacement moves
-    prune: bool = True
-    refine: bool = True
-    ilp_time_limit: float = 300.0
-
-
-def _emit(name: str, policy: str, problem: ScheduleProblem, result: dict,
-          plan, gating: bool, stats: dict) -> PowerSchedule:
-    volts = [problem.layer_states[i][s].voltages
-             for i, s in enumerate(result["path"])]
-    awake = [plan.awake_banks(i, gating)
-             for i in range(problem.n_layers)]
-    return PowerSchedule(
-        policy=policy,
-        network=name,
-        rails=problem.rails,
-        layer_voltages=volts,
-        awake_banks=awake,
-        t_max=problem.t_max,
-        t_infer=result["t_infer"],
-        e_total=result["e_total"],
-        e_op=result["e_op"],
-        e_trans=result["e_trans"],
-        e_idle=result["e_idle"],
-        z_active_idle=result["z"],
-        n_rail_switches=result["n_rail_switches"],
-        feasible=result["feasible"],
-        solver_stats=stats,
-    )
-
-
-def _solve_pfdnn_on_rails(problem: ScheduleProblem, cfg: OrchestratorConfig
-                          ) -> tuple[dict | None, dict]:
-    """λ-DP (+ pruning, + refinement) on one rail subset."""
-    stats: dict = {}
-    target = problem
-    index_maps = None
-    if cfg.prune:
-        target, pinfo = prune_problem(problem)
-        index_maps = pinfo.pop("index_maps")
-        stats["pruning"] = pinfo
-    best, candidates, sstats = solve_lambda_dp(
-        target, k_candidates=cfg.k_candidates)
-    stats["lambda_dp"] = dataclasses.asdict(sstats)
-    if best is None:
-        return None, stats
-    if cfg.refine and candidates:
-        best, moves = refine_candidates(
-            target, candidates,
-            max_candidates=cfg.k_candidates, max_moves=cfg.max_moves)
-        stats["lambda_dp"]["refinement_moves"] = moves
-    if index_maps is not None:
-        # re-express in the unpruned problem for reporting
-        orig_path = unprune_path(best["path"], index_maps)
-        best = problem.evaluate(orig_path)
-    return best, stats
+# registration order matches the paper's §6 comparison order.  Resolved
+# lazily so policies registered after import (the registry's whole point)
+# show up in ``repro.core.orchestrator.POLICIES`` too.
+def __getattr__(name: str):
+    if name == "POLICIES":
+        return policy_names()
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
 def compile_power_schedule(
@@ -122,88 +52,8 @@ def compile_power_schedule(
     (beyond the model's maximum feasible inference rate).
     """
     cfg = cfg or OrchestratorConfig()
-    if cfg.policy not in POLICIES:
-        raise ValueError(f"unknown policy {cfg.policy!r}; one of {POLICIES}")
-    t_max = 1.0 / target_rate_hz
-    costs = characterize_network(specs, acc)
-    plan = plan_banks(costs, acc)
-    levels = acc.levels()
-    tic = time.perf_counter()
-
-    def build(rails, *, gating, allow_sleep):
-        return build_edge_problem(
-            costs, plan, acc, rails, t_max, gating=gating,
-            allow_sleep=allow_sleep, e_switch_nom=cfg.e_switch_nom,
-            name=network)
-
-    pol = cfg.policy
-    if pol in ("baseline", "gating"):
-        gating = pol == "gating"
-        problem = build((acc.v_max,), gating=gating, allow_sleep=gating)
-        # single rail ⇒ one state per layer at V_max; with gating enabled,
-        # weightless layers also expose an RRAM-gated state — take the
-        # per-layer minimum-energy one (that IS the gating behaviour)
-        import numpy as _np
-
-        path = [int(_np.argmin(problem.op_arrays(i)[1]))
-                for i in range(problem.n_layers)]
-        result = problem.evaluate(path)
-        if not result["feasible"]:
-            return None
-        return _emit(network, pol, problem, result, plan, gating,
-                     {"wall_time_s": time.perf_counter() - tic})
-
-    if pol in ("greedy", "greedy_gating"):
-        gating = pol == "greedy_gating"
-        rails = evenly_spaced_rails(levels, cfg.n_max_rails)
-        problem = build(rails, gating=gating, allow_sleep=gating)
-        result = solve_greedy(problem)
-        if result is None:
-            return None
-        return _emit(network, pol, problem, result, plan, gating,
-                     {"wall_time_s": time.perf_counter() - tic})
-
-    if pol in ("pfdnn", "pfdnn_even", "pfdnn_nopp"):
-        cfg_local = dataclasses.replace(
-            cfg, prune=(cfg.prune and pol != "pfdnn_nopp"))
-        problems: dict[tuple, ScheduleProblem] = {}
-
-        def solve_subset(rails: tuple[float, ...]) -> dict | None:
-            problem = build(rails, gating=True, allow_sleep=True)
-            best, _ = _solve_pfdnn_on_rails(problem, cfg_local)
-            if best is not None:
-                problems[rails] = problem
-                best = dict(best)
-                best["rails"] = rails
-            return best
-
-        if pol == "pfdnn_even":
-            subsets = [evenly_spaced_rails(levels, k)
-                       for k in range(1, cfg.n_max_rails + 1)]
-        else:
-            subsets = all_rail_subsets(levels, cfg.n_max_rails)
-        best, best_rails, sel_stats = select_rails(
-            levels, cfg.n_max_rails, solve_subset, subsets=subsets)
-        if best is None or best_rails is None:
-            return None
-        problem = problems[best_rails]
-        sel_stats["wall_time_s"] = time.perf_counter() - tic
-        return _emit(network, pol, problem, best, plan, True, sel_stats)
-
-    if pol == "ilp":
-        # oracle on the PF-DNN-selected rails (reference solver, §4.3)
-        pf = compile_power_schedule(
-            specs, target_rate_hz,
-            cfg=dataclasses.replace(cfg, policy="pfdnn"),
-            acc=acc, network=network)
-        if pf is None:
-            return None
-        problem = build(pf.rails, gating=True, allow_sleep=True)
-        result = solve_ilp(problem, time_limit=cfg.ilp_time_limit)
-        if not result.get("feasible"):
-            return None
-        return _emit(network, "ilp", problem, result, plan, True,
-                     {"wall_time_s": time.perf_counter() - tic,
-                      "ilp_wall_time_s": result.get("wall_time_s")})
-
-    raise AssertionError(pol)
+    policy = get_policy(cfg.policy)
+    ctx = CompilationContext(
+        specs, target_rate_hz, acc=acc, network=network,
+        e_switch_nom=cfg.e_switch_nom)
+    return policy(ctx, cfg)

@@ -62,15 +62,41 @@ class IdleModel:
         return int(self.p_idle * slack <
                    self.e_sleep_wake + self.p_sleep * slack)
 
+    def energy_batch(self, slack: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`energy` over an array of slacks."""
+        slack = np.asarray(slack, dtype=float)
+        active = self.p_idle * slack
+        if not self.allow_sleep:
+            return np.where(slack > 0, active, 0.0)
+        sleep = self.e_sleep_wake + self.p_sleep * slack
+        e = np.where(slack > self.t_sleep_wake,
+                     np.minimum(active, sleep), active)
+        return np.where(slack > 0, e, 0.0)
+
+    def z_choice_batch(self, slack: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`z_choice` over an array of slacks."""
+        slack = np.asarray(slack, dtype=float)
+        forced_active = (slack <= 0) | (slack <= self.t_sleep_wake)
+        if not self.allow_sleep:
+            return np.ones(slack.shape, dtype=np.int64)
+        active_cheaper = (self.p_idle * slack
+                          < self.e_sleep_wake + self.p_sleep * slack)
+        return np.where(forced_active, 1,
+                        active_cheaper.astype(np.int64))
+
 
 def _pairwise_transition(tm: TransitionModel,
                          va: np.ndarray, vb: np.ndarray
-                         ) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorized T_trans / E_trans between state sets.
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized T_trans / E_trans / rail-switch flag between state sets.
 
     ``va``: [Sa, D] voltages of layer i's states; ``vb``: [Sb, D] of layer
     i+1.  Domains switch in parallel → latency is the max over domains;
     energies add.  Matches :class:`TransitionModel` semantics exactly.
+
+    The third array flags state pairs whose crossing performs a *true*
+    rail switch on at least one domain (a voltage change where neither
+    endpoint is gated) — power-gating entries/exits are not rail switches.
     """
     a = va[:, None, :]   # [Sa, 1, D]
     b = vb[None, :, :]   # [1, Sb, D]
@@ -92,7 +118,8 @@ def _pairwise_transition(tm: TransitionModel,
                  np.where(lo == V_GATED, c * hi**2, c * (hi**2 - lo**2)),
                  0.0)
     e_trans = e.sum(axis=-1)
-    return t_trans, e_trans
+    n_switch = rail_switch.any(axis=-1).astype(np.int64)
+    return t_trans, e_trans, n_switch
 
 
 @dataclasses.dataclass
@@ -113,7 +140,11 @@ class ScheduleProblem:
                       for states in self.layer_states]
         self._volts = [np.array([s.voltages for s in states])
                        for states in self.layer_states]
-        self._trans_cache: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        # per adjacent-layer pair: (T_trans, E_trans, rail-switch flag).
+        # May be pre-populated by CompilationContext (shared master-table
+        # slices) or prune_problem (parent slices) instead of recomputed.
+        self._trans_cache: dict[
+            int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
 
     # -- accessors ----------------------------------------------------
     @property
@@ -132,45 +163,95 @@ class ScheduleProblem:
     def op_arrays(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         return self._t_op[i], self._e_op[i]
 
-    def transition_arrays(self, i: int) -> tuple[np.ndarray, np.ndarray]:
-        """(T_trans, E_trans) matrices between layer i and i+1 states."""
+    def _ensure_trans(self, i: int
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         if i not in self._trans_cache:
             self._trans_cache[i] = _pairwise_transition(
                 self.transition_model, self._volts[i], self._volts[i + 1])
         return self._trans_cache[i]
 
+    def transition_arrays(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """(T_trans, E_trans) matrices between layer i and i+1 states."""
+        tt, et, _ = self._ensure_trans(i)
+        return tt, et
+
+    def switch_arrays(self, i: int) -> np.ndarray:
+        """[S_i, S_{i+1}] flag: crossing performs a true rail switch
+        (voltage change with neither endpoint gated) on ≥1 domain."""
+        return self._ensure_trans(i)[2]
+
     # -- schedule evaluation -------------------------------------------
-    def evaluate(self, path: Sequence[int]) -> dict:
-        """Exact E_tot / T_infer of a schedule (eq. 1–2), incl. idle."""
-        assert len(path) == self.n_layers
-        t = e = 0.0
-        e_trans_total = t_trans_total = 0.0
-        n_switches = 0
-        for i, s in enumerate(path):
-            t += self._t_op[i][s]
-            e += self._e_op[i][s]
+    def evaluate_paths(self, paths) -> dict[str, np.ndarray]:
+        """Batched exact evaluation of P schedules in one shot.
+
+        ``paths``: [P, L] integer state indices (anything array-like).
+        Returns a dict of [P]-shaped arrays with the same keys/semantics
+        as :meth:`evaluate` (plus ``paths`` echoing the input matrix).
+        All P schedules are costed with vectorized gathers — no per-layer
+        Python loop over candidates.
+        """
+        p = np.atleast_2d(np.asarray(paths, dtype=np.int64))
+        assert p.shape[1] == self.n_layers, \
+            f"paths must be [P, {self.n_layers}], got {p.shape}"
+        n = p.shape[0]
+        t_op = np.zeros(n)
+        e_op = np.zeros(n)
+        t_trans = np.zeros(n)
+        e_trans = np.zeros(n)
+        n_switch = np.zeros(n, dtype=np.int64)
+        for i in range(self.n_layers):
+            idx = p[:, i]
+            t_op += self._t_op[i][idx]
+            e_op += self._e_op[i][idx]
             if i + 1 < self.n_layers:
-                tt, et = self.transition_arrays(i)
-                t_trans_total += tt[s, path[i + 1]]
-                e_trans_total += et[s, path[i + 1]]
-                if not np.array_equal(self._volts[i][s],
-                                      self._volts[i + 1][path[i + 1]]):
-                    n_switches += 1
-        t_infer = t + t_trans_total
+                tt, et, sw = self._ensure_trans(i)
+                nxt = p[:, i + 1]
+                t_trans += tt[idx, nxt]
+                e_trans += et[idx, nxt]
+                n_switch += sw[idx, nxt]
+        t_infer = t_op + t_trans
         slack = self.t_max - t_infer
-        e_idle = self.idle.energy(slack)
+        e_idle = self.idle.energy_batch(slack)
         return {
-            "path": list(map(int, path)),
-            "t_infer": float(t_infer),
-            "feasible": bool(t_infer <= self.t_max + 1e-15),
-            "e_op": float(e),
-            "e_trans": float(e_trans_total),
-            "t_trans": float(t_trans_total),
-            "e_idle": float(e_idle),
-            "e_total": float(e + e_trans_total + e_idle),
-            "z": self.idle.z_choice(slack),
-            "n_rail_switches": int(n_switches),
+            "paths": p,
+            "t_infer": t_infer,
+            "feasible": t_infer <= self.t_max + 1e-15,
+            "e_op": e_op,
+            "e_trans": e_trans,
+            "t_trans": t_trans,
+            "e_idle": e_idle,
+            "e_total": e_op + e_trans + e_idle,
+            "z": self.idle.z_choice_batch(slack),
+            "n_rail_switches": n_switch,
         }
+
+    @staticmethod
+    def result_row(batch: dict[str, np.ndarray], j: int) -> dict:
+        """Extract evaluation ``j`` of an :meth:`evaluate_paths` batch as
+        a scalar dict in the :meth:`evaluate` format."""
+        return {
+            "path": [int(s) for s in batch["paths"][j]],
+            "t_infer": float(batch["t_infer"][j]),
+            "feasible": bool(batch["feasible"][j]),
+            "e_op": float(batch["e_op"][j]),
+            "e_trans": float(batch["e_trans"][j]),
+            "t_trans": float(batch["t_trans"][j]),
+            "e_idle": float(batch["e_idle"][j]),
+            "e_total": float(batch["e_total"][j]),
+            "z": int(batch["z"][j]),
+            "n_rail_switches": int(batch["n_rail_switches"][j]),
+        }
+
+    def evaluate(self, path: Sequence[int]) -> dict:
+        """Exact E_tot / T_infer of a schedule (eq. 1–2), incl. idle.
+
+        ``n_rail_switches`` counts layer boundaries whose crossing does a
+        true rail switch on ≥1 domain; power-gating entries/exits do not
+        count (they match the ``rail_switch`` mask of the transition
+        model, not mere voltage-vector inequality).
+        """
+        assert len(path) == self.n_layers
+        return self.result_row(self.evaluate_paths([list(path)]), 0)
 
     def schedule_space_upper_bound(self, n_levels: int, n_max: int,
                                    n_domains: int) -> float:

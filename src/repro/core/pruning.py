@@ -89,6 +89,12 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
         rails=problem.rails,
         name=problem.name + "+pruned",
     )
+    # share the parent's already-materialized transition matrices as
+    # index slices — the pruned view never re-runs _pairwise_transition
+    # for pairs the parent (e.g. a CompilationContext slice) already has
+    for i, (tt, et, sw) in problem._trans_cache.items():
+        sel = np.ix_(index_maps[i], index_maps[i + 1])
+        pruned._trans_cache[i] = (tt[sel], et[sel], sw[sel])
     info = {
         "states_before": problem.n_states(),
         "states_after": pruned.n_states(),

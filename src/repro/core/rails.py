@@ -40,9 +40,10 @@ def evenly_spaced_rails(levels: Sequence[float],
 def select_rails(
     levels: Sequence[float],
     n_max: int,
-    solve_fn: Callable[[tuple[float, ...]], dict | None],
+    solve_fn: Callable[..., dict | None],
     *,
     subsets: Iterable[tuple[float, ...]] | None = None,
+    bound_fn: Callable[[tuple[float, ...]], float] | None = None,
 ) -> tuple[dict | None, tuple[float, ...] | None, dict]:
     """Enumerate rail subsets, solve each, keep the best feasible.
 
@@ -51,11 +52,23 @@ def select_rails(
     skips subsets whose maximum rail is lower than the smallest max-rail
     already proven infeasible (less voltage headroom ⇒ still infeasible,
     since every per-layer latency is monotone non-increasing in voltage).
+
+    Warm-started sweep: when ``solve_fn`` declares a ``hint`` parameter
+    it is passed (by keyword) a hint dict ``{"lam_hint": λ* of the last
+    solved subset}`` so λ-bisection can start near the answer.  When
+    ``bound_fn(subset)`` (a *lower bound* on any
+    schedule's ``e_total`` under that subset) is given, subsets whose
+    bound cannot beat the incumbent are cut without solving — since the
+    bound is sound this never changes the selected subset (ties keep the
+    earlier incumbent, exactly as the strict ``<`` comparison does).
     """
     best: dict | None = None
     best_subset: tuple[float, ...] | None = None
     infeasible_vmax_ceiling = -np.inf     # max rail of infeasible subsets
-    stats = {"subsets_total": 0, "subsets_solved": 0, "subsets_skipped": 0}
+    stats = {"subsets_total": 0, "subsets_solved": 0,
+             "subsets_skipped": 0, "subsets_cut": 0}
+    hint: dict = {"lam_hint": None}
+    takes_hint = _accepts_hint(solve_fn)
 
     subset_list = list(subsets) if subsets is not None else \
         all_rail_subsets(levels, n_max)
@@ -68,13 +81,41 @@ def select_rails(
         if max(subset) <= infeasible_vmax_ceiling:
             stats["subsets_skipped"] += 1
             continue
-        result = solve_fn(subset)
+        # NOTE: a cut subset is never solved, so we cannot learn whether
+        # it was also deadline-infeasible — the vmax ceiling stays put
+        # and later lower-max subsets pay a bound_fn call the ceiling
+        # skip would have saved.  Wasted work only, never a wrong pick.
+        if bound_fn is not None and best is not None and \
+                bound_fn(subset) >= best["e_total"]:
+            stats["subsets_cut"] += 1
+            continue
+        result = solve_fn(subset, hint=hint) if takes_hint \
+            else solve_fn(subset)
         stats["subsets_solved"] += 1
         if result is None:
             infeasible_vmax_ceiling = max(infeasible_vmax_ceiling,
                                           max(subset))
             continue
+        if result.get("lambda_star"):
+            hint["lam_hint"] = result["lambda_star"]
         if best is None or result["e_total"] < best["e_total"]:
             best = result
             best_subset = subset
     return best, best_subset, stats
+
+
+def _accepts_hint(solve_fn: Callable) -> bool:
+    """True when ``solve_fn`` explicitly declares a ``hint`` parameter
+    (or accepts **kwargs).  The hint is always passed by keyword, so a
+    solver with an unrelated second positional (``def solve(subset,
+    retries=3)``) is never handed the hint dict by accident."""
+    import inspect
+
+    try:
+        sig = inspect.signature(solve_fn)
+    except (TypeError, ValueError):
+        return False
+    if "hint" in sig.parameters:
+        p = sig.parameters["hint"]
+        return p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
+    return any(p.kind == p.VAR_KEYWORD for p in sig.parameters.values())

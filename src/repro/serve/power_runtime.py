@@ -50,6 +50,10 @@ class IntervalLedger:
     deadline: float
     met_deadline: bool
     z_active_idle: int
+    # layer boundaries whose crossing performs a true rail switch on ≥1
+    # domain (gating entries/exits excluded — same semantics as the
+    # compiler's ScheduleProblem evaluators)
+    n_rail_switches: int = 0
 
 
 class PowerRuntime:
@@ -73,6 +77,7 @@ class PowerRuntime:
         ledger: list[LayerLedger] = []
         t = 0.0
         e = 0.0
+        n_switches = 0
         prev_v: tuple[float, ...] | None = None
         for i, (cost, volts) in enumerate(
                 zip(self.costs, self.schedule.layer_voltages)):
@@ -83,6 +88,9 @@ class PowerRuntime:
                            for a, b in zip(prev_v, volts))
                 e_tr = sum(tm.energy(a, b)
                            for a, b in zip(prev_v, volts))
+                if any(a != b and a != V_GATED and b != V_GATED
+                       for a, b in zip(prev_v, volts)):
+                    n_switches += 1
             # op execution at the selected state
             awake = self.schedule.awake_banks[i]
             times = []
@@ -123,6 +131,7 @@ class PowerRuntime:
             deadline=self.schedule.t_max,
             met_deadline=t <= self.schedule.t_max + 1e-15,
             z_active_idle=self.idle.z_choice(slack),
+            n_rail_switches=n_switches,
         )
 
 

@@ -7,6 +7,19 @@ import pytest
 
 from repro.core.problem import IdleModel, ScheduleProblem, StateCost
 from repro.hw.dvfs import TransitionModel
+from repro.hw.edge40nm import EDGE40NM_DEFAULT
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network
+
+
+def max_rate(name: str, acc=EDGE40NM_DEFAULT) -> float:
+    """Max feasible inference rate = 1 / latency with all domains at
+    V_max (the fastest any schedule can run).  Golden keys and operating
+    points are derived from this — keep it the single test-side copy."""
+    costs = characterize_network(edge_network(name), acc)
+    fs = [acc.dvfs(d).freq(acc.v_max) for d in range(3)]
+    t = sum(max(cy / f for cy, f in zip(c.cycles, fs)) for c in costs)
+    return 1.0 / t
 
 
 def random_problem(rng: np.random.Generator, *, n_layers: int,

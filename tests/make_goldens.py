@@ -1,0 +1,66 @@
+"""Capture golden compiler outputs for the pipeline-equivalence test.
+
+Run ONCE against a known-good implementation (originally the
+pre-refactor monolithic orchestrator) to freeze per-policy results:
+
+    PYTHONPATH=src python tests/make_goldens.py
+
+The staged pipeline must reproduce these `e_total` / `t_infer` / `path`
+(layer voltage assignments) values to float tolerance — see
+tests/test_pipeline_equivalence.py.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from conftest import max_rate
+from repro.core import OrchestratorConfig, POLICIES, compile_power_schedule
+from repro.models.edge_cnn import edge_network
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "pipeline.json"
+
+# (network, rate_fraction_of_max, n_max_rails) — small enough to run in
+# CI, large enough to exercise the sweep, pruning, and refinement.
+CASES = [
+    ("squeezenet1.1", 0.90, 2),
+    ("mobilenetv3-small", 0.85, 2),
+    ("squeezenet1.1", 0.50, 3),
+]
+
+
+def main() -> None:
+    out: dict[str, dict] = {}
+    for network, frac, n_rails in CASES:
+        rate = max_rate(network) * frac
+        for policy in POLICIES:
+            if policy == "ilp" and network != "squeezenet1.1":
+                continue                      # keep CI runtime bounded
+            key = f"{network}|{frac}|{n_rails}|{policy}"
+            tic = time.perf_counter()
+            s = compile_power_schedule(
+                edge_network(network), rate,
+                cfg=OrchestratorConfig(policy=policy, n_max_rails=n_rails),
+                network=network)
+            wall = time.perf_counter() - tic
+            if s is None:
+                out[key] = {"feasible": False}
+            else:
+                out[key] = {
+                    "feasible": True,
+                    "e_total": s.e_total,
+                    "t_infer": s.t_infer,
+                    "rails": list(s.rails),
+                    "layer_voltages": [list(v) for v in s.layer_voltages],
+                }
+            print(f"{key}: {wall:.2f}s "
+                  f"{'E=%.6g' % s.e_total if s else 'infeasible'}")
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(out, indent=1))
+    print(f"wrote {GOLDEN_PATH} ({len(out)} cases)")
+
+
+if __name__ == "__main__":
+    main()

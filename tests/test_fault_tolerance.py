@@ -107,6 +107,10 @@ def test_crash_restart_reproduces_uninterrupted_run(tmp_path):
                                    rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="installed jax lacks jax.sharding.AxisType "
+           "(needs a newer jax than this environment ships)")
 def test_elastic_restore_onto_different_sharding(tmp_path):
     """Restore re-places arrays under new shardings (mesh change)."""
     from jax.sharding import NamedSharding, PartitionSpec as P

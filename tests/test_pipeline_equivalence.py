@@ -1,0 +1,232 @@
+"""Staged-pipeline equivalence: the policy-registry + CompilationContext
++ batched-evaluator compiler must reproduce the monolithic pre-refactor
+implementation exactly (golden outputs), and the vectorized evaluators
+must agree with a straightforward scalar reference."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from conftest import max_rate, random_problem
+from repro.core import (
+    CompilationContext,
+    OrchestratorConfig,
+    POLICIES,
+    build_edge_problem,
+    compile_power_schedule,
+    get_policy,
+    register_policy,
+)
+from repro.core.problem import IdleModel, ScheduleProblem, StateCost
+from repro.hw.dvfs import TransitionModel, V_GATED
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network, plan_banks
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "pipeline.json")
+    .read_text())
+
+
+# ----------------------------------------------------- golden equivalence
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_pipeline_matches_pre_refactor_golden(key):
+    """Every policy × config: e_total / t_infer / per-layer voltage path
+    match the frozen pre-refactor outputs to float tolerance."""
+    network, frac, n_rails, policy = key.split("|")
+    golden = GOLDEN[key]
+    rate = max_rate(network) * float(frac)
+    s = compile_power_schedule(
+        edge_network(network), rate,
+        cfg=OrchestratorConfig(policy=policy, n_max_rails=int(n_rails)),
+        network=network)
+    if not golden["feasible"]:
+        assert s is None
+        return
+    assert s is not None
+    assert s.e_total == pytest.approx(golden["e_total"], rel=1e-9)
+    assert s.t_infer == pytest.approx(golden["t_infer"], rel=1e-9)
+    assert list(s.rails) == golden["rails"]
+    assert [list(v) for v in s.layer_voltages] == golden["layer_voltages"]
+
+
+def test_warm_start_does_not_change_the_schedule():
+    """The warm-started, incumbent-cut sweep is an acceleration only."""
+    rate = max_rate("squeezenet1.1") * 0.8
+    specs = edge_network("squeezenet1.1")
+    cold = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(
+            policy="pfdnn", n_max_rails=2, warm_start=False),
+        network="sqz")
+    warm = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(
+            policy="pfdnn", n_max_rails=2, warm_start=True),
+        network="sqz")
+    assert warm.rails == cold.rails
+    assert warm.e_total == pytest.approx(cold.e_total, rel=1e-9)
+    assert warm.layer_voltages == cold.layer_voltages
+
+
+# --------------------------------------------- context slice invariant
+
+def test_context_subset_view_matches_direct_build():
+    """A rail subset sliced from the master table is elementwise
+    identical to the problem the monolithic builder produces."""
+    specs = edge_network("mobilenetv3-small")
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    ctx = CompilationContext(specs, 40.0, acc=ACC, network="mnv3")
+    for rails in [(0.9, 1.1, 1.3), (1.3,), (0.95, 1.2)]:
+        view = ctx.problem_for(rails, gating=True, allow_sleep=True)
+        direct = build_edge_problem(costs, plan, ACC, rails, 1.0 / 40.0)
+        assert view.n_layers == direct.n_layers
+        for i in range(direct.n_layers):
+            assert view.layer_states[i] == direct.layer_states[i]
+        for i in range(direct.n_layers - 1):
+            np.testing.assert_array_equal(
+                view.transition_arrays(i)[0],
+                direct.transition_arrays(i)[0])
+            np.testing.assert_array_equal(
+                view.transition_arrays(i)[1],
+                direct.transition_arrays(i)[1])
+
+
+# ------------------------------------------------- batched evaluators
+
+def _reference_evaluate(problem: ScheduleProblem, path) -> dict:
+    """Straightforward scalar re-implementation (the pre-refactor loop,
+    with the corrected rail-switch semantics)."""
+    t = e = 0.0
+    e_trans = t_trans = 0.0
+    n_switches = 0
+    for i, s in enumerate(path):
+        t += problem._t_op[i][s]
+        e += problem._e_op[i][s]
+        if i + 1 < problem.n_layers:
+            tt, et = problem.transition_arrays(i)
+            t_trans += tt[s, path[i + 1]]
+            e_trans += et[s, path[i + 1]]
+            va = problem._volts[i][s]
+            vb = problem._volts[i + 1][path[i + 1]]
+            if any(a != b and a != V_GATED and b != V_GATED
+                   for a, b in zip(va, vb)):
+                n_switches += 1
+    t_infer = t + t_trans
+    slack = problem.t_max - t_infer
+    e_idle = problem.idle.energy(slack)
+    return {
+        "t_infer": t_infer,
+        "feasible": t_infer <= problem.t_max + 1e-15,
+        "e_op": e, "e_trans": e_trans, "t_trans": t_trans,
+        "e_idle": e_idle,
+        "e_total": e + e_trans + e_idle,
+        "z": problem.idle.z_choice(slack),
+        "n_rail_switches": n_switches,
+    }
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_evaluate_paths_matches_scalar_reference(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=6, n_states=5)
+    paths = [[int(rng.integers(len(s))) for s in prob.layer_states]
+             for _ in range(32)]
+    batch = prob.evaluate_paths(paths)
+    for j, path in enumerate(paths):
+        ref = _reference_evaluate(prob, path)
+        row = ScheduleProblem.result_row(batch, j)
+        scalar = prob.evaluate(path)
+        for key, want in ref.items():
+            assert row[key] == pytest.approx(want, rel=1e-12), key
+            assert scalar[key] == pytest.approx(want, rel=1e-12), key
+        # the rail-switch count must agree exactly batch vs scalar
+        assert row["n_rail_switches"] == scalar["n_rail_switches"] \
+            == ref["n_rail_switches"]
+
+
+def test_rail_switch_count_excludes_gating():
+    """Power-gating entries/exits (V_GATED) are not rail switches."""
+    mk = lambda v: StateCost(voltages=v, t_op=1e-4, e_op=1e-6)
+    layers = [
+        [mk((1.0, 1.0, 1.0))],
+        [mk((1.0, 1.0, V_GATED))],   # gate RRAM: NOT a rail switch
+        [mk((1.0, 1.0, 1.0))],       # wake RRAM: NOT a rail switch
+        [mk((1.1, 1.0, 1.0))],       # compute rail change: IS one
+        [mk((1.1, 1.0, 1.0))],       # no change
+    ]
+    prob = ScheduleProblem(
+        layer_states=layers, t_max=1.0,
+        idle=IdleModel(p_idle=1e-3),
+        transition_model=TransitionModel())
+    r = prob.evaluate([0, 0, 0, 0, 0])
+    assert r["n_rail_switches"] == 1
+    batch = prob.evaluate_paths([[0, 0, 0, 0, 0]])
+    assert int(batch["n_rail_switches"][0]) == 1
+
+
+def test_runtime_ledger_switch_count_matches_compiler():
+    from repro.serve import PowerRuntime
+
+    specs = edge_network("squeezenet1.1")
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    for policy in ("gating", "greedy_gating", "pfdnn_even"):
+        sched = compile_power_schedule(
+            specs, 40.0, cfg=OrchestratorConfig(policy=policy),
+            network="sqz")
+        led = PowerRuntime(sched, costs, plan, ACC).execute_interval()
+        assert led.n_rail_switches == sched.n_rail_switches, policy
+
+
+def test_refine_with_zero_move_budget_is_identity():
+    from repro.core import refine_path
+
+    rng = np.random.default_rng(0)
+    prob = random_problem(rng, n_layers=6, n_states=5)
+    path = [int(rng.integers(len(s))) for s in prob.layer_states]
+    result, moves = refine_path(prob, path, max_moves=0)
+    assert moves == 0
+    assert result["path"] == path
+
+
+# ------------------------------------------------------ policy registry
+
+def test_policy_registry_contents_and_errors():
+    assert POLICIES == ("baseline", "gating", "greedy", "greedy_gating",
+                        "pfdnn", "pfdnn_even", "pfdnn_nopp", "ilp")
+    for name in POLICIES:
+        assert callable(get_policy(name))
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_policy("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("pfdnn")(lambda ctx, cfg: None)
+
+
+def test_custom_policy_plugs_in_without_touching_the_driver():
+    name = "test_vmax_everywhere"
+    try:
+        @register_policy(name)
+        def solve_vmax(ctx, cfg):
+            from repro.core.policies import emit_schedule
+
+            problem = ctx.problem_for((ctx.acc.v_max,), gating=False,
+                                      allow_sleep=False, via_master=False)
+            result = problem.evaluate([0] * problem.n_layers)
+            return emit_schedule(name, ctx, problem, result, {},
+                                 gating=False)
+
+        s = compile_power_schedule(
+            edge_network("squeezenet1.1"), 40.0,
+            cfg=OrchestratorConfig(policy=name), network="sqz")
+        assert s is not None and s.policy == name
+        ref = compile_power_schedule(
+            edge_network("squeezenet1.1"), 40.0,
+            cfg=OrchestratorConfig(policy="baseline"), network="sqz")
+        assert s.e_total == pytest.approx(ref.e_total, rel=1e-12)
+    finally:
+        from repro.core import policies as _p
+
+        _p._REGISTRY.pop(name, None)

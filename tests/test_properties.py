@@ -1,7 +1,11 @@
 """Hypothesis property tests on the system's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from conftest import random_problem
 from repro.core import (

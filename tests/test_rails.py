@@ -1,0 +1,141 @@
+"""Rail-subset machinery: the select_rails dominance shortcut, the
+warm-start hint protocol, the incumbent bound cut, and
+evenly_spaced_rails edge cases (paper §3.3, §6.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core.rails import (
+    all_rail_subsets,
+    evenly_spaced_rails,
+    select_rails,
+)
+
+LEVELS = tuple(round(0.9 + 0.05 * i, 4) for i in range(9))
+
+
+def _synthetic_solver(v_crit: float, rng: np.random.Generator):
+    """Feasible iff max(subset) >= v_crit — matching the monotone
+    assumption the dominance shortcut relies on (per-layer latency is
+    non-increasing in voltage)."""
+    energies: dict[tuple, float] = {}
+
+    def solve(subset):
+        if max(subset) < v_crit:
+            return None
+        if subset not in energies:
+            energies[subset] = float(rng.uniform(1.0, 2.0))
+        return {"e_total": energies[subset], "path": []}
+
+    return solve, energies
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_dominance_shortcut_never_skips_a_feasible_subset(seed):
+    rng = np.random.default_rng(seed)
+    v_crit = float(rng.choice(LEVELS[2:]))
+    solve, energies = _synthetic_solver(v_crit, rng)
+    best, best_subset, stats = select_rails(LEVELS, 3, solve)
+    # brute force over every subset, no shortcut
+    exhaustive = {s: solve(s) for s in all_rail_subsets(LEVELS, 3)}
+    feasible = {s: r for s, r in exhaustive.items() if r is not None}
+    assert best is not None
+    assert best["e_total"] == min(r["e_total"] for r in feasible.values())
+    assert best_subset in feasible
+    # the shortcut only ever skipped infeasible subsets
+    assert stats["subsets_skipped"] > 0
+    assert stats["subsets_solved"] + stats["subsets_skipped"] \
+        == stats["subsets_total"]
+    n_infeasible = sum(r is None for r in exhaustive.values())
+    assert stats["subsets_skipped"] <= n_infeasible
+
+
+def test_all_infeasible_returns_none_and_skips_dominated():
+    solve = lambda subset: None
+    best, best_subset, stats = select_rails(LEVELS, 2, solve)
+    assert best is None and best_subset is None
+    assert stats["subsets_solved"] >= 1
+    # once (1.3,)-headed subsets fail, every lower-max subset is skipped
+    assert stats["subsets_skipped"] > 0
+
+
+def test_hint_protocol_passes_lambda_star():
+    seen_hints = []
+
+    def solve(subset, hint):
+        seen_hints.append(dict(hint))
+        return {"e_total": 2.0 - max(subset),
+                "lambda_star": max(subset) * 10.0}
+
+    best, best_subset, _ = select_rails(LEVELS, 1, solve)
+    assert best_subset == (1.3,)           # highest max rail wins here
+    # first call: no hint yet
+    assert seen_hints[0] == {"lam_hint": None}
+    # later calls carry the previous subset's λ*
+    assert seen_hints[1]["lam_hint"] == pytest.approx(13.0)
+    for h in seen_hints[2:]:
+        assert h["lam_hint"] is not None
+
+
+def test_hint_never_passed_to_unrelated_second_parameter():
+    """A solver without a declared ``hint`` parameter must be called
+    with the subset only — even if it has other optional parameters."""
+    calls = []
+
+    def solve(subset, retries=3):
+        calls.append(retries)
+        return {"e_total": 1.0}
+
+    select_rails(LEVELS, 1, solve)
+    assert all(r == 3 for r in calls)      # default untouched, no dict
+
+
+def test_incumbent_bound_cut_is_sound():
+    """Cutting on a true lower bound never changes the selected subset."""
+    rng = np.random.default_rng(7)
+    energies = {s: float(rng.uniform(1.0, 2.0))
+                for s in all_rail_subsets(LEVELS, 2)}
+
+    def solve(subset):
+        return {"e_total": energies[subset]}
+
+    def bound(subset):
+        return energies[subset] * 0.9      # sound: below the true value
+
+    plain = select_rails(LEVELS, 2, solve)
+    cut = select_rails(LEVELS, 2, solve, bound_fn=bound)
+    assert cut[1] == plain[1]
+    assert cut[0]["e_total"] == plain[0]["e_total"]
+    assert cut[2]["subsets_cut"] > 0
+    assert cut[2]["subsets_solved"] < plain[2]["subsets_solved"]
+
+
+# ------------------------------------------------- evenly_spaced_rails
+
+def test_evenly_spaced_k1_is_vmax():
+    assert evenly_spaced_rails(LEVELS, 1) == (LEVELS[-1],)
+
+
+def test_evenly_spaced_k_at_least_len_levels():
+    assert evenly_spaced_rails(LEVELS, len(LEVELS)) == tuple(LEVELS)
+    # k beyond |V| cannot invent levels: still sorted, unique, ⊆ V
+    rails = evenly_spaced_rails(LEVELS, len(LEVELS) + 3)
+    assert set(rails) <= set(LEVELS)
+    assert list(rails) == sorted(set(rails))
+    assert LEVELS[-1] in rails
+
+
+@pytest.mark.parametrize("k", range(1, 12))
+def test_evenly_spaced_invariants(k):
+    rails = evenly_spaced_rails(LEVELS, k)
+    assert LEVELS[-1] in rails             # V_max always reachable
+    assert list(rails) == sorted(rails)    # sorted ...
+    assert len(set(rails)) == len(rails)   # ... and duplicate-free
+    assert set(rails) <= set(LEVELS)
+    assert 1 <= len(rails) <= min(k, len(LEVELS))
+
+
+def test_evenly_spaced_unsorted_input():
+    shuffled = tuple(reversed(LEVELS))
+    assert evenly_spaced_rails(shuffled, 3) == \
+        evenly_spaced_rails(LEVELS, 3)

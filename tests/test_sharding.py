@@ -12,6 +12,16 @@ import pytest
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
+# These tests drive jax.make_mesh(..., axis_types=jax.sharding.AxisType...)
+# in subprocesses; older jax releases predate that API, and the failures
+# are a toolchain property, not a regression in this repo's code.
+import jax  # noqa: E402
+
+if not hasattr(jax.sharding, "AxisType"):
+    pytestmark = pytest.mark.skip(
+        reason="installed jax lacks jax.sharding.AxisType "
+               "(needs a newer jax than this environment ships)")
+
 
 def run_subprocess(code: str, n_devices: int = 8, timeout: int = 480):
     env = dict(os.environ)

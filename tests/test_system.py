@@ -4,6 +4,7 @@ claims (§6), and the TPU adaptation."""
 import numpy as np
 import pytest
 
+from conftest import max_rate as _max_rate
 from repro.core import (
     IlpBlowupError,
     OrchestratorConfig,
@@ -19,17 +20,6 @@ from repro.core.tpu_adapter import (
 from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
 from repro.models.edge_cnn import EDGE_NETWORKS, edge_network
 from repro.perfmodel import characterize_network, plan_banks
-
-
-def _max_rate(name: str) -> float:
-    """Max feasible inference rate ≈ 1 / latency at V_max."""
-    specs = edge_network(name)
-    costs = characterize_network(specs, ACC)
-    t = 0.0
-    for c in costs:
-        fs = [ACC.dvfs(d).freq(ACC.v_max) for d in range(3)]
-        t += max(cy / f for cy, f in zip(c.cycles, fs))
-    return 1.0 / t
 
 
 def _energy(name: str, rate: float, policy: str) -> float | None:
