@@ -6,6 +6,8 @@ Public API:
   - CompilationContext                       — shared master-table stage
   - register_policy / get_policy             — policy registry
   - solve_lambda_dp / dp_paths / kbest_paths — §4.3 λ-DP search
+  - dp_paths_multi / get_backend            — batched multi-λ DP engine
+    on the pluggable array backend (numpy default, jitted jax opt-in)
   - refine_candidates                        — §4.3 local refinement
   - prune_problem                            — §4.3 structure pruning
   - solve_ilp                                — §4.3 exact oracle
@@ -14,6 +16,7 @@ Public API:
   - compile_power_schedule / PowerSchedule   — §3.3 compiler driver
 """
 
+from repro.core.backend import available_backends, get_backend
 from repro.core.context import CompilationContext
 from repro.core.edge_builder import build_edge_problem, build_idle_model
 from repro.core.greedy import min_energy_path, solve_greedy
@@ -22,6 +25,8 @@ from repro.core.lambda_dp import (
     SolverStats,
     dp_best_path,
     dp_paths,
+    dp_paths_multi,
+    dp_paths_multi_weighted,
     kbest_paths,
     min_time_path,
     solve_lambda_dp,
@@ -57,8 +62,10 @@ __all__ = [
     "ScheduleProblem", "StateCost", "IdleModel",
     "CompilationContext", "register_policy", "get_policy",
     "solve_lambda_dp", "dp_paths", "dp_best_path", "kbest_paths",
+    "dp_paths_multi", "dp_paths_multi_weighted",
     "min_time_path",
     "SolverStats",
+    "get_backend", "available_backends",
     "refine_candidates", "refine_path",
     "prune_problem", "unprune_path",
     "solve_ilp", "IlpBlowupError",

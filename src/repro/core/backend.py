@@ -1,0 +1,365 @@
+"""Pluggable array backend for the solver's numeric hot paths.
+
+The batched multi-λ DP kernel and the batch path evaluator run behind a
+small backend interface so the same solver code executes on plain numpy
+(the dependency-free default) or on ``jax.numpy`` with ``jit`` when jax
+is installed:
+
+  - :class:`NumpyBackend` — the default.  The DP recurrence is
+    numpy-vectorized over ``[K, S_prev, S_next]`` (λ batch × states);
+    per-λ DP paths are bit-identical to the scalar kernel.  The path
+    evaluator sums component costs via dense padded gathers when the
+    padded tensors exist (or the batch amortizes building them) and
+    falls back to the per-layer ragged gather loop otherwise; the two
+    differ from each other — and from the pre-backend evaluator — only
+    in float summation order (last-ulp, inside every test tolerance).
+  - :class:`JaxBackend` — the same kernels as jitted ``lax.scan``
+    programs over *padded* per-layer tensors.  State counts are padded
+    to a power-of-two bucket so rail subsets of the same master table
+    reuse one compilation instead of tracing per subset; float64 is
+    enforced per-call via ``jax.experimental.enable_x64`` so the global
+    x64 flag (and the rest of the repo's float32 jax code) is untouched.
+
+Backend selection: ``get_backend(None)`` honours the ``PFDNN_BACKEND``
+environment variable (``numpy`` | ``jax``), defaulting to numpy, so the
+jax path stays strictly opt-in.
+
+Padding convention (:class:`PaddedArrays`): op costs are padded with 0
+and carry a ``valid`` mask; kernels mask *after* applying the λ weights
+(``inf`` only ever enters post-weighting), so negative idle-priced μ
+never produces ``inf · μ`` NaNs.  Valid states occupy the index prefix
+of every padded axis, which keeps ``argmin`` first-occurrence tie
+breaking identical between the padded and the ragged kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+_ENV_VAR = "PFDNN_BACKEND"
+_DEFAULT = "numpy"
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedArrays:
+    """Dense per-layer tensors of a :class:`ScheduleProblem`.
+
+    ``S`` is the padded state count (power-of-two bucket ≥ the widest
+    layer); valid states sit at indices ``0..sizes[i]-1``.
+    """
+
+    t_op: np.ndarray        # [L, S] float64, padded with 0
+    e_op: np.ndarray        # [L, S] float64, padded with 0
+    valid: np.ndarray       # [L, S] bool
+    t_trans: np.ndarray     # [L-1, S, S] float64, padded with 0
+    e_trans: np.ndarray     # [L-1, S, S] float64, padded with 0
+    switch: np.ndarray      # [L-1, S, S] int64 rail-switch flags
+    sizes: tuple[int, ...]  # true per-layer state counts
+
+    @property
+    def n_layers(self) -> int:
+        return self.t_op.shape[0]
+
+    @property
+    def s_pad(self) -> int:
+        return self.t_op.shape[1]
+
+
+def pad_bucket(n: int) -> int:
+    """Round a state count up to the jit-stable bucket (power of two,
+    minimum 4) so subsets of one master table share compilations.
+    Above 128 states the padding waste of power-of-two buckets
+    outweighs compilation sharing — round to a multiple of 128."""
+    if n > 128:
+        return ((n + 127) // 128) * 128
+    b = 4
+    while b < n:
+        b *= 2
+    return b
+
+
+def build_padded(problem) -> PaddedArrays:
+    """Materialize a problem's padded tensors (see module docstring)."""
+    L = problem.n_layers
+    sizes = tuple(len(s) for s in problem.layer_states)
+    S = pad_bucket(max(sizes))
+    t_op = np.zeros((L, S))
+    e_op = np.zeros((L, S))
+    valid = np.zeros((L, S), dtype=bool)
+    for i in range(L):
+        t, e = problem.op_arrays(i)
+        t_op[i, :sizes[i]] = t
+        e_op[i, :sizes[i]] = e
+        valid[i, :sizes[i]] = True
+    t_trans = np.zeros((max(L - 1, 0), S, S))
+    e_trans = np.zeros((max(L - 1, 0), S, S))
+    switch = np.zeros((max(L - 1, 0), S, S), dtype=np.int64)
+    for i in range(L - 1):
+        tt, et = problem.transition_arrays(i)
+        sw = problem.switch_arrays(i)
+        t_trans[i, :sizes[i], :sizes[i + 1]] = tt
+        e_trans[i, :sizes[i], :sizes[i + 1]] = et
+        switch[i, :sizes[i], :sizes[i + 1]] = sw
+    return PaddedArrays(t_op=t_op, e_op=e_op, valid=valid,
+                        t_trans=t_trans, e_trans=e_trans, switch=switch,
+                        sizes=sizes)
+
+
+# ----------------------------------------------------------- numpy
+
+class NumpyBackend:
+    """Default backend: batched DP via ``[K, S, S]`` numpy reductions."""
+
+    name = "numpy"
+    jitted = False
+
+    def dp_multi(self, padded: PaddedArrays, w_e: np.ndarray,
+                 w_t: np.ndarray) -> np.ndarray:
+        """K best paths under per-state cost ``w_e[k]·e + w_t[k]·t``.
+
+        One DP pass shared by the whole weight batch: the layer loop
+        runs once, every reduction carries the leading K axis.  Returns
+        ``[K, L]`` int64 state indices.  Per-λ results are bit-identical
+        to the scalar :func:`repro.core.lambda_dp.dp_paths` kernel (same
+        op order, same first-occurrence argmin tie breaking).
+        """
+        w_e = np.asarray(w_e, dtype=float)
+        w_t = np.asarray(w_t, dtype=float)
+        L, S = padded.n_layers, padded.s_pad
+        K = w_e.shape[0]
+
+        # all node costs in one vectorized shot: [L, K, S], invalid → inf
+        node = (w_e[None, :, None] * padded.e_op[:, None, :]
+                + w_t[None, :, None] * padded.t_op[:, None, :])
+        node = np.where(padded.valid[:, None, :], node, np.inf)
+        # edge weights are computed per layer — the [K, S, S] slab is
+        # the peak working set (pre-stacking the full [L-1, K, S, S]
+        # tensor measures slower: allocation churn beats the saved
+        # dispatches, and huge state tables would blow up)
+        w_e3 = w_e[:, None, None]
+        w_t3 = w_t[:, None, None]
+        cost = node[0]
+        parents = np.empty((max(L - 1, 0), K, S), dtype=np.int64)
+        for i in range(1, L):
+            edge = (w_e3 * padded.e_trans[i - 1]
+                    + w_t3 * padded.t_trans[i - 1])
+            tot = cost[:, :, None] + edge                     # [K, Sp, Sn]
+            parents[i - 1] = np.argmin(tot, axis=1)           # [K, Sn]
+            # min(tot) is the element argmin points at — same bits,
+            # no gather machinery
+            cost = np.min(tot, axis=1) + node[i]
+        paths = np.empty((K, L), dtype=np.int64)
+        s = np.argmin(cost, axis=1)                           # [K]
+        paths[:, L - 1] = s
+        rows = np.arange(K)
+        for i in range(L - 2, -1, -1):
+            s = parents[i][rows, s]
+            paths[:, i] = s
+        return paths
+
+    # above this state count the dense padded tensors stop paying for
+    # themselves (the per-layer loop gathers from the ragged arrays
+    # without materializing [L-1, S_pad, S_pad] copies)
+    _PAD_EVAL_MAX_STATES = 256
+    # below this many paths, building padded tensors just for the
+    # evaluation isn't worth it either
+    _PAD_EVAL_MIN_PATHS = 5
+
+    def path_costs(self, problem, paths: np.ndarray
+                   ) -> dict[str, np.ndarray]:
+        """Summed per-path cost components.
+
+        Uses the dense padded tensors — one fancy gather + sum per
+        component instead of a Python loop over layers — when the DP
+        already materialized them, or when the path batch is large
+        enough to amortize building them (and the layers are not so
+        wide that padding would dwarf the ragged arrays).  Everything
+        else takes the per-layer ragged gather loop, which allocates
+        nothing.
+        """
+        if problem._padded is not None or (
+                paths.shape[0] >= self._PAD_EVAL_MIN_PATHS
+                and max(len(s) for s in problem.layer_states)
+                <= self._PAD_EVAL_MAX_STATES):
+            padded = problem.padded_arrays()
+            L = padded.n_layers
+            li = np.arange(L)[None, :]
+            t_op = padded.t_op[li, paths].sum(axis=1)
+            e_op = padded.e_op[li, paths].sum(axis=1)
+            if L == 1:
+                zero = np.zeros_like(t_op)
+                return {"t_op": t_op, "e_op": e_op, "t_trans": zero,
+                        "e_trans": zero.copy(),
+                        "n_switch": np.zeros(t_op.shape, dtype=np.int64)}
+            lt = np.arange(L - 1)[None, :]
+            a, b = paths[:, :-1], paths[:, 1:]
+            return {"t_op": t_op, "e_op": e_op,
+                    "t_trans": padded.t_trans[lt, a, b].sum(axis=1),
+                    "e_trans": padded.e_trans[lt, a, b].sum(axis=1),
+                    "n_switch": padded.switch[lt, a, b].sum(axis=1)}
+
+        p = paths
+        n = p.shape[0]
+        t_op = np.zeros(n)
+        e_op = np.zeros(n)
+        t_trans = np.zeros(n)
+        e_trans = np.zeros(n)
+        n_switch = np.zeros(n, dtype=np.int64)
+        for i in range(problem.n_layers):
+            idx = p[:, i]
+            ti, ei = problem.op_arrays(i)
+            t_op += ti[idx]
+            e_op += ei[idx]
+            if i + 1 < problem.n_layers:
+                tt, et = problem.transition_arrays(i)
+                sw = problem.switch_arrays(i)
+                nxt = p[:, i + 1]
+                t_trans += tt[idx, nxt]
+                e_trans += et[idx, nxt]
+                n_switch += sw[idx, nxt]
+        return {"t_op": t_op, "e_op": e_op, "t_trans": t_trans,
+                "e_trans": e_trans, "n_switch": n_switch}
+
+
+# ------------------------------------------------------------- jax
+
+class JaxBackend:
+    """jax.numpy + jit backend: the same kernels as ``lax.scan``
+    programs, compiled once per (L, S bucket, K) shape."""
+
+    name = "jax"
+    jitted = True
+
+    def __init__(self) -> None:
+        import jax  # noqa: F401 — fail loudly at construction
+
+        self._jax = jax
+        self._dp = jax.jit(self._dp_impl)
+        self._costs = jax.jit(self._costs_impl)
+
+    # backtracking and the DP share one compiled program; float64 is
+    # scoped to the call so the repo's float32 jax code is unaffected.
+    def _x64(self):
+        return self._jax.experimental.enable_x64()
+
+    def _dp_impl(self, t_op, e_op, valid, t_trans, e_trans, w_e, w_t):
+        jnp = self._jax.numpy
+        lax = self._jax.lax
+        L = t_op.shape[0]
+        K = w_e.shape[0]
+        node = w_e[None, :, None] * e_op[:, None, :] \
+            + w_t[None, :, None] * t_op[:, None, :]           # [L, K, S]
+        # invalid states cost inf — that alone keeps every padded state
+        # off all optimal paths, so edges need no mask of their own
+        node = jnp.where(valid[:, None, :], node, jnp.inf)
+        if L == 1:
+            return jnp.argmin(node[0], axis=1)[:, None]
+        w_e3 = w_e[:, None, None]
+        w_t3 = w_t[:, None, None]
+
+        def step(cost, xs):
+            et_i, tt_i, node_i = xs
+            tot = cost[:, :, None] + (w_e3 * et_i + w_t3 * tt_i)
+            parent = jnp.argmin(tot, axis=1)                  # [K, Sn]
+            cost = jnp.min(tot, axis=1) + node_i
+            return cost, parent
+
+        cost, parents = lax.scan(step, node[0],
+                                 (e_trans, t_trans, node[1:]))
+
+        s_final = jnp.argmin(cost, axis=1)                    # [K]
+        rows = jnp.arange(K)
+
+        def back(s, parent):
+            prev = parent[rows, s]
+            return prev, prev
+
+        _, states = lax.scan(back, s_final, parents, reverse=True)
+        return jnp.concatenate([states, s_final[None, :]], axis=0).T
+
+    def _costs_impl(self, t_op, e_op, t_trans, e_trans, switch, paths):
+        jnp = self._jax.numpy
+        L = t_op.shape[0]
+        li = jnp.arange(L)[None, :]
+        t_sum = t_op[li, paths].sum(axis=1)
+        e_sum = e_op[li, paths].sum(axis=1)
+        if L == 1:
+            zero = jnp.zeros_like(t_sum)
+            return (t_sum, e_sum, zero, zero,
+                    jnp.zeros(t_sum.shape, dtype=jnp.int64))
+        lt = jnp.arange(L - 1)[None, :]
+        a, b = paths[:, :-1], paths[:, 1:]
+        return (t_sum, e_sum,
+                t_trans[lt, a, b].sum(axis=1),
+                e_trans[lt, a, b].sum(axis=1),
+                switch[lt, a, b].sum(axis=1))
+
+    def dp_multi(self, padded: PaddedArrays, w_e: np.ndarray,
+                 w_t: np.ndarray) -> np.ndarray:
+        jnp = self._jax.numpy
+        with self._x64():
+            paths = self._dp(
+                jnp.asarray(padded.t_op), jnp.asarray(padded.e_op),
+                jnp.asarray(padded.valid),
+                jnp.asarray(padded.t_trans), jnp.asarray(padded.e_trans),
+                jnp.asarray(np.asarray(w_e, dtype=float)),
+                jnp.asarray(np.asarray(w_t, dtype=float)))
+            return np.asarray(paths, dtype=np.int64)
+
+    def path_costs(self, problem, paths: np.ndarray
+                   ) -> dict[str, np.ndarray]:
+        jnp = self._jax.numpy
+        padded = problem.padded_arrays()
+        with self._x64():
+            t_op, e_op, t_trans, e_trans, n_switch = self._costs(
+                jnp.asarray(padded.t_op), jnp.asarray(padded.e_op),
+                jnp.asarray(padded.t_trans), jnp.asarray(padded.e_trans),
+                jnp.asarray(padded.switch), jnp.asarray(paths))
+        return {"t_op": np.asarray(t_op), "e_op": np.asarray(e_op),
+                "t_trans": np.asarray(t_trans),
+                "e_trans": np.asarray(e_trans),
+                "n_switch": np.asarray(n_switch, dtype=np.int64)}
+
+
+# -------------------------------------------------------- registry
+
+_INSTANCES: dict[str, object] = {}
+
+
+def available_backends() -> tuple[str, ...]:
+    """Backends constructible in this environment."""
+    names = ["numpy"]
+    try:
+        import jax  # noqa: F401
+        names.append("jax")
+    except ImportError:
+        pass
+    return tuple(names)
+
+
+def get_backend(name: str | None = None):
+    """Resolve a backend by name (``None`` → ``$PFDNN_BACKEND`` or
+    numpy).  Instances are cached so jit caches persist across solves."""
+    if name is None:
+        name = os.environ.get(_ENV_VAR, _DEFAULT).strip().lower() \
+            or _DEFAULT
+    if isinstance(name, (NumpyBackend, JaxBackend)):
+        return name
+    if name not in _INSTANCES:
+        if name == "numpy":
+            _INSTANCES[name] = NumpyBackend()
+        elif name == "jax":
+            try:
+                _INSTANCES[name] = JaxBackend()
+            except ImportError as exc:
+                raise RuntimeError(
+                    "PFDNN backend 'jax' requested but jax is not "
+                    "installed; install jax or use the numpy backend"
+                ) from exc
+        else:
+            raise ValueError(
+                f"unknown backend {name!r}; one of ('numpy', 'jax')")
+    return _INSTANCES[name]

@@ -26,6 +26,7 @@ problem the monolithic builder would have produced.
 
 from __future__ import annotations
 
+import threading
 from typing import Sequence
 
 import numpy as np
@@ -61,6 +62,7 @@ class CompilationContext:
         # gating flag -> per-layer master StateCost lists / voltage tables
         self._master: dict[bool, list[list[StateCost]]] = {}
         self._master_volts: dict[bool, list[np.ndarray]] = {}
+        self._master_t_op: dict[bool, list[np.ndarray]] = {}
         self._master_e_op: dict[bool, list[np.ndarray]] = {}
         self._master_vkey: dict[bool, list[bytes]] = {}
         # (volts_a content, volts_b content) -> (T, E, switch) matrices
@@ -70,23 +72,35 @@ class CompilationContext:
         # (gating, volts content, subset) -> master-state index vector
         self._slice_cache: dict[tuple[bool, bytes, tuple[float, ...]],
                                 np.ndarray] = {}
+        # The parallel rail sweep shares one context across worker
+        # threads.  Master-table construction is guarded by this lock
+        # (its four dicts must become visible together); the transition
+        # and slice caches stay lock-free — concurrent misses recompute
+        # the same immutable value and dict writes are atomic under the
+        # GIL, so a race only wastes work.
+        self._master_lock = threading.Lock()
 
     # -- master state table -------------------------------------------
     def master_states(self, gating: bool) -> list[list[StateCost]]:
         """Per-layer feasible states over ALL voltage levels (built once
         per gating flag; every rail subset is a slice of this)."""
-        if gating not in self._master:
-            table = [layer_states(c, i, self.acc, self.plan, self.levels,
-                                  gating=gating)
-                     for i, c in enumerate(self.costs)]
-            self._master[gating] = table
-            self._master_volts[gating] = [
-                np.array([s.voltages for s in states]) for states in table]
-            self._master_e_op[gating] = [
-                np.array([s.e_op for s in states]) for states in table]
-            self._master_vkey[gating] = [
-                v.tobytes() for v in self._master_volts[gating]]
-        return self._master[gating]
+        with self._master_lock:
+            if gating not in self._master:
+                table = [layer_states(c, i, self.acc, self.plan,
+                                      self.levels, gating=gating)
+                         for i, c in enumerate(self.costs)]
+                self._master_volts[gating] = [
+                    np.array([s.voltages for s in states])
+                    for states in table]
+                self._master_t_op[gating] = [
+                    np.array([s.t_op for s in states]) for states in table]
+                self._master_e_op[gating] = [
+                    np.array([s.e_op for s in states]) for states in table]
+                self._master_vkey[gating] = [
+                    v.tobytes() for v in self._master_volts[gating]]
+                # set last: readers key "is the master built?" off this
+                self._master[gating] = table
+            return self._master[gating]
 
     def _subset_indices(self, gating: bool, layer: int,
                         rails: tuple[float, ...]) -> np.ndarray:
@@ -159,6 +173,14 @@ class CompilationContext:
             rails=rails,
             name=self.network,
         )
+        # inject the per-layer arrays as master-table slices — bitwise
+        # identical to deriving them from the StateCost lists, without
+        # the per-state Python loop (hot: once per swept subset)
+        problem._t_op_c = [self._master_t_op[gating][i][j]
+                           for i, j in enumerate(idx)]
+        problem._e_op_c = [self._master_e_op[gating][i][j]
+                           for i, j in enumerate(idx)]
+        problem._volts_c = [master_volts[i][j] for i, j in enumerate(idx)]
         vkey = self._master_vkey[gating]
         for i in range(len(master) - 1):
             tt, et, sw = self._transition_keyed(

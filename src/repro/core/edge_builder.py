@@ -78,44 +78,47 @@ def layer_states(cost: LayerCost, layer_idx: int, acc: Edge40nmAccelerator,
     if gating and cost.weight_bytes == 0:
         rram_options.append(V_GATED)
 
-    states: list[StateCost] = []
-    for v_c in rails:
-        f_c = dvfs_c.freq(v_c)
-        if f_c <= 0:
+    # hoist the per-voltage model terms out of the |R|³ state loop —
+    # each is a function of a single rail voltage, so |R| evaluations
+    # (identical floats) cover all |R|³ states.  This is the master-
+    # table hot path: it runs once per layer per compile, over the FULL
+    # level set.
+    bank = acc.dvfs(D_RRAM, n_rram_banks=1)
+    t_wake_ovh = wakes * tm.t_wake        # bank wake anchors: time
+    c_tab = [(v_c, cyc_c / f_c, dyn_c * dvfs_c.dyn_energy_scale(v_c),
+              dvfs_c.leak_power(v_c))
+             for v_c in rails if (f_c := dvfs_c.freq(v_c)) > 0]
+    f_tab = [(v_f, cyc_f / f_f, dyn_f * dvfs_f.dyn_energy_scale(v_f),
+              dvfs_f.leak_power(v_f))
+             for v_f in rails if (f_f := dvfs_f.freq(v_f)) > 0]
+    r_tab: list[tuple[float, float, float, float, float]] = []
+    for v_r in rram_options:
+        if v_r == V_GATED:
+            if cyc_r > 0:
+                continue                  # needs weight streaming
+            r_tab.append((V_GATED, 0.0, 0.0, 0.0, 0.0))
             continue
-        for v_f in rails:
-            f_f = dvfs_f.freq(v_f)
-            if f_f <= 0:
-                continue
-            for v_r in rram_options:
-                if v_r == V_GATED:
-                    if cyc_r > 0:
-                        continue          # needs weight streaming
-                    t_r = 0.0
-                else:
-                    f_r = dvfs_r.freq(v_r)
-                    if f_r <= 0:
-                        continue
-                    t_r = cyc_r / f_r
-                t_op = max(cyc_c / f_c, cyc_f / f_f, t_r)
-                t_op += wakes * tm.t_wake
+        f_r = dvfs_r.freq(v_r)
+        if f_r <= 0:
+            continue
+        r_tab.append((v_r, cyc_r / f_r,
+                      dyn_r * dvfs_r.dyn_energy_scale(v_r),
+                      n_awake * bank.leak_power(v_r),
+                      wakes * (tm.energy(V_GATED, v_r) / plan.n_banks)))
 
-                e_dyn = (dyn_c * dvfs_c.dyn_energy_scale(v_c)
-                         + dyn_f * dvfs_f.dyn_energy_scale(v_f)
-                         + (dyn_r * dvfs_r.dyn_energy_scale(v_r)
-                            if v_r != V_GATED else 0.0))
-                p_leak = (dvfs_c.leak_power(v_c)
-                          + dvfs_f.leak_power(v_f))
-                if v_r != V_GATED:
-                    bank = acc.dvfs(D_RRAM, n_rram_banks=1)
-                    p_leak += n_awake * bank.leak_power(v_r)
-                e_wake = wakes * (tm.energy(V_GATED, v_r) / plan.n_banks
-                                  if v_r != V_GATED else 0.0)
-                e_op = e_dyn + p_leak * t_op + e_wake
+    states: list[StateCost] = []
+    for v_c, t_c, e_c, leak_c in c_tab:
+        for v_f, t_f, e_f, leak_f in f_tab:
+            t_cf = max(t_c, t_f)
+            e_cf = e_c + e_f
+            leak_cf = leak_c + leak_f
+            for v_r, t_r, e_r, leak_r, e_wk in r_tab:
+                t_op = max(t_cf, t_r) + t_wake_ovh
+                e_op = (e_cf + e_r) + (leak_cf + leak_r) * t_op + e_wk
                 states.append(StateCost(
                     voltages=(v_c, v_f, v_r),
-                    t_op=float(t_op),
-                    e_op=float(e_op),
+                    t_op=t_op,
+                    e_op=e_op,
                     label=f"L{layer_idx}:{v_c:.2f}/{v_f:.2f}/{v_r:.2f}",
                 ))
     return states

@@ -2,29 +2,46 @@
 
 Paper §4.3: the deadline-constrained problem is solved with a weighted
 shortest-path search where λ reweights the objective as ``E + λT``; a
-bisection on λ finds the tightest feasible schedule, and candidate paths
+search on λ finds the tightest feasible schedule, and candidate paths
 discovered along the way feed the local-refinement step (because some
 minimum-energy feasible schedules are not representable by any λ).
 
-All DP recurrences are numpy-vectorized over the state dimension, so the
-solver scales to the large layered graphs of §6.5 (the python-level loop
-is only over layers).
+All DP recurrences are vectorized over the state dimension — and, in the
+batched engine, over a whole λ batch at once — so the solver scales to
+the large layered graphs of §6.5 (the python-level loop is only over
+layers, and runs once per λ *batch* rather than once per λ).
 
 Implementation notes:
-  - ``dp_paths`` is the single DP kernel: k best paths under the generic
+  - ``dp_paths`` is the scalar DP kernel: k best paths under the generic
     node cost ``w_e·e + w_t·t``.  ``dp_best_path`` (w_e=1, w_t=μ, k=1),
     ``min_time_path`` (w_e=0, w_t=1 — the λ→∞ limit) and ``kbest_paths``
     are thin views of it.
+  - ``dp_paths_multi`` is the batched engine: one DP pass evaluates a
+    whole weight batch via ``[K, S_prev, S_next]`` reductions on the
+    pluggable array backend (:mod:`repro.core.backend` — numpy default,
+    jitted jax opt-in).  Per-λ results are bit-identical to ``dp_paths``
+    on the numpy backend.
   - ``mu`` is the generic per-second price.  Plain λ-DP uses ``mu = λ``.
     Because the terminal idle energy is linear in the slack for a fixed
     duty-cycle decision z (E_idle = P_z·(T_max − T_infer) + const), running
     the same DP with ``mu = λ − P_z`` yields exact idle-aware paths for
     that branch; both branches are added to the candidate pool.
+  - The batched λ search (default) replaces the scalar bisection: ONE
+    batched call evaluates min-time + μ=0 + both idle-priced branches +
+    a geometric λ bracket grid, and the bracket is then narrowed by
+    parametric (Megiddo-style) cuts on the piecewise-linear
+    ``min_p E_p + λT_p`` envelope — each cut probes the intersection of
+    the bracket endpoints' lines, so the search lands on the exact
+    breakpoint λ* in a handful of scalar DP calls instead of ~25
+    bisection steps.  ``batch_lambda=False`` restores the legacy
+    scalar bisection (identical DP kernel and λ probe sequence; path
+    *evaluation* runs on the backend evaluator either way, whose
+    summation order can differ from the pre-backend solver by an ulp).
   - Candidate paths are costed through the vectorized
     :meth:`ScheduleProblem.evaluate_paths` batch evaluator.
-  - ``lam_hint`` warm-starts the λ-bisection from a previous solve (the
-    rail-subset sweep passes the last subset's λ*), shrinking both the
-    exponential bracket search and the bisection itself.
+  - ``lam_hint`` warm-starts the λ search from a previous solve (the
+    rail-subset sweep passes the last subset's λ*): the bracket grid is
+    centred on the hint, so it usually brackets λ* in one batched call.
 """
 
 from __future__ import annotations
@@ -35,6 +52,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from repro.core.backend import get_backend
 from repro.core.problem import ScheduleProblem
 
 
@@ -42,19 +60,21 @@ from repro.core.problem import ScheduleProblem
 class SolverStats:
     lambda_iterations: int = 0
     dp_calls: int = 0
+    dp_lambdas: int = 0
     candidates_evaluated: int = 0
     refinement_moves: int = 0
     wall_time_s: float = 0.0
     lambda_star: float = 0.0
     states_explored: int = 0
     edges_explored: int = 0
+    backend: str = "numpy"
 
 
 # -------------------------------------------------------------- DP kernel
 
 def dp_paths(problem: ScheduleProblem, *, w_e: float = 1.0,
              w_t: float = 0.0, k: int = 1) -> list[list[int]]:
-    """The one DP kernel: k globally-best paths under ``w_e·e + w_t·t``.
+    """The scalar DP kernel: k globally-best paths under ``w_e·e + w_t·t``.
 
     ``k == 1`` uses the plain argmin recurrence; ``k > 1`` carries a
     k-best frontier per state.  Both share the same edge weighting and
@@ -128,6 +148,34 @@ def dp_paths(problem: ScheduleProblem, *, w_e: float = 1.0,
     return paths
 
 
+def dp_paths_multi_weighted(problem: ScheduleProblem,
+                            w_e: Sequence[float],
+                            w_t: Sequence[float],
+                            *, backend=None) -> np.ndarray:
+    """Batched DP: best path per weight pair in ONE pass of the layers.
+
+    ``w_e``/``w_t``: [K] node-cost weights.  Returns a ``[K, L]`` int64
+    matrix of state indices.  Runs on the pluggable array backend; on
+    numpy each row is bit-identical to ``dp_paths(w_e=..., w_t=..., k=1)``.
+    """
+    w_e = np.asarray(w_e, dtype=float)
+    w_t = np.asarray(w_t, dtype=float)
+    if w_e.shape != w_t.shape or w_e.ndim != 1:
+        raise ValueError(
+            f"w_e/w_t must be equal-length 1-D, got {w_e.shape} "
+            f"and {w_t.shape}")
+    return get_backend(backend).dp_multi(problem.padded_arrays(), w_e, w_t)
+
+
+def dp_paths_multi(problem: ScheduleProblem, mus: Sequence[float],
+                   *, backend=None) -> np.ndarray:
+    """Batched λ-DP: best path under ``e + mu·t`` for every ``mu`` in the
+    batch, one DP pass total.  Returns ``[K, L]`` int64 state indices."""
+    mus = np.asarray(mus, dtype=float)
+    return dp_paths_multi_weighted(problem, np.ones_like(mus), mus,
+                                   backend=backend)
+
+
 def dp_best_path(problem: ScheduleProblem, mu: float) -> list[int]:
     """Single shortest path under per-state cost ``e + mu·t``."""
     return dp_paths(problem, w_e=1.0, w_t=mu, k=1)[0]
@@ -137,6 +185,68 @@ def kbest_paths(problem: ScheduleProblem, mu: float,
                 k: int) -> list[list[int]]:
     """k globally-best paths under ``e + mu·t`` (k-best DP frontier)."""
     return dp_paths(problem, w_e=1.0, w_t=mu, k=k)
+
+
+def kbest_paths_multi(problem: ScheduleProblem, mus: Sequence[float],
+                      k: int) -> list[list[list[int]]]:
+    """k-best frontier for every ``mu`` in the batch, one DP pass total.
+
+    Returns one ``kbest_paths(problem, mu, k)``-identical path list per
+    μ: the k-best recurrence carries a leading [K] axis (the per-μ
+    argpartition/argsort lanes run independently), so each lane performs
+    exactly the scalar kernel's operations.  The λ search uses this to
+    fuse the λ* and idle-priced frontier enrichments into one pass.
+    """
+    mus = np.asarray(mus, dtype=float)
+    K = mus.shape[0]
+    L = problem.n_layers
+    t0, e0 = problem.op_arrays(0)
+    s0 = len(e0)
+    costs = np.full((K, s0, k), np.inf)
+    costs[:, :, 0] = e0[None, :] + mus[:, None] * t0[None, :]
+    # (layer, μ, state, rank) -> (prev_state, prev_rank)
+    back: list[tuple[np.ndarray, np.ndarray]] = []
+
+    for i in range(1, L):
+        tt, et = problem.transition_arrays(i - 1)
+        edge = et[None, :, :] + mus[:, None, None] * tt[None, :, :]
+        sp, sn = et.shape
+        cand = (costs[:, :, :, None]
+                + edge[:, :, None, :]).reshape(K, sp * k, sn)
+        kk = min(k, sp * k)
+        idx = np.argpartition(cand, kk - 1, axis=1)[:, :kk, :]
+        vals = np.take_along_axis(cand, idx, axis=1)
+        order = np.argsort(vals, axis=1)
+        idx = np.take_along_axis(idx, order, axis=1)
+        vals = np.take_along_axis(vals, order, axis=1)
+        ti, ei = problem.op_arrays(i)
+        node = ei[None, :] + mus[:, None] * ti[None, :]       # [K, Sn]
+        new_costs = np.full((K, sn, k), np.inf)
+        new_costs[:, :, :kk] = vals.transpose(0, 2, 1) \
+            + node[:, :, None]
+        ps = np.zeros((K, sn, k), dtype=np.int64)
+        pr = np.zeros((K, sn, k), dtype=np.int64)
+        ps[:, :, :kk] = (idx // k).transpose(0, 2, 1)
+        pr[:, :, :kk] = (idx % k).transpose(0, 2, 1)
+        back.append((ps, pr))
+        costs = new_costs
+
+    out: list[list[list[int]]] = []
+    flat = costs.reshape(K, -1)
+    for q in range(K):
+        n_final = min(k, int(np.isfinite(flat[q]).sum()))
+        best = np.argsort(flat[q])[:n_final]
+        paths_q = []
+        for b in best:
+            s, r = int(b // k), int(b % k)
+            path = [s]
+            for ps, pr in reversed(back):
+                s, r = int(ps[q, s, r]), int(pr[q, s, r])
+                path.append(s)
+            path.reverse()
+            paths_q.append(path)
+        out.append(paths_q)
+    return out
 
 
 def min_time_path(problem: ScheduleProblem) -> list[int]:
@@ -154,40 +264,52 @@ def solve_lambda_dp(
     bisect_rel_tol: float = 0.0,
     collect_idle_branches: bool = True,
     lam_hint: float | None = None,
+    batch_lambda: bool = True,
+    backend=None,
 ) -> tuple[dict | None, list[dict], SolverStats]:
-    """λ-DP with bisection; returns (best, feasible_candidates, stats).
+    """λ-DP search; returns (best, feasible_candidates, stats).
 
     ``best`` is the exact-evaluated minimum-energy feasible schedule found
     by the weighted search; ``feasible_candidates`` are the ≤k best
     distinct feasible paths (input to refinement).  Returns ``best=None``
     when even the fastest schedule misses the deadline.
 
+    ``batch_lambda=True`` (default) runs the batched multi-λ engine:
+    whole-bracket batched DP sweeps plus parametric envelope cuts,
+    collapsing the ~25 scalar DP calls of the bisection into ≤4 batched
+    calls plus a few envelope probes.  ``batch_lambda=False`` restores
+    the legacy scalar bisection's exact DP kernel and λ probe sequence
+    (candidate evaluation still runs on the backend evaluator, so
+    energies can differ from the pre-backend solver in the last ulp).
+
     ``lam_hint`` seeds the feasibility bracket with a previous solve's
-    λ* (warm start); ``bisect_rel_tol`` terminates the bisection once the
-    bracket is relatively tighter than the tolerance (0 = fixed
-    ``bisect_iters``, the legacy exact behaviour).
+    λ* (warm start); ``bisect_rel_tol`` terminates the λ narrowing once
+    the bracket is relatively tighter than the tolerance (0 = run to
+    ``bisect_iters`` / exact envelope breakpoint).  ``backend`` picks
+    the array backend for the batched kernels (None → ``$PFDNN_BACKEND``
+    or numpy).
     """
     stats = SolverStats()
     tic = time.perf_counter()
     stats.states_explored = problem.n_states()
     stats.edges_explored = problem.n_edges()
 
-    fastest = min_time_path(problem)
-    if not problem.evaluate(fastest)["feasible"]:
-        stats.wall_time_s = time.perf_counter() - tic
-        return None, [], stats
-
     seen: dict[tuple, dict] = {}
 
     def consider_all(paths: Iterable[Sequence[int]]) -> list[dict]:
         """Batch-evaluate every not-yet-seen path in one vectorized shot."""
+        if isinstance(paths, np.ndarray):
+            paths = paths.tolist()
         keys = [tuple(p) for p in paths]
-        fresh = []
+        fresh: list[tuple] = []
+        fresh_set: set[tuple] = set()
         for key in keys:
-            if key not in seen and key not in fresh:
+            if key not in seen and key not in fresh_set:
                 fresh.append(key)
+                fresh_set.add(key)
         if fresh:
-            batch = problem.evaluate_paths([list(key) for key in fresh])
+            batch = problem.evaluate_paths([list(key) for key in fresh],
+                                           backend=backend)
             for j, key in enumerate(fresh):
                 seen[key] = ScheduleProblem.result_row(batch, j)
             stats.candidates_evaluated += len(fresh)
@@ -196,6 +318,40 @@ def solve_lambda_dp(
     def consider(path: Sequence[int]) -> dict:
         return consider_all([path])[0]
 
+    if batch_lambda:
+        stats.backend = get_backend(backend).name
+        ok = _lambda_search_batched(
+            problem, stats, consider_all,
+            k_candidates=k_candidates, bisect_iters=bisect_iters,
+            bisect_rel_tol=bisect_rel_tol,
+            collect_idle_branches=collect_idle_branches,
+            lam_hint=lam_hint, backend=backend)
+    else:
+        ok = _lambda_search_scalar(
+            problem, stats, consider_all, consider,
+            k_candidates=k_candidates, bisect_iters=bisect_iters,
+            bisect_rel_tol=bisect_rel_tol,
+            collect_idle_branches=collect_idle_branches,
+            lam_hint=lam_hint)
+    if not ok:
+        stats.wall_time_s = time.perf_counter() - tic
+        return None, [], stats
+
+    feas = sorted((r for r in seen.values() if r["feasible"]),
+                  key=lambda r: r["e_total"])
+    candidates = feas[:k_candidates]
+    best = candidates[0] if candidates else None
+    stats.wall_time_s = time.perf_counter() - tic
+    return best, candidates, stats
+
+
+def _lambda_search_scalar(problem, stats, consider_all, consider, *,
+                          k_candidates, bisect_iters, bisect_rel_tol,
+                          collect_idle_branches, lam_hint) -> bool:
+    """Legacy per-λ bisection (bit-exact pre-batching behaviour)."""
+    fastest = min_time_path(problem)
+    if not problem.evaluate(fastest)["feasible"]:
+        return False
     consider(fastest)
 
     mus = [0.0]
@@ -204,6 +360,7 @@ def solve_lambda_dp(
     feasible_at_zero = False
     for mu in mus:
         stats.dp_calls += 1
+        stats.dp_lambdas += 1
         r = consider(dp_best_path(problem, mu))
         if mu == 0.0:
             feasible_at_zero = r["feasible"]
@@ -215,6 +372,7 @@ def solve_lambda_dp(
             lam_hi = lam_hint
         for _ in range(80):
             stats.dp_calls += 1
+            stats.dp_lambdas += 1
             r = consider(dp_best_path(problem, lam_hi))
             if r["feasible"]:
                 break
@@ -227,6 +385,7 @@ def solve_lambda_dp(
             stats.lambda_iterations += 1
             lam = 0.5 * (lam_lo + lam_hi)
             stats.dp_calls += 1
+            stats.dp_lambdas += 1
             r = consider(dp_best_path(problem, lam))
             if r["feasible"]:
                 lam_hi = lam
@@ -246,10 +405,164 @@ def solve_lambda_dp(
             frontier += kbest_paths(problem, -problem.idle.p_sleep,
                                     k_candidates)
         consider_all(frontier)
+    return True
 
-    feas = sorted((r for r in seen.values() if r["feasible"]),
-                  key=lambda r: r["e_total"])
-    candidates = feas[:k_candidates]
-    best = candidates[0] if candidates else None
-    stats.wall_time_s = time.perf_counter() - tic
-    return best, candidates, stats
+
+# geometric bracket grids (16 λs each) around the seed λ.  Cold solves
+# sweep ratio 4 from seed/64 to seed·4¹².  A warm hint usually lands
+# within a factor of two of λ*, so the hinted grid spends its points
+# non-uniformly: a dense ratio-2^¼ band across [hint/2, 2·hint] (the λ*
+# bracket is then ~1.19× wide — one or two envelope cuts finish it), a
+# couple of points below to pin the infeasible side, and a coarse tail
+# to hint·2048 for when the hint is badly off.  One extension sweep
+# spans another 4¹⁶; _MAX_GRID_ROUNDS rounds cover far beyond the
+# legacy 4⁸⁰ expansion cap.
+_COLD_MULTS = 4.0 ** np.arange(-3, 13)
+_WARM_MULTS = np.concatenate([
+    2.0 ** np.arange(-3.0, -1.0),          # hint/8, hint/4
+    2.0 ** np.linspace(-1.0, 1.0, 9),      # dense band around the hint
+    2.0 * 4.0 ** np.arange(1.0, 6.0),      # coarse tail to hint·2048
+])
+_EXTEND_EXPS = np.arange(1, 17)
+_MAX_GRID_ROUNDS = 8
+
+
+def _lambda_search_batched(problem, stats, consider_all, *,
+                           k_candidates, bisect_iters, bisect_rel_tol,
+                           collect_idle_branches, lam_hint,
+                           backend) -> bool:
+    """Batched multi-λ engine: a whole-bracket sweep + envelope cuts.
+
+    One batched DP evaluates the min-time limit, μ=0, both idle-priced
+    branches, and a geometric λ grid that brackets the feasibility
+    threshold (rarely, extension sweeps extend the grid upward).  The
+    bracket is then narrowed by parametric cuts: probing the
+    intersection λ of the two bracket endpoints' cost lines
+    ``E_p + λT_p`` either discovers a new envelope line strictly
+    between them or proves the breakpoint exact — so the loop
+    terminates on λ* itself after at most one probe per envelope
+    segment (typically 2–5), not at a fixed bisection depth.
+    """
+
+    def line(r: dict) -> tuple[float, float]:
+        # the DP objective's (E, T) of a path: op+transition cost only
+        return (r["e_op"] + r["e_trans"], r["t_infer"])
+
+    bk = get_backend(backend)
+    if bk.jitted:
+        # keep single-λ probes on the jitted kernel (no retrace: K=1 is
+        # a stable shape)
+        def probe(lam: float) -> list[int]:
+            return dp_paths_multi(problem, [lam], backend=bk)[0]
+    else:
+        # the ragged scalar kernel beats a K=1 padded batch on numpy
+        def probe(lam: float) -> list[int]:
+            return dp_best_path(problem, lam)
+
+    # -- round A+B: limits, idle branches, AND the bracket grid in ONE
+    # batched DP pass.  The grid λs cost vector work only; their paths
+    # enter the candidate pool solely when the subset really needs the
+    # bracket (μ=0 infeasible), so the search behaves exactly like a
+    # separate grid round — minus one full pass over the layers.
+    w_e = [0.0, 1.0]
+    w_t = [1.0, 0.0]
+    if collect_idle_branches:
+        w_e += [1.0, 1.0]
+        w_t += [-problem.idle.p_sleep, -problem.idle.p_idle]
+    n_a = len(w_t)
+    hinted = lam_hint is not None and lam_hint > 0.0
+    lam0 = lam_hint if hinted else max(problem.idle.p_idle, 1e-3)
+    grid = lam0 * (_WARM_MULTS if hinted else _COLD_MULTS)
+    stats.dp_calls += 1
+    stats.dp_lambdas += n_a + len(grid)
+    all_paths = dp_paths_multi_weighted(
+        problem, w_e + [1.0] * len(grid), w_t + list(grid), backend=bk)
+    rows = consider_all(all_paths[:n_a])
+    if not rows[0]["feasible"]:       # even the min-time schedule misses
+        return False
+    feasible_at_zero = rows[1]["feasible"]
+
+    if feasible_at_zero:
+        # deadline slack is abundant: idle-priced unconstrained optima
+        # (the speculative grid paths stay out of the candidate pool)
+        consider_all(_frontier(problem, 0.0, k_candidates,
+                               collect_idle_branches))
+        return True
+
+    # -- bracket the feasibility threshold on the grid
+    lo, lo_pt = 0.0, line(rows[1])
+    hi: float | None = None
+    hi_pt: tuple[float, float] | None = None
+    grid_paths = all_paths[n_a:]
+    for round_no in range(_MAX_GRID_ROUNDS):
+        if round_no > 0:              # extension sweep: λ* above the grid
+            grid = grid[-1] * 4.0 ** _EXTEND_EXPS
+            stats.dp_calls += 1
+            stats.dp_lambdas += len(grid)
+            grid_paths = dp_paths_multi(problem, grid, backend=bk)
+        grows = consider_all(grid_paths)
+        for mu, r in zip(grid, grows):
+            if r["feasible"]:
+                hi, hi_pt = float(mu), line(r)
+                break
+            lo, lo_pt = float(mu), line(r)
+        if hi is not None:
+            break
+    if hi is None:
+        # pathological λ scale: treat the (feasible) min-time line as
+        # the feasible endpoint and let the cuts take over
+        hi, hi_pt = float(grid[-1]), line(rows[0])
+
+    # -- parametric envelope cuts
+    while stats.lambda_iterations < bisect_iters:
+        if bisect_rel_tol > 0.0 and hi - lo <= bisect_rel_tol * hi:
+            break
+        denom = lo_pt[1] - hi_pt[1]            # T_lo − T_hi > 0
+        if denom <= 0.0:
+            break
+        lam = (hi_pt[0] - lo_pt[0]) / denom
+        # the crossing of two envelope-optimal lines always lies inside
+        # [lo, hi] (concavity); a crossing ON a bracket endpoint proves
+        # no third line fits below the two known ones, so the breakpoint
+        # is exact — terminate without probing
+        if lam <= lo:                          # λ* = lo⁺
+            hi = min(hi, lo + (hi - lo) * 1e-9)
+            break
+        if lam >= hi:                          # envelope below hi is
+            break                              # lo's line: λ* = hi
+        stats.lambda_iterations += 1
+        stats.dp_calls += 1
+        stats.dp_lambdas += 1
+        r = consider_all([probe(lam)])[0]
+        pt = line(r)
+        if r["feasible"]:
+            if pt == hi_pt:
+                # the optimum flips from lo's line straight to hi's at
+                # their crossing — λ* is exactly lam
+                hi = lam
+                break
+            hi, hi_pt = lam, pt
+        else:
+            if pt == lo_pt:
+                # tie at the crossing resolved to the infeasible line:
+                # everything above lam is hi's (feasible) line
+                hi = min(hi, lam * (1.0 + max(bisect_rel_tol, 1e-12)))
+                break
+            lo, lo_pt = lam, pt
+
+    stats.lambda_star = hi
+    consider_all(_frontier(problem, hi, k_candidates,
+                           collect_idle_branches))
+    return True
+
+
+def _frontier(problem, lam: float, k_candidates: int,
+              collect_idle_branches: bool) -> list[list[int]]:
+    """k-best candidate enrichment at λ (and its sleep-priced branch),
+    fused into one multi-μ k-best pass; path order matches the two
+    sequential ``kbest_paths`` calls exactly."""
+    if not collect_idle_branches:
+        return kbest_paths(problem, lam, k_candidates)
+    a, b = kbest_paths_multi(
+        problem, [lam, lam - problem.idle.p_sleep], k_candidates)
+    return a + b

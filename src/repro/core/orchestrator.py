@@ -4,8 +4,10 @@
 
   characterize layers → bank plan → master state table  (CompilationContext)
   → policy lookup                                       (policy registry)
-  → per-subset solve (slice view → prune → λ-DP → refinement)
-  → rail selection (warm-started, incumbent-cut sweep)
+  → per-subset solve (slice view → prune → batched multi-λ DP
+    → refinement), on the pluggable array backend       (core.backend)
+  → rail selection (warm-started, incumbent-cut sweep;
+    optionally fanned out over a worker pool)
   → emit the PowerSchedule
 
 The per-policy solve strategies live in :mod:`repro.core.policies`; the

@@ -27,11 +27,14 @@ Policies reproduced for the paper's comparisons (§6):
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
 import time
 from typing import Callable
 
 import numpy as np
 
+from repro.core.backend import get_backend
 from repro.core.context import CompilationContext
 from repro.core.greedy import solve_greedy
 from repro.core.ilp import solve_ilp
@@ -59,12 +62,25 @@ class OrchestratorConfig:
     ilp_time_limit: float = 300.0
     # sweep acceleration.  The incumbent cut is provably schedule-
     # preserving (sound lower bound); the warm-started/early-terminated
-    # bisection can land on a slightly different λ* than the legacy
+    # λ search can land on a slightly different λ* than the legacy
     # 48-iteration cold run, which is verified schedule-identical on the
     # shipped configs by the golden tests — set warm_start=False for
-    # bit-exact legacy behaviour on untested configs.
+    # legacy cold-start behaviour on untested configs.
     warm_start: bool = True
     bisect_rel_tol: float = 1e-7
+    # batched multi-λ DP engine (one [K, S, S] DP pass per λ batch +
+    # parametric envelope cuts) — set False for the legacy scalar
+    # bisection (same DP kernel and λ probe sequence as the
+    # pre-batching solver; candidate evaluation still goes through the
+    # backend evaluator, so energies can drift by an ulp).
+    batch_lambda: bool = True
+    # array backend for the DP/evaluator kernels: None → $PFDNN_BACKEND
+    # or numpy; "jax" runs them as jitted lax.scan programs.
+    backend: str | None = None
+    # rail-sweep fan-out: worker threads for select_rails (None →
+    # $PFDNN_WORKERS or serial).  The parallel sweep selects the same
+    # rails as the serial one (see repro.core.rails.select_rails).
+    sweep_workers: int | None = None
 
 
 PolicyFn = Callable[[CompilationContext, OrchestratorConfig],
@@ -199,7 +215,8 @@ def _solve_pfdnn_on_rails(problem: ScheduleProblem, cfg: OrchestratorConfig,
         stats["pruning"] = pinfo
     best, candidates, sstats = solve_lambda_dp(
         target, k_candidates=cfg.k_candidates, lam_hint=lam_hint,
-        bisect_rel_tol=cfg.bisect_rel_tol if cfg.warm_start else 0.0)
+        bisect_rel_tol=cfg.bisect_rel_tol if cfg.warm_start else 0.0,
+        batch_lambda=cfg.batch_lambda, backend=cfg.backend)
     stats["lambda_dp"] = dataclasses.asdict(sstats)
     if best is None:
         return None, stats
@@ -221,8 +238,9 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
     tic = time.perf_counter()
     cfg_local = dataclasses.replace(cfg, prune=(cfg.prune and prune))
     problems: dict[tuple, ScheduleProblem] = {}
-    agg = {"dp_calls": 0, "candidates_evaluated": 0,
+    agg = {"dp_calls": 0, "dp_lambdas": 0, "candidates_evaluated": 0,
            "lambda_iterations": 0, "refinement_moves": 0}
+    agg_lock = threading.Lock()     # sweep workers share the aggregates
 
     def solve_subset(rails: tuple[float, ...],
                      hint: dict | None = None) -> dict | None:
@@ -234,8 +252,9 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
         best, stats = _solve_pfdnn_on_rails(problem, cfg_local,
                                             lam_hint=lam_hint)
         lstats = stats.get("lambda_dp", {})
-        for key in agg:
-            agg[key] += lstats.get(key, 0)
+        with agg_lock:
+            for key in agg:
+                agg[key] += lstats.get(key, 0)
         if best is not None:
             problems[rails] = problem
             best = dict(best)
@@ -250,15 +269,34 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
         subsets = all_rail_subsets(ctx.levels, cfg.n_max_rails)
     bound_fn = (lambda rails: ctx.min_e_op_bound(rails, gating=True)) \
         if (cfg.warm_start and not even) else None
+    workers = sweep_workers(cfg) if not even else None
+    if workers is not None and workers > 1:
+        # build the shared master table before fanning out (cheaper than
+        # workers piling up on the context lock)
+        ctx.master_states(True)
     best, best_rails, sel_stats = select_rails(
         ctx.levels, cfg.n_max_rails, solve_subset, subsets=subsets,
-        bound_fn=bound_fn)
+        bound_fn=bound_fn, workers=workers)
     if best is None or best_rails is None:
         return None
     sel_stats.update(agg)
+    # the evaluator runs on cfg.backend even when batch_lambda is off
+    sel_stats["backend"] = get_backend(cfg.backend).name
     sel_stats["wall_time_s"] = time.perf_counter() - tic
     return emit_schedule(policy, ctx, problems[best_rails], best,
                          sel_stats, gating=True)
+
+
+def sweep_workers(cfg: OrchestratorConfig) -> int | None:
+    """Resolve the sweep fan-out: explicit config, else $PFDNN_WORKERS
+    (0/1/unset → serial)."""
+    if cfg.sweep_workers is not None:
+        return cfg.sweep_workers
+    try:
+        env = int(os.environ.get("PFDNN_WORKERS", "0"))
+    except ValueError:
+        return None
+    return env if env > 1 else None
 
 
 @register_policy("pfdnn")

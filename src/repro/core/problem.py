@@ -18,6 +18,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core.backend import PaddedArrays, build_padded, get_backend
 from repro.hw.dvfs import TransitionModel, V_GATED
 
 
@@ -134,17 +135,48 @@ class ScheduleProblem:
     name: str = ""
 
     def __post_init__(self) -> None:
-        self._t_op = [np.array([s.t_op for s in states])
-                      for states in self.layer_states]
-        self._e_op = [np.array([s.e_op for s in states])
-                      for states in self.layer_states]
-        self._volts = [np.array([s.voltages for s in states])
-                       for states in self.layer_states]
+        # per-layer t_op/e_op/voltage arrays, derived lazily from the
+        # StateCost lists — or injected as master-table slices by
+        # CompilationContext / prune_problem, skipping the per-state
+        # Python loop entirely (hot in the Σ C(|V|,k) rail sweep).
+        self._t_op_c: list[np.ndarray] | None = None
+        self._e_op_c: list[np.ndarray] | None = None
+        self._volts_c: list[np.ndarray] | None = None
         # per adjacent-layer pair: (T_trans, E_trans, rail-switch flag).
         # May be pre-populated by CompilationContext (shared master-table
         # slices) or prune_problem (parent slices) instead of recomputed.
         self._trans_cache: dict[
             int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        # lazily-built dense padded tensors for the batched DP / jitted
+        # evaluators (repro.core.backend); invalidated never — problems
+        # are immutable after construction.
+        self._padded: PaddedArrays | None = None
+
+    def _build_arrays(self) -> None:
+        self._t_op_c = [np.array([s.t_op for s in states])
+                        for states in self.layer_states]
+        self._e_op_c = [np.array([s.e_op for s in states])
+                        for states in self.layer_states]
+        self._volts_c = [np.array([s.voltages for s in states])
+                         for states in self.layer_states]
+
+    @property
+    def _t_op(self) -> list[np.ndarray]:
+        if self._t_op_c is None:
+            self._build_arrays()
+        return self._t_op_c
+
+    @property
+    def _e_op(self) -> list[np.ndarray]:
+        if self._e_op_c is None:
+            self._build_arrays()
+        return self._e_op_c
+
+    @property
+    def _volts(self) -> list[np.ndarray]:
+        if self._volts_c is None:
+            self._build_arrays()
+        return self._volts_c
 
     # -- accessors ----------------------------------------------------
     @property
@@ -180,36 +212,42 @@ class ScheduleProblem:
         (voltage change with neither endpoint gated) on ≥1 domain."""
         return self._ensure_trans(i)[2]
 
+    def padded_arrays(self) -> PaddedArrays:
+        """Dense padded per-layer tensors (cached): state axes rounded
+        up to a power-of-two bucket with a validity mask, so jitted
+        kernels keep stable shapes across rail subsets of one master
+        table (see :mod:`repro.core.backend`)."""
+        if self._padded is None:
+            self._padded = build_padded(self)
+        return self._padded
+
     # -- schedule evaluation -------------------------------------------
-    def evaluate_paths(self, paths) -> dict[str, np.ndarray]:
+    def evaluate_paths(self, paths, *,
+                       backend=None) -> dict[str, np.ndarray]:
         """Batched exact evaluation of P schedules in one shot.
 
         ``paths``: [P, L] integer state indices (anything array-like).
         Returns a dict of [P]-shaped arrays with the same keys/semantics
         as :meth:`evaluate` (plus ``paths`` echoing the input matrix).
-        All P schedules are costed with vectorized gathers — no per-layer
-        Python loop over candidates.
+        The cost gathers run on the pluggable array backend
+        (:mod:`repro.core.backend`): numpy by default, a jitted jax
+        evaluator when ``backend="jax"`` (or ``$PFDNN_BACKEND=jax``).
         """
         p = np.atleast_2d(np.asarray(paths, dtype=np.int64))
-        assert p.shape[1] == self.n_layers, \
-            f"paths must be [P, {self.n_layers}], got {p.shape}"
-        n = p.shape[0]
-        t_op = np.zeros(n)
-        e_op = np.zeros(n)
-        t_trans = np.zeros(n)
-        e_trans = np.zeros(n)
-        n_switch = np.zeros(n, dtype=np.int64)
-        for i in range(self.n_layers):
-            idx = p[:, i]
-            t_op += self._t_op[i][idx]
-            e_op += self._e_op[i][idx]
-            if i + 1 < self.n_layers:
-                tt, et, sw = self._ensure_trans(i)
-                nxt = p[:, i + 1]
-                t_trans += tt[idx, nxt]
-                e_trans += et[idx, nxt]
-                n_switch += sw[idx, nxt]
-        t_infer = t_op + t_trans
+        if p.ndim != 2 or p.shape[1] != self.n_layers:
+            raise ValueError(
+                f"paths must be [P, {self.n_layers}], got {p.shape}")
+        sizes = np.array([len(s) for s in self.layer_states])
+        if (p < 0).any() or (p >= sizes[None, :]).any():
+            raise ValueError(
+                "path state indices out of range for this problem's "
+                f"layer state counts {sizes.tolist()}")
+        costs = get_backend(backend).path_costs(self, p)
+        t_trans = costs["t_trans"]
+        e_trans = costs["e_trans"]
+        e_op = costs["e_op"]
+        n_switch = costs["n_switch"]
+        t_infer = costs["t_op"] + t_trans
         slack = self.t_max - t_infer
         e_idle = self.idle.energy_batch(slack)
         return {
@@ -250,7 +288,10 @@ class ScheduleProblem:
         count (they match the ``rail_switch`` mask of the transition
         model, not mere voltage-vector inequality).
         """
-        assert len(path) == self.n_layers
+        if len(path) != self.n_layers:
+            raise ValueError(
+                f"path must have {self.n_layers} entries, "
+                f"got {len(path)}")
         return self.result_row(self.evaluate_paths([list(path)]), 0)
 
     def schedule_space_upper_bound(self, n_levels: int, n_max: int,

@@ -40,43 +40,54 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
     e_margin *= 2.0
     p_idle = problem.idle.p_idle
 
+    # b dominates a ⇔ b is no slower AND cheaper even after paying
+    # worst-case transition-difference + idle for the saved time:
+    #   t[b] ≤ t[a]
+    #   e[b] + e_margin + P_idle·(t[a] − t[b] + t_margin) ≤ e[a]
+    # (In a `max()`-latency multi-domain model many states tie in
+    # latency and differ only in energy — that is where most of the
+    # pruning lives.  The ≤ on time can, in principle, grow T_infer
+    # by ≤ 2·t_rail = 30 ns through changed transitions; schedules
+    # within 30 ns of the deadline are below the timing-signoff
+    # margin anyway, and the identical-schedule property is verified
+    # empirically in tests, as the paper does in §6.5.)
+    # All layers are scored in one padded [L, S, S] shot; padded slots
+    # are excluded via the validity mask, never via inf arithmetic.
+    L = problem.n_layers
+    sizes = np.array([len(s) for s in problem.layer_states])
+    S = int(sizes.max())
+    t = np.zeros((L, S))
+    e = np.zeros((L, S))
+    for li in range(L):
+        ti, ei = problem.op_arrays(li)
+        t[li, :sizes[li]] = ti
+        e[li, :sizes[li]] = ei
+    valid = np.arange(S)[None, :] < sizes[:, None]
+
+    dt = t[:, None, :] - t[:, :, None]           # t[a] − t[b], [L, b, a]
+    t_ok = t[:, :, None] <= t[:, None, :]
+    e_ok = (e[:, :, None] + e_margin + p_idle * (dt + t_margin)
+            <= e[:, None, :])
+    dom = t_ok & e_ok & valid[:, :, None] & valid[:, None, :]
+    diag = np.arange(S)
+    dom[:, diag, diag] = False
+    # break mutual-domination ties deterministically (equal-cost
+    # duplicates): keep the lowest index of each tied group
+    mutual = dom & dom.transpose(0, 2, 1)
+    if mutual.any():
+        dom &= ~(mutual & (diag[:, None] > diag[None, :]))
+        del mutual
+    dominated = dom.any(axis=1)                  # [L, a]
+
     new_layers: list[list[StateCost]] = []
     index_maps: list[list[int]] = []
     removed_total = 0
-    for states in problem.layer_states:
-        t = np.array([s.t_op for s in states])
-        e = np.array([s.e_op for s in states])
+    for li, states in enumerate(problem.layer_states):
         n = len(states)
-        # b dominates a ⇔ b is no slower AND cheaper even after paying
-        # worst-case transition-difference + idle for the saved time:
-        #   t[b] ≤ t[a]
-        #   e[b] + e_margin + P_idle·(t[a] − t[b] + t_margin) ≤ e[a]
-        # (In a `max()`-latency multi-domain model many states tie in
-        # latency and differ only in energy — that is where most of the
-        # pruning lives.  The ≤ on time can, in principle, grow T_infer
-        # by ≤ 2·t_rail = 30 ns through changed transitions; schedules
-        # within 30 ns of the deadline are below the timing-signoff
-        # margin anyway, and the identical-schedule property is verified
-        # empirically in tests, as the paper does in §6.5.)
-        dt = t[None, :] - t[:, None]                 # t[a] − t[b], [b, a]
-        t_ok = t[:, None] <= t[None, :]
-        e_ok = (e[:, None] + e_margin + p_idle * (dt + t_margin)
-                <= e[None, :])
-        dom = t_ok & e_ok
-        np.fill_diagonal(dom, False)
-        dominated = dom.any(axis=0)
-        # break mutual-domination ties deterministically (equal-cost
-        # duplicates): keep the lowest index of each tied group
-        mutual = dom & dom.T
-        if mutual.any():
-            bi, ai = np.nonzero(mutual)
-            for b, a in zip(bi, ai):
-                if b > a:
-                    dom[b, a] = False
-            dominated = dom.any(axis=0)
-        keep_idx = [i for i in range(n) if not dominated[i]]
+        keep = np.nonzero(~dominated[li, :n])[0]
+        keep_idx = [int(i) for i in keep]
         if not keep_idx:                  # never empty a layer
-            keep_idx = [int(np.argmin(e))]
+            keep_idx = [int(np.argmin(e[li, :n]))]
         new_layers.append([states[i] for i in keep_idx])
         index_maps.append(keep_idx)
         removed_total += n - len(keep_idx)
@@ -89,9 +100,15 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
         rails=problem.rails,
         name=problem.name + "+pruned",
     )
-    # share the parent's already-materialized transition matrices as
-    # index slices — the pruned view never re-runs _pairwise_transition
-    # for pairs the parent (e.g. a CompilationContext slice) already has
+    # share the parent's already-materialized arrays as index slices —
+    # the pruned view never re-runs _pairwise_transition (or the
+    # per-state array derivation) for data the parent already has
+    pruned._t_op_c = [problem._t_op[i][keep]
+                      for i, keep in enumerate(index_maps)]
+    pruned._e_op_c = [problem._e_op[i][keep]
+                      for i, keep in enumerate(index_maps)]
+    pruned._volts_c = [problem._volts[i][keep]
+                       for i, keep in enumerate(index_maps)]
     for i, (tt, et, sw) in problem._trans_cache.items():
         sel = np.ix_(index_maps[i], index_maps[i + 1])
         pruned._trans_cache[i] = (tt[sel], et[sel], sw[sel])

@@ -44,6 +44,7 @@ def select_rails(
     *,
     subsets: Iterable[tuple[float, ...]] | None = None,
     bound_fn: Callable[[tuple[float, ...]], float] | None = None,
+    workers: int | None = None,
 ) -> tuple[dict | None, tuple[float, ...] | None, dict]:
     """Enumerate rail subsets, solve each, keep the best feasible.
 
@@ -61,20 +62,36 @@ def select_rails(
     bound cannot beat the incumbent are cut without solving — since the
     bound is sound this never changes the selected subset (ties keep the
     earlier incumbent, exactly as the strict ``<`` comparison does).
-    """
-    best: dict | None = None
-    best_subset: tuple[float, ...] | None = None
-    infeasible_vmax_ceiling = -np.inf     # max rail of infeasible subsets
-    stats = {"subsets_total": 0, "subsets_solved": 0,
-             "subsets_skipped": 0, "subsets_cut": 0}
-    hint: dict = {"lam_hint": None}
-    takes_hint = _accepts_hint(solve_fn)
 
+    ``workers > 1`` fans the sweep out over a thread pool (``solve_fn``
+    must then be thread-safe).  The parallel sweep preserves the exact
+    selected-subset semantics of the sequential one: the ceiling and the
+    incumbent cut only ever *skip provably non-winning work* (a ceiling
+    skip is provably deadline-infeasible, a cut subset's energy is
+    provably ≥ the final incumbent under the strict ``<`` tie rule), and
+    the final selection is the lexicographic minimum of
+    ``(e_total, enumeration order)`` over all solved subsets — exactly
+    the subset the sequential loop's first-strict-improvement rule
+    keeps, regardless of completion order.
+    """
     subset_list = list(subsets) if subsets is not None else \
         all_rail_subsets(levels, n_max)
     # try high-voltage subsets first so the infeasibility ceiling is
     # established early
     subset_list.sort(key=lambda s: -max(s))
+    takes_hint = _accepts_hint(solve_fn)
+
+    if workers is not None and workers > 1:
+        return _select_rails_parallel(subset_list, solve_fn,
+                                      bound_fn=bound_fn, workers=workers,
+                                      takes_hint=takes_hint)
+
+    best: dict | None = None
+    best_subset: tuple[float, ...] | None = None
+    infeasible_vmax_ceiling = -np.inf     # max rail of infeasible subsets
+    stats = {"subsets_total": 0, "subsets_solved": 0,
+             "subsets_skipped": 0, "subsets_cut": 0, "workers": 1}
+    hint: dict = {"lam_hint": None}
 
     for subset in subset_list:
         stats["subsets_total"] += 1
@@ -101,6 +118,124 @@ def select_rails(
         if best is None or result["e_total"] < best["e_total"]:
             best = result
             best_subset = subset
+    return best, best_subset, stats
+
+
+def _select_rails_parallel(
+    subset_list: list[tuple[float, ...]],
+    solve_fn: Callable[..., dict | None],
+    *,
+    bound_fn: Callable[[tuple[float, ...]], float] | None,
+    workers: int,
+    takes_hint: bool,
+) -> tuple[dict | None, tuple[float, ...] | None, dict]:
+    """Thread-pool sweep with a shared incumbent bound, a shared
+    infeasibility ceiling, and best-effort λ*-hint propagation.
+
+    Dispatch is throttled (≤ 2·workers in flight) so late-arriving
+    incumbents/ceilings still prune most of the enumeration; each worker
+    re-checks the cuts right before solving.  Out-of-order completion
+    can only make the cuts *weaker* (more subsets solved), never skip a
+    subset the sequential sweep would have solved to a winner — see
+    :func:`select_rails` for why the selection is exactly preserved.
+    """
+    import threading
+    from concurrent.futures import (
+        FIRST_COMPLETED,
+        ThreadPoolExecutor,
+        wait,
+    )
+
+    stats = {"subsets_total": 0, "subsets_solved": 0,
+             "subsets_skipped": 0, "subsets_cut": 0, "workers": workers}
+    lock = threading.Lock()
+    # the incumbent is the lexicographic (e_total, enumeration index)
+    # minimum so far — the index matters for cut soundness: a subset may
+    # only be cut on a bound *tie* when the incumbent enumerates earlier
+    # (the sequential tie rule keeps the earlier subset).  With a plain
+    # ≥-cut, a later-enumerated tie completing first could cut the
+    # subset the sequential sweep would have selected.
+    shared = {"ceiling": -np.inf, "incumbent": np.inf,
+              "incumbent_idx": -1, "lam_hint": None}
+    results: dict[int, dict] = {}       # enumeration index -> result
+
+    def passes_cuts(idx: int, subset: tuple[float, ...]) -> str | None:
+        """Returns the skip reason, or None when the subset must solve."""
+        with lock:
+            ceiling = shared["ceiling"]
+            incumbent = shared["incumbent"]
+            incumbent_idx = shared["incumbent_idx"]
+        if max(subset) <= ceiling:
+            return "subsets_skipped"
+        if bound_fn is not None and np.isfinite(incumbent):
+            bound = bound_fn(subset)
+            if incumbent < bound or (incumbent == bound
+                                     and incumbent_idx < idx):
+                return "subsets_cut"
+        return None
+
+    def worker(idx: int, subset: tuple[float, ...]
+               ) -> tuple[str, dict | None]:
+        # state may have improved since dispatch — re-check before the
+        # expensive solve (wasted-work reduction only, never required
+        # for correctness)
+        reason = passes_cuts(idx, subset)
+        if reason is not None:
+            return reason, None
+        if takes_hint:
+            with lock:
+                hint = {"lam_hint": shared["lam_hint"]}
+            result = solve_fn(subset, hint=hint)
+        else:
+            result = solve_fn(subset)
+        with lock:
+            if result is None:
+                shared["ceiling"] = max(shared["ceiling"], max(subset))
+            else:
+                if result.get("lambda_star"):
+                    shared["lam_hint"] = result["lambda_star"]
+                e = result["e_total"]
+                if (e, idx) < (shared["incumbent"],
+                               shared["incumbent_idx"]):
+                    shared["incumbent"] = e
+                    shared["incumbent_idx"] = idx
+        return "subsets_solved", result
+
+    indexed = iter(enumerate(subset_list))
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        futures: dict = {}
+
+        def fill() -> None:
+            while len(futures) < 2 * workers:
+                for idx, subset in indexed:
+                    stats["subsets_total"] += 1
+                    reason = passes_cuts(idx, subset)
+                    if reason is not None:
+                        stats[reason] += 1
+                        continue
+                    futures[ex.submit(worker, idx, subset)] = idx
+                    break
+                else:
+                    return
+
+        fill()
+        while futures:
+            done, _ = wait(futures, return_when=FIRST_COMPLETED)
+            for fut in done:
+                idx = futures.pop(fut)
+                kind, result = fut.result()
+                stats[kind] += 1
+                if kind == "subsets_solved" and result is not None:
+                    results[idx] = result
+            fill()
+
+    best: dict | None = None
+    best_subset: tuple[float, ...] | None = None
+    for idx in sorted(results):
+        result = results[idx]
+        if best is None or result["e_total"] < best["e_total"]:
+            best = result
+            best_subset = subset_list[idx]
     return best, best_subset, stats
 
 

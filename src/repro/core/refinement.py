@@ -67,48 +67,52 @@ def refine_paths(problem: ScheduleProblem,
     p = np.asarray([list(path) for path in paths], dtype=np.int64)
     n_cand, n_layers = p.shape
     assert n_layers == problem.n_layers
-    sizes = [len(s) for s in problem.layer_states]
-    s_max = max(sizes)
     ev = problem.evaluate_paths(p)
     t_infer = ev["t_infer"].copy()
     e_idle = ev["e_idle"].copy()
     moves = np.zeros(n_cand, dtype=np.int64)
     active = np.full(n_cand, max_moves > 0, dtype=bool)
 
+    # dense padded per-layer tensors: every move pass scores all
+    # (candidate, layer, state) replacements with a handful of whole-
+    # tensor gathers instead of a Python loop over layers
+    padded = problem.padded_arrays()
+    s_pad = padded.s_pad
+    li = np.arange(n_layers)[None, :]
+    lt = np.arange(max(n_layers - 1, 0))[None, :]
+
     while True:
         act = np.nonzero(active)[0]
         if act.size == 0:
             break
         pa = p[act]                                     # [A, L]
-        # padded [A, L, S_max] move tensors (padding stays +inf)
-        d_t = np.full((act.size, n_layers, s_max), np.inf)
-        d_e = np.full((act.size, n_layers, s_max), np.inf)
-        for i in range(n_layers):
-            ti, ei = problem.op_arrays(i)
-            cur = pa[:, i]
-            # same accumulation order as the scalar move deltas
-            dt = ti[None, :] - ti[cur][:, None]
-            de = ei[None, :] - ei[cur][:, None]
-            if i > 0:
-                tt, et = problem.transition_arrays(i - 1)
-                prev = pa[:, i - 1]
-                dt = dt + tt[prev, :] - tt[prev, cur][:, None]
-                de = de + et[prev, :] - et[prev, cur][:, None]
-            if i + 1 < n_layers:
-                tt, et = problem.transition_arrays(i)
-                nxt = pa[:, i + 1]
-                dt = dt + tt[:, nxt].T - tt[cur, nxt][:, None]
-                de = de + et[:, nxt].T - et[cur, nxt][:, None]
-            d_t[:, i, :sizes[i]] = dt
-            d_e[:, i, :sizes[i]] = de
+        # [A, L, S] move tensors, same accumulation order as the scalar
+        # move deltas: Δop, then the inbound edge, then the outbound
+        d_t = padded.t_op[None, :, :] \
+            - padded.t_op[li, pa][:, :, None]
+        d_e = padded.e_op[None, :, :] \
+            - padded.e_op[li, pa][:, :, None]
+        if n_layers > 1:
+            prev, cur_t = pa[:, :-1], pa[:, 1:]         # inbound, i ≥ 1
+            d_t[:, 1:, :] += padded.t_trans[lt, prev, :]
+            d_t[:, 1:, :] -= padded.t_trans[lt, prev, cur_t][:, :, None]
+            d_e[:, 1:, :] += padded.e_trans[lt, prev, :]
+            d_e[:, 1:, :] -= padded.e_trans[lt, prev, cur_t][:, :, None]
+            cur_h, nxt = pa[:, :-1], pa[:, 1:]          # outbound, i < L-1
+            d_t[:, :-1, :] += padded.t_trans[lt, :, nxt]
+            d_t[:, :-1, :] -= padded.t_trans[lt, cur_h, nxt][:, :, None]
+            d_e[:, :-1, :] += padded.e_trans[lt, :, nxt]
+            d_e[:, :-1, :] -= padded.e_trans[lt, cur_h, nxt][:, :, None]
+        # padded states are not real moves: ΔT → inf makes them
+        # infeasible, which the feasibility mask turns into Δ = inf
+        d_t = np.where(padded.valid[None, :, :], d_t, np.inf)
         new_t = t_infer[act][:, None, None] + d_t
         feasible = new_t <= problem.t_max + 1e-15
         # Δ total energy includes the idle-energy change from ΔT
         e_idle_new = problem.idle.energy_batch(problem.t_max - new_t)
         d_total = d_e + (e_idle_new - e_idle[act][:, None, None])
         d_total = np.where(feasible, d_total, np.inf)
-        d_total[np.arange(act.size)[:, None],
-                np.arange(n_layers)[None, :], pa] = np.inf   # no-op moves
+        d_total[np.arange(act.size)[:, None], li, pa] = np.inf  # no-ops
         flat = d_total.reshape(act.size, -1)
         best = np.argmin(flat, axis=1)
         gain = -flat[np.arange(act.size), best]
@@ -117,7 +121,7 @@ def refine_paths(problem: ScheduleProblem,
         rows = act[accept]
         if rows.size == 0:
             break
-        p[rows, best[accept] // s_max] = best[accept] % s_max
+        p[rows, best[accept] // s_pad] = best[accept] % s_pad
         moves[rows] += 1
         ev2 = problem.evaluate_paths(p[rows])
         t_infer[rows] = ev2["t_infer"]

@@ -1,0 +1,253 @@
+"""Batched multi-λ DP engine, pluggable backend, and parallel rail
+sweep: equivalence with the scalar/sequential implementations.
+
+The contracts under test (see ISSUE 2 / ROADMAP):
+  - ``dp_paths_multi`` rows match per-λ ``dp_best_path`` exactly;
+  - the batched λ search selects the same schedule/energy as the legacy
+    scalar bisection (``batch_lambda=False``);
+  - the jax backend (optional, ``importorskip``) matches the numpy
+    backend bit-for-bit on paths and to float tolerance on evaluations,
+    including the golden pipeline outputs;
+  - the parallel sweep selects the same rails as the sequential sweep
+    under out-of-order completion, ties included.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from conftest import max_rate, random_problem
+from repro.core import (
+    OrchestratorConfig,
+    available_backends,
+    compile_power_schedule,
+    dp_best_path,
+    dp_paths_multi,
+    dp_paths_multi_weighted,
+    get_backend,
+    min_time_path,
+    select_rails,
+    solve_lambda_dp,
+)
+from repro.models.edge_cnn import edge_network
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "pipeline.json")
+    .read_text())
+
+
+def _mus(problem):
+    return [0.0, -problem.idle.p_sleep, 1e-3, 0.7, 50.0, 1e5]
+
+
+# ------------------------------------------------- batched DP kernel
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dp_multi_rows_match_scalar_dp(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=6, n_states=5)
+    mus = _mus(prob)
+    multi = dp_paths_multi(prob, mus)
+    assert multi.shape == (len(mus), prob.n_layers)
+    for j, mu in enumerate(mus):
+        assert list(multi[j]) == dp_best_path(prob, mu), mu
+
+
+def test_dp_multi_weighted_min_time_row():
+    rng = np.random.default_rng(3)
+    prob = random_problem(rng, n_layers=5, n_states=4)
+    row = dp_paths_multi_weighted(prob, [0.0], [1.0])[0]
+    assert list(row) == min_time_path(prob)
+
+
+def test_dp_multi_validates_weights():
+    rng = np.random.default_rng(0)
+    prob = random_problem(rng, n_layers=3, n_states=3)
+    with pytest.raises(ValueError, match="equal-length"):
+        dp_paths_multi_weighted(prob, [1.0, 1.0], [0.0])
+
+
+# --------------------------------------------- batched λ search
+
+@pytest.mark.parametrize("seed", range(10))
+def test_batched_search_matches_scalar_bisection(seed):
+    """Selected schedule/energy identical between the batched engine
+    and the legacy scalar bisection (tight and loose deadlines)."""
+    rng = np.random.default_rng(seed)
+    scale = 0.9 if seed % 2 else 1.0
+    prob = random_problem(rng, n_layers=6, n_states=5,
+                          t_max_scale=scale)
+    b1, c1, s1 = solve_lambda_dp(prob, batch_lambda=True)
+    b2, c2, s2 = solve_lambda_dp(prob, batch_lambda=False)
+    assert (b1 is None) == (b2 is None)
+    if b1 is None:
+        return
+    assert b1["e_total"] == pytest.approx(b2["e_total"], rel=1e-9)
+    assert b1["feasible"] and b2["feasible"]
+    # the engine's whole point: fewer DP invocations
+    assert s1.dp_calls < s2.dp_calls
+
+
+def test_batched_search_warm_hint_converges():
+    rng = np.random.default_rng(17)
+    prob = random_problem(rng, n_layers=6, n_states=5, t_max_scale=0.9)
+    cold, _, sc = solve_lambda_dp(prob, batch_lambda=True)
+    if cold is None:
+        pytest.skip("instance infeasible")
+    warm, _, sw = solve_lambda_dp(prob, batch_lambda=True,
+                                  lam_hint=sc.lambda_star)
+    assert warm["e_total"] == pytest.approx(cold["e_total"], rel=1e-9)
+
+
+def test_infeasible_deadline_batched_returns_none():
+    rng = np.random.default_rng(33)
+    prob = random_problem(rng, n_layers=4, n_states=3, t_max_scale=1e-6)
+    best, cands, _ = solve_lambda_dp(prob, batch_lambda=True)
+    assert best is None and cands == []
+
+
+# -------------------------------------------------- input validation
+
+def test_evaluate_paths_rejects_bad_shapes():
+    rng = np.random.default_rng(1)
+    prob = random_problem(rng, n_layers=4, n_states=3)
+    with pytest.raises(ValueError, match="paths must be"):
+        prob.evaluate_paths([[0, 0]])                  # wrong L
+    with pytest.raises(ValueError, match="out of range"):
+        prob.evaluate_paths([[0, 0, 0, 99]])           # bad state index
+    with pytest.raises(ValueError, match="entries"):
+        prob.evaluate([0, 0])                          # wrong L (scalar)
+
+
+# ---------------------------------------------------- backend registry
+
+def test_backend_registry():
+    assert "numpy" in available_backends()
+    bk = get_backend("numpy")
+    assert bk.name == "numpy" and not bk.jitted
+    assert get_backend(bk) is bk                        # instance pass-through
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("tpu")
+
+
+def test_backend_env_default(monkeypatch):
+    monkeypatch.setenv("PFDNN_BACKEND", "numpy")
+    assert get_backend(None).name == "numpy"
+
+
+# ------------------------------------------------------- jax backend
+
+jax_only = pytest.mark.skipif("jax" not in available_backends(),
+                              reason="jax not installed")
+
+
+@jax_only
+@pytest.mark.parametrize("seed", range(6))
+def test_jax_dp_multi_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n_layers=6, n_states=5)
+    mus = _mus(prob)
+    np.testing.assert_array_equal(
+        dp_paths_multi(prob, mus, backend="jax"),
+        dp_paths_multi(prob, mus, backend="numpy"))
+
+
+@jax_only
+def test_jax_evaluate_paths_matches_numpy():
+    rng = np.random.default_rng(5)
+    prob = random_problem(rng, n_layers=6, n_states=5)
+    paths = [[int(rng.integers(len(s))) for s in prob.layer_states]
+             for _ in range(16)]
+    a = prob.evaluate_paths(paths, backend="numpy")
+    b = prob.evaluate_paths(paths, backend="jax")
+    for key in ("t_infer", "e_op", "e_trans", "t_trans", "e_idle",
+                "e_total"):
+        np.testing.assert_allclose(a[key], b[key], rtol=1e-12, atol=0)
+    np.testing.assert_array_equal(a["n_rail_switches"],
+                                  b["n_rail_switches"])
+    np.testing.assert_array_equal(a["feasible"], b["feasible"])
+
+
+@jax_only
+def test_jax_backend_reproduces_golden_pipeline():
+    """One full compile per policy family on the jitted jax backend —
+    outputs must equal the (numpy-produced) golden file."""
+    key = "squeezenet1.1|0.9|2|pfdnn"
+    golden = GOLDEN[key]
+    network, frac, n_rails, policy = key.split("|")
+    s = compile_power_schedule(
+        edge_network(network), max_rate(network) * float(frac),
+        cfg=OrchestratorConfig(policy=policy, n_max_rails=int(n_rails),
+                               backend="jax"),
+        network=network)
+    assert s.e_total == pytest.approx(golden["e_total"], rel=1e-9)
+    assert list(s.rails) == golden["rails"]
+    assert [list(v) for v in s.layer_voltages] == golden["layer_voltages"]
+
+
+# ------------------------------------------------------ parallel sweep
+
+def _tie_heavy_solver(record=None):
+    """Deterministic per-subset results with deliberate e_total ties, an
+    infeasible band (exercises the ceiling), and an incumbent-cuttable
+    tail; sleeps perturb completion order."""
+    import random
+    import time
+
+    rnd = random.Random(0xC0FFEE)
+
+    def solve(subset, hint=None):
+        if record is not None:
+            record.append(dict(hint or {}))
+        time.sleep(rnd.uniform(0.0, 0.004))
+        if max(subset) < 1.0:
+            return None                      # deadline-infeasible band
+        return {"e_total": float(len(subset)),      # ties per size class
+                "lambda_star": sum(subset)}
+
+    return solve
+
+
+def test_parallel_select_rails_matches_serial_with_ties():
+    levels = [0.9, 0.95, 1.0, 1.1, 1.2, 1.3]
+    bound = lambda s: float(len(s))          # exact → cuts ≥-incumbent
+    b_serial, rails_serial, st_serial = select_rails(
+        levels, 2, _tie_heavy_solver(), bound_fn=bound)
+    for attempt in range(3):                 # vary completion order
+        b_par, rails_par, st_par = select_rails(
+            levels, 2, _tie_heavy_solver(), bound_fn=bound, workers=4)
+        assert rails_par == rails_serial
+        assert b_par["e_total"] == b_serial["e_total"]
+        assert st_par["workers"] == 4
+        assert st_par["subsets_total"] == st_serial["subsets_total"]
+        assert (st_par["subsets_solved"] + st_par["subsets_skipped"]
+                + st_par["subsets_cut"]) == st_par["subsets_total"]
+
+
+def test_parallel_sweep_propagates_hints():
+    hints: list[dict] = []
+    select_rails([0.9, 1.0, 1.1], 2, _tie_heavy_solver(hints), workers=2)
+    assert hints and all("lam_hint" in h for h in hints)
+    # at least one non-initial solve must have seen a propagated λ*
+    assert any(h["lam_hint"] is not None for h in hints[1:])
+
+
+def test_parallel_pfdnn_compile_matches_serial():
+    """End-to-end: the fanned-out pfdnn sweep emits the identical
+    schedule as the sequential one."""
+    network = "squeezenet1.1"
+    specs = edge_network(network)
+    rate = max_rate(network) * 0.8
+    serial = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy="pfdnn", n_max_rails=2),
+        network=network)
+    par = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy="pfdnn", n_max_rails=2,
+                                            sweep_workers=2),
+        network=network)
+    assert par.rails == serial.rails
+    assert par.e_total == pytest.approx(serial.e_total, rel=1e-9)
+    assert par.layer_voltages == serial.layer_voltages
+    assert par.solver_stats["workers"] == 2
