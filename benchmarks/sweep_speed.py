@@ -22,6 +22,13 @@ non-empty rails.  It runs a different rail budget than the recorded
 baseline, so no energy comparison is made and no timing is asserted.
 ``--backend``/``--workers`` select the solver array backend and the
 rail-sweep thread fan-out; both are recorded in every result row.
+``--no-stack`` times the legacy per-subset sweep instead of the
+subset-stacked engine.
+
+The full run's ``comparison`` block carries per-config speedups and
+``dp_calls``/``dp_lambdas`` deltas vs baseline and previous PR, plus a
+``smoke_backends`` block with warm (post-jit) per-backend walls on the
+smoke config.
 """
 
 from __future__ import annotations
@@ -50,8 +57,8 @@ N_MAX_RAILS = 3
 
 
 def run_sweeps(*, smoke: bool = False, backend: str | None = None,
-               workers: int | None = None, reps: int = 5
-               ) -> dict[str, dict]:
+               workers: int | None = None, reps: int = 5,
+               stack: bool = True) -> dict[str, dict]:
     out: dict[str, dict] = {}
     configs = SMOKE_CONFIGS if smoke else CONFIGS
     policies = SMOKE_POLICIES if smoke else POLICIES
@@ -66,7 +73,8 @@ def run_sweeps(*, smoke: bool = False, backend: str | None = None,
             for _ in range(reps):
                 s, wall = timed(schedule_for, network, rate, policy,
                                 n_max_rails=n_rails, backend=backend,
-                                sweep_workers=workers)
+                                sweep_workers=workers,
+                                stack_subsets=stack)
                 walls.append(wall)
             wall = min(walls)             # best-of-reps: noise guard
             stats = s.solver_stats if s is not None else {}
@@ -85,6 +93,8 @@ def run_sweeps(*, smoke: bool = False, backend: str | None = None,
                 "candidates_evaluated": stats.get("candidates_evaluated"),
                 "backend": stats.get("backend", "numpy"),
                 "workers": stats.get("workers", 1),
+                "stacked_rounds": stats.get("stacked_rounds"),
+                "stacked_calls": stats.get("stacked_calls"),
             }
             print(f"{key}: {wall:.2f}s  "
                   f"E={out[key]['e_total']}  rails={out[key]['rails']}  "
@@ -112,11 +122,42 @@ def compare(results: dict[str, dict], reference: dict[str, dict],
                 and abs(base["e_total"] - cur["e_total"])
                 <= 1e-9 * abs(base["e_total"])),
         }
+        # solver-work deltas: how much DP the engine saved, not just
+        # how fast the wall got (wall is host-noise-sensitive)
+        for stat in ("dp_calls", "dp_lambdas"):
+            if base.get(stat) and cur.get(stat):
+                comparison[key][f"{stat}_delta"] = {
+                    "before": base[stat], "after": cur[stat],
+                    "ratio": base[stat] / cur[stat]}
         print(f"{key} vs {against}: "
               f"speedup {comparison[key]['speedup']:.2f}x  "
               f"same_rails={comparison[key]['same_rails']}  "
               f"same_energy={comparison[key]['same_energy']}")
     return comparison
+
+
+def smoke_backend_compare(reps: int = 3) -> dict[str, dict]:
+    """Warm per-backend walls on the smoke config (first compile per
+    backend is discarded — it pays one-time jit compilation).  Records
+    the 'jax no longer slower than numpy' claim of the stacked sweep."""
+    from repro.core.backend import available_backends
+
+    (network, frac), = SMOKE_CONFIGS
+    rate = max_rate(network) * frac
+    out: dict[str, dict] = {}
+    for backend in available_backends():
+        schedule_for(network, rate, "pfdnn", n_max_rails=2,
+                     backend=backend)                        # warm-up
+        walls = []
+        for _ in range(reps):
+            s, wall = timed(schedule_for, network, rate, "pfdnn",
+                            n_max_rails=2, backend=backend)
+
+            walls.append(wall)
+        out[backend] = {"wall_s": min(walls), "wall_all_s": walls,
+                        "e_total": s.e_total, "rails": list(s.rails)}
+        print(f"smoke[{backend}]: {min(walls):.3f}s warm (best of {reps})")
+    return out
 
 
 def main() -> None:
@@ -133,10 +174,12 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None,
                     help="rail-sweep thread fan-out (default: "
                          "$PFDNN_WORKERS or serial)")
+    ap.add_argument("--no-stack", action="store_true",
+                    help="legacy per-subset sweep (stack_subsets=False)")
     args = ap.parse_args()
 
     results = run_sweeps(smoke=args.smoke, backend=args.backend,
-                         workers=args.workers)
+                         workers=args.workers, stack=not args.no_stack)
     if args.smoke:
         row = next(iter(results.values()))
         assert row["e_total"] is not None and row["rails"], \
@@ -166,10 +209,15 @@ def main() -> None:
         report["previous"] = prev
         prev_cmp = compare(results, prev, against="previous PR")
         for key, row in prev_cmp.items():
-            report.setdefault("comparison", {}).setdefault(key, {})[
-                "speedup_vs_prev"] = row["speedup"]
-            report["comparison"][key]["same_vs_prev"] = (
-                row["same_rails"] and row["same_energy"])
+            cmp_row = report.setdefault("comparison", {}).setdefault(
+                key, {})
+            cmp_row["speedup_vs_prev"] = row["speedup"]
+            cmp_row["same_vs_prev"] = (row["same_rails"]
+                                       and row["same_energy"])
+            for stat in ("dp_calls_delta", "dp_lambdas_delta"):
+                if stat in row:
+                    cmp_row[f"{stat}_vs_prev"] = row[stat]
+    report["smoke_backends"] = smoke_backend_compare()
     pathlib.Path(args.out).write_text(json.dumps(report, indent=1))
     print(f"wrote {args.out}")
 

@@ -23,11 +23,13 @@ from repro.core.greedy import min_energy_path, solve_greedy
 from repro.core.ilp import IlpBlowupError, solve_ilp
 from repro.core.lambda_dp import (
     SolverStats,
+    StackedLambdaTask,
     dp_best_path,
     dp_paths,
     dp_paths_multi,
     dp_paths_multi_weighted,
     kbest_paths,
+    kbest_paths_multi,
     min_time_path,
     solve_lambda_dp,
 )
@@ -44,6 +46,7 @@ from repro.core.rails import (
     all_rail_subsets,
     evenly_spaced_rails,
     select_rails,
+    select_rails_stacked,
 )
 from repro.core.refinement import refine_candidates, refine_path
 from repro.core.schedule import PowerSchedule
@@ -62,15 +65,17 @@ __all__ = [
     "ScheduleProblem", "StateCost", "IdleModel",
     "CompilationContext", "register_policy", "get_policy",
     "solve_lambda_dp", "dp_paths", "dp_best_path", "kbest_paths",
+    "kbest_paths_multi",
     "dp_paths_multi", "dp_paths_multi_weighted",
     "min_time_path",
-    "SolverStats",
+    "SolverStats", "StackedLambdaTask",
     "get_backend", "available_backends",
     "refine_candidates", "refine_path",
     "prune_problem", "unprune_path",
     "solve_ilp", "IlpBlowupError",
     "solve_greedy", "min_energy_path",
-    "select_rails", "evenly_spaced_rails", "all_rail_subsets",
+    "select_rails", "select_rails_stacked", "evenly_spaced_rails",
+    "all_rail_subsets",
     "build_edge_problem", "build_idle_model",
     "compile_power_schedule", "OrchestratorConfig", "POLICIES",
     "PowerSchedule",

@@ -1,9 +1,9 @@
 """Pluggable array backend for the solver's numeric hot paths.
 
-The batched multi-λ DP kernel and the batch path evaluator run behind a
-small backend interface so the same solver code executes on plain numpy
-(the dependency-free default) or on ``jax.numpy`` with ``jit`` when jax
-is installed:
+The batched multi-λ DP kernel, the fused multi-μ k-best frontier, and
+the batch path evaluator run behind a small backend interface so the
+same solver code executes on plain numpy (the dependency-free default)
+or on ``jax.numpy`` with ``jit`` when jax is installed:
 
   - :class:`NumpyBackend` — the default.  The DP recurrence is
     numpy-vectorized over ``[K, S_prev, S_next]`` (λ batch × states);
@@ -20,6 +20,19 @@ is installed:
     enforced per-call via ``jax.experimental.enable_x64`` so the global
     x64 flag (and the rest of the repo's float32 jax code) is untouched.
 
+Every kernel also has a **subset-stacked** variant that takes a
+:class:`StackedArrays` — the padded tensors of B same-bucket rail
+subsets stacked along a new leading axis — and solves all of them in
+ONE backend call (``dp_multi_stacked``: ``[B, K, S, S]`` reductions,
+``kbest_multi_stacked``, ``path_costs_stacked``).  Lanes are fully
+independent, so per-lane results are bit-identical to the non-stacked
+call on that subset's own padded tensors; the round-based rail-subset
+scheduler (:func:`repro.core.rails.select_rails_stacked`) relies on
+exactly this to stay provably selection-identical to the sequential
+sweep.  On jax the stacked kernels are ``vmap(lax.scan)`` programs and
+the lane count is padded to a power-of-two bucket so rounds of
+different widths reuse one compilation.
+
 Backend selection: ``get_backend(None)`` honours the ``PFDNN_BACKEND``
 environment variable (``numpy`` | ``jax``), defaulting to numpy, so the
 jax path stays strictly opt-in.
@@ -29,13 +42,18 @@ and carry a ``valid`` mask; kernels mask *after* applying the λ weights
 (``inf`` only ever enters post-weighting), so negative idle-priced μ
 never produces ``inf · μ`` NaNs.  Valid states occupy the index prefix
 of every padded axis, which keeps ``argmin`` first-occurrence tie
-breaking identical between the padded and the ragged kernels.
+breaking identical between the padded and the ragged kernels.  The
+k-best kernels break cost ties by the stable ``(value, flat index)``
+order — deterministic and identical across backends and across the
+stacked/non-stacked variants (padding slots cost ``inf`` and sit after
+every valid index, so they never displace a valid tie).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
+from typing import Sequence
 
 import numpy as np
 
@@ -58,6 +76,11 @@ class PaddedArrays:
     e_trans: np.ndarray     # [L-1, S, S] float64, padded with 0
     switch: np.ndarray      # [L-1, S, S] int64 rail-switch flags
     sizes: tuple[int, ...]  # true per-layer state counts
+    # per-instance scratch for backend device copies (jax converts the
+    # tensors once per instance instead of once per kernel call); the
+    # arrays above are immutable, so cached conversions never go stale
+    dev_cache: dict = dataclasses.field(default_factory=dict,
+                                        compare=False, repr=False)
 
     @property
     def n_layers(self) -> int:
@@ -82,9 +105,16 @@ def pad_bucket(n: int) -> int:
 
 
 def build_padded(problem) -> PaddedArrays:
-    """Materialize a problem's padded tensors (see module docstring)."""
+    """Materialize a problem's padded tensors (see module docstring).
+
+    Pad slots of the op tensors are 0 with ``valid`` False; pad slots
+    of the transition tensors carry no contract at all — every kernel
+    either slices them away or masks them through the inf node costs,
+    so the master-backed fast path below may leave arbitrary (finite)
+    master values there.
+    """
     L = problem.n_layers
-    sizes = tuple(len(s) for s in problem.layer_states)
+    sizes = problem.sizes
     S = pad_bucket(max(sizes))
     t_op = np.zeros((L, S))
     e_op = np.zeros((L, S))
@@ -94,6 +124,27 @@ def build_padded(problem) -> PaddedArrays:
         t_op[i, :sizes[i]] = t
         e_op[i, :sizes[i]] = e
         valid[i, :sizes[i]] = True
+    if L > 1 and problem._trans_src is not None \
+            and not problem._trans_cache:
+        srcs = [problem._trans_src(i) for i in range(L - 1)]
+        if all(s[0] is srcs[0][0] for s in srcs[1:]):
+            # every pair shares ONE master matrix (the common case —
+            # most adjacent layers have identical voltage tables):
+            # gather all L-1 padded slabs in three fancy-index shots
+            # instead of 3·(L-1) per-pair slices.  Pad slots replicate
+            # master row/col 0 — finite garbage, never read (above).
+            mt, me, msw = srcs[0]
+            rows = np.zeros((L - 1, S), dtype=np.int64)
+            cols = np.zeros((L - 1, S), dtype=np.int64)
+            for i in range(L - 1):
+                rows[i, :sizes[i]] = problem._trans_sel[i]
+                cols[i, :sizes[i + 1]] = problem._trans_sel[i + 1]
+            ri = rows[:, :, None]
+            ci = cols[:, None, :]
+            return PaddedArrays(
+                t_op=t_op, e_op=e_op, valid=valid,
+                t_trans=mt[ri, ci], e_trans=me[ri, ci],
+                switch=msw[ri, ci], sizes=sizes)
     t_trans = np.zeros((max(L - 1, 0), S, S))
     e_trans = np.zeros((max(L - 1, 0), S, S))
     switch = np.zeros((max(L - 1, 0), S, S), dtype=np.int64)
@@ -106,6 +157,123 @@ def build_padded(problem) -> PaddedArrays:
     return PaddedArrays(t_op=t_op, e_op=e_op, valid=valid,
                         t_trans=t_trans, e_trans=e_trans, switch=switch,
                         sizes=sizes)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedArrays:
+    """Padded tensors of B same-bucket problems stacked along a new
+    leading *lane* axis (see :func:`stack_padded`).
+
+    Lanes are independent: every stacked kernel applied to lane ``b``
+    produces bit-identical results to the non-stacked kernel on the
+    b-th :class:`PaddedArrays` alone.
+    """
+
+    t_op: np.ndarray        # [B, L, S]
+    e_op: np.ndarray        # [B, L, S]
+    valid: np.ndarray       # [B, L, S] bool
+    t_trans: np.ndarray     # [B, L-1, S, S]
+    e_trans: np.ndarray     # [B, L-1, S, S]
+    switch: np.ndarray      # [B, L-1, S, S] int64
+    max_sizes: tuple[int, ...]   # per-layer max valid count over lanes
+    # per-instance scratch for backend device copies / lane repads (see
+    # PaddedArrays.dev_cache) — safe because the tensors are immutable
+    dev_cache: dict = dataclasses.field(default_factory=dict,
+                                        compare=False, repr=False)
+
+    @property
+    def n_lanes(self) -> int:
+        return self.t_op.shape[0]
+
+    @property
+    def n_layers(self) -> int:
+        return self.t_op.shape[1]
+
+    @property
+    def s_pad(self) -> int:
+        return self.t_op.shape[2]
+
+
+def bucket_key(padded: PaddedArrays) -> tuple[int, int]:
+    """The shape class a problem's padded tensors belong to — problems
+    with equal keys are stackable into one :class:`StackedArrays`."""
+    return (padded.n_layers, padded.s_pad)
+
+
+def repad(padded: PaddedArrays, s_pad: int) -> PaddedArrays:
+    """Re-pad a problem's tensors to a wider state bucket (so subsets
+    of different buckets can share one stacked kernel call).  Padding
+    is results-invariant: pad states are invalid, cost ``inf`` post-
+    weighting, and sort/argmin strictly after every valid index."""
+    L, S = padded.t_op.shape
+    if s_pad == S:
+        return padded
+    if s_pad < S:
+        raise ValueError(f"cannot shrink pad bucket {S} -> {s_pad}")
+    t_op = np.zeros((L, s_pad))
+    e_op = np.zeros((L, s_pad))
+    valid = np.zeros((L, s_pad), dtype=bool)
+    t_op[:, :S] = padded.t_op
+    e_op[:, :S] = padded.e_op
+    valid[:, :S] = padded.valid
+    t_trans = np.zeros((max(L - 1, 0), s_pad, s_pad))
+    e_trans = np.zeros((max(L - 1, 0), s_pad, s_pad))
+    switch = np.zeros((max(L - 1, 0), s_pad, s_pad), dtype=np.int64)
+    t_trans[:, :S, :S] = padded.t_trans
+    e_trans[:, :S, :S] = padded.e_trans
+    switch[:, :S, :S] = padded.switch
+    return PaddedArrays(t_op=t_op, e_op=e_op, valid=valid,
+                        t_trans=t_trans, e_trans=e_trans, switch=switch,
+                        sizes=padded.sizes)
+
+
+def stack_padded(padded_list: Sequence[PaddedArrays], *,
+                 with_switch: bool = True) -> StackedArrays:
+    """Stack same-bucket padded tensors along a new leading lane axis.
+
+    ``with_switch=False`` substitutes a zero-strided dummy for the
+    rail-switch tensor — the DP and k-best kernels never read it, and
+    skipping the [B, L-1, S, S] int64 copy matters when the sweep
+    restacks a bucket every round.
+    """
+    keys = {bucket_key(p) for p in padded_list}
+    if len(keys) != 1:
+        raise ValueError(
+            f"cannot stack mixed padded buckets {sorted(keys)}")
+    sizes = np.array([p.sizes for p in padded_list])
+    if with_switch:
+        switch = np.stack([p.switch for p in padded_list])
+    else:
+        switch = np.broadcast_to(
+            np.zeros((), dtype=np.int64),
+            (len(padded_list),) + padded_list[0].switch.shape)
+    return StackedArrays(
+        t_op=np.stack([p.t_op for p in padded_list]),
+        e_op=np.stack([p.e_op for p in padded_list]),
+        valid=np.stack([p.valid for p in padded_list]),
+        t_trans=np.stack([p.t_trans for p in padded_list]),
+        e_trans=np.stack([p.e_trans for p in padded_list]),
+        switch=switch,
+        max_sizes=tuple(int(m) for m in sizes.max(axis=0)),
+    )
+
+
+def _as_stacked(padded: PaddedArrays) -> StackedArrays:
+    """View one problem as a single-lane stack (kernel reuse)."""
+    return StackedArrays(
+        t_op=padded.t_op[None], e_op=padded.e_op[None],
+        valid=padded.valid[None], t_trans=padded.t_trans[None],
+        e_trans=padded.e_trans[None], switch=padded.switch[None],
+        max_sizes=padded.sizes)
+
+
+def lane_bucket(n: int) -> int:
+    """Round a lane count up to a power of two (≥ 1) so jitted stacked
+    kernels keep stable shapes as rounds shrink and grow."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 # ----------------------------------------------------------- numpy
@@ -143,14 +311,17 @@ class NumpyBackend:
         w_t3 = w_t[:, None, None]
         cost = node[0]
         parents = np.empty((max(L - 1, 0), K, S), dtype=np.int64)
+        rows_k = np.arange(K)[:, None]
+        cols_s = np.arange(S)[None, :]
         for i in range(1, L):
-            edge = (w_e3 * padded.e_trans[i - 1]
-                    + w_t3 * padded.t_trans[i - 1])
-            tot = cost[:, :, None] + edge                     # [K, Sp, Sn]
+            # in-place accumulation: same adds, fewer [K, S, S] temps
+            tot = w_e3 * padded.e_trans[i - 1]
+            tot += w_t3 * padded.t_trans[i - 1]
+            tot += cost[:, :, None]                           # [K, Sp, Sn]
             parents[i - 1] = np.argmin(tot, axis=1)           # [K, Sn]
-            # min(tot) is the element argmin points at — same bits,
-            # no gather machinery
-            cost = np.min(tot, axis=1) + node[i]
+            # gather the min from the argmin result — same bits as a
+            # second np.min reduction, at O(K·S) instead of O(K·S²)
+            cost = tot[rows_k, parents[i - 1], cols_s] + node[i]
         paths = np.empty((K, L), dtype=np.int64)
         s = np.argmin(cost, axis=1)                           # [K]
         paths[:, L - 1] = s
@@ -159,6 +330,95 @@ class NumpyBackend:
             s = parents[i][rows, s]
             paths[:, i] = s
         return paths
+
+    def dp_multi_stacked(self, stacked: StackedArrays, w_e: np.ndarray,
+                         w_t: np.ndarray) -> np.ndarray:
+        """Best path per (lane, weight pair): ``[B, K]`` weights over B
+        stacked problems, ONE pass of the layers total.  Returns
+        ``[B, K, L]`` int64 state indices; lane ``b`` is bit-identical
+        to ``dp_multi(padded_b, w_e[b], w_t[b])``.
+        """
+        w_e = np.asarray(w_e, dtype=float)
+        w_t = np.asarray(w_t, dtype=float)
+        B, L, S = stacked.t_op.shape
+        K = w_e.shape[1]
+        sz = stacked.max_sizes
+        # all node costs in one shot, then per-layer views; reductions
+        # are sliced to the widest *valid* prefix of the group (pad
+        # slots are inf and index-last, so slicing is results-invariant)
+        node = (w_e[:, :, None, None] * stacked.e_op[:, None, :, :]
+                + w_t[:, :, None, None] * stacked.t_op[:, None, :, :])
+        node = np.where(stacked.valid[:, None, :, :], node, np.inf)
+        we4 = w_e[:, :, None, None]
+        wt4 = w_t[:, :, None, None]
+        cost = node[:, :, 0, :sz[0]]
+        parents: list[np.ndarray] = []
+        bi3 = np.arange(B)[:, None, None]
+        qi3 = np.arange(K)[None, :, None]
+        for i in range(1, L):
+            sp, sn = sz[i - 1], sz[i]
+            # accumulate the weighted edge + prefix cost in place —
+            # same adds, two fewer [B, K, sp, sn] temporaries
+            tot = we4 * stacked.e_trans[:, None, i - 1, :sp, :sn]
+            tot += wt4 * stacked.t_trans[:, None, i - 1, :sp, :sn]
+            tot += cost[:, :, :, None]                    # [B, K, sp, sn]
+            parents.append(np.argmin(tot, axis=2))
+            # gather the min from the argmin result — same bits as a
+            # second np.min reduction, at O(B·K·S) instead of O(B·K·S²)
+            cost = tot[bi3, qi3, parents[-1],
+                       np.arange(sn)[None, None, :]] \
+                + node[:, :, i, :sn]
+        paths = np.empty((B, K, L), dtype=np.int64)
+        s = np.argmin(cost, axis=2)                       # [B, K]
+        paths[:, :, L - 1] = s
+        bi = np.arange(B)[:, None]
+        qi = np.arange(K)[None, :]
+        for i in range(L - 2, -1, -1):
+            s = parents[i][bi, qi, s]
+            paths[:, :, i] = s
+        return paths
+
+    def kbest_multi(self, padded: PaddedArrays, mus: np.ndarray,
+                    k: int) -> tuple[np.ndarray, np.ndarray]:
+        """k globally-best paths per μ, one fused pass (the frontier
+        kernel).  Returns ``(paths [K, k, L] int64, counts [K])`` —
+        only the first ``counts[q]`` rows of lane q are meaningful
+        (fewer than k finite-cost paths can exist).
+        """
+        paths, counts = _kbest_stacked_numpy(
+            _as_stacked(padded), np.asarray(mus, float)[None, :], k)
+        return paths[0], counts[0]
+
+    def kbest_multi_stacked(self, stacked: StackedArrays,
+                            mus: np.ndarray, k: int
+                            ) -> tuple[np.ndarray, np.ndarray]:
+        """Stacked frontier: ``mus`` is ``[B, K]``; returns
+        ``(paths [B, K, k, L], counts [B, K])``."""
+        return _kbest_stacked_numpy(stacked, np.asarray(mus, float), k)
+
+    def path_costs_stacked(self, stacked: StackedArrays,
+                           lanes: np.ndarray, paths: np.ndarray
+                           ) -> dict[str, np.ndarray]:
+        """Summed cost components of P paths living on (possibly
+        different) lanes of one stack: ``lanes`` is ``[P]``, ``paths``
+        is ``[P, L]``.  Per-path sums are bit-identical to the dense
+        padded gathers of :meth:`path_costs`."""
+        L = stacked.n_layers
+        ln = np.asarray(lanes, dtype=np.int64)[:, None]
+        li = np.arange(L)[None, :]
+        t_op = stacked.t_op[ln, li, paths].sum(axis=1)
+        e_op = stacked.e_op[ln, li, paths].sum(axis=1)
+        if L == 1:
+            zero = np.zeros_like(t_op)
+            return {"t_op": t_op, "e_op": e_op, "t_trans": zero,
+                    "e_trans": zero.copy(),
+                    "n_switch": np.zeros(t_op.shape, dtype=np.int64)}
+        lt = np.arange(L - 1)[None, :]
+        a, b = paths[:, :-1], paths[:, 1:]
+        return {"t_op": t_op, "e_op": e_op,
+                "t_trans": stacked.t_trans[ln, lt, a, b].sum(axis=1),
+                "e_trans": stacked.e_trans[ln, lt, a, b].sum(axis=1),
+                "n_switch": stacked.switch[ln, lt, a, b].sum(axis=1)}
 
     # above this state count the dense padded tensors stop paying for
     # themselves (the per-layer loop gathers from the ragged arrays
@@ -182,8 +442,7 @@ class NumpyBackend:
         """
         if problem._padded is not None or (
                 paths.shape[0] >= self._PAD_EVAL_MIN_PATHS
-                and max(len(s) for s in problem.layer_states)
-                <= self._PAD_EVAL_MAX_STATES):
+                and max(problem.sizes) <= self._PAD_EVAL_MAX_STATES):
             padded = problem.padded_arrays()
             L = padded.n_layers
             li = np.arange(L)[None, :]
@@ -214,14 +473,101 @@ class NumpyBackend:
             t_op += ti[idx]
             e_op += ei[idx]
             if i + 1 < problem.n_layers:
-                tt, et = problem.transition_arrays(i)
-                sw = problem.switch_arrays(i)
-                nxt = p[:, i + 1]
-                t_trans += tt[idx, nxt]
-                e_trans += et[idx, nxt]
-                n_switch += sw[idx, nxt]
+                tt, et, sw = problem.trans_elems(i, idx, p[:, i + 1])
+                t_trans += tt
+                e_trans += et
+                n_switch += sw
         return {"t_op": t_op, "e_op": e_op, "t_trans": t_trans,
                 "e_trans": e_trans, "n_switch": n_switch}
+
+
+def _topk_stable(cand: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k smallest entries along axis 2, in deterministic
+    stable ``(value, index)`` order — the selection a full stable
+    argsort would make, at argpartition cost.
+
+    The fast path partitions to ``m = 4k`` candidates (index-sorted so
+    the stable value sort breaks ties by original index) and keeps the
+    first k.  That is exact unless an element *outside* the partition
+    ties the k-th selected value, which requires the k-th and m-th
+    smallest values to be equal; when that happens with a FINITE value
+    the call falls back to the full stable sort.  Ties at ``inf`` need
+    no fallback: inf-cost frontier slots never back a returned path
+    (their cumulative cost stays inf and ``counts`` excludes them), so
+    any inf-tie selection yields identical visible results.
+    """
+    B, K, n, sn = cand.shape
+    m = 4 * k
+    if n <= m:
+        return np.argsort(cand, axis=2, kind="stable")[:, :, :k, :]
+    part = np.argpartition(cand, m - 1, axis=2)[:, :, :m, :]
+    part.sort(axis=2)                     # restore original index order
+    bi = np.arange(B)[:, None, None, None]
+    qi = np.arange(K)[None, :, None, None]
+    si = np.arange(sn)[None, None, None, :]
+    vals = cand[bi, qi, part, si]
+    order = np.argsort(vals, axis=2, kind="stable")[:, :, :k, :]
+    v_k = vals[bi, qi, order[:, :, k - 1:k, :], si]
+    v_m = vals.max(axis=2, keepdims=True)
+    if ((v_k == v_m) & np.isfinite(v_k)).any():
+        return np.argsort(cand, axis=2, kind="stable")[:, :, :k, :]
+    return part[bi, qi, order, si]
+
+
+def _kbest_stacked_numpy(stacked: StackedArrays, mus: np.ndarray,
+                         k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Fused multi-(lane, μ) k-best frontier on padded tensors.
+
+    The k-best recurrence of the scalar kernel with two extra leading
+    axes ``[B, K]``; every (lane, μ) pair runs the exact per-lane
+    operations of the single-problem pass.  Ties (including the ``inf``
+    entries the padding introduces) are broken by stable
+    ``(value, flat index)`` order, so results are deterministic and
+    independent of how lanes are grouped.
+
+    Returns ``(paths [B, K, k, L] int64, counts [B, K] int64)``; rows
+    past ``counts[b, q]`` carry no meaning (they backtrack inf-cost
+    frontier slots).
+    """
+    B, L, S = stacked.t_op.shape
+    mus = np.asarray(mus, dtype=float)
+    K = mus.shape[1]
+    sz = stacked.max_sizes
+    node = (stacked.e_op[:, None, :, :]
+            + mus[:, :, None, None] * stacked.t_op[:, None, :, :])
+    node = np.where(stacked.valid[:, None, :, :], node, np.inf)
+    mu4 = mus[:, :, None, None]
+    costs = np.full((B, K, sz[0], k), np.inf)
+    costs[:, :, :, 0] = node[:, :, 0, :sz[0]]
+    # (layer, lane, μ, rank, next state) -> (prev state, prev rank)
+    back: list[tuple[np.ndarray, np.ndarray]] = []
+    bi4 = np.arange(B)[:, None, None, None]
+    qi4 = np.arange(K)[None, :, None, None]
+    for i in range(1, L):
+        sp, sn = sz[i - 1], sz[i]
+        edge = (stacked.e_trans[:, None, i - 1, :sp, :sn]
+                + mu4 * stacked.t_trans[:, None, i - 1, :sp, :sn])
+        cand = (costs[:, :, :, :, None]
+                + edge[:, :, :, None, :]).reshape(B, K, sp * k, sn)
+        order = _topk_stable(cand, k)
+        vals = cand[bi4, qi4, order,
+                    np.arange(sn)[None, None, None, :]]   # [B, K, k, sn]
+        costs = vals.transpose(0, 1, 3, 2) \
+            + node[:, :, i, :sn, None]
+        back.append(np.divmod(order, k))
+    flat = costs.reshape(B, K, sz[-1] * k)
+    order = _topk_stable(flat[:, :, :, None], k)[:, :, :, 0]
+    counts = np.minimum(k, np.isfinite(flat).sum(axis=2))
+    paths = np.empty((B, K, k, L), dtype=np.int64)
+    s, r = np.divmod(order, k)                            # [B, K, k]
+    paths[:, :, :, L - 1] = s
+    bi = np.arange(B)[:, None, None]
+    qi = np.arange(K)[None, :, None]
+    for i in range(L - 2, -1, -1):
+        ps, pr = back[i]                                  # [B, K, k, sn]
+        s, r = ps[bi, qi, r, s], pr[bi, qi, r, s]
+        paths[:, :, :, i] = s
+    return paths, counts
 
 
 # ------------------------------------------------------------- jax
@@ -238,12 +584,42 @@ class JaxBackend:
 
         self._jax = jax
         self._dp = jax.jit(self._dp_impl)
+        self._dp_stacked = jax.jit(jax.vmap(self._dp_impl))
         self._costs = jax.jit(self._costs_impl)
+        self._costs_stacked = jax.jit(self._costs_stacked_impl)
+        # k is a static shape parameter of the k-best scan — one
+        # compiled program per (k, stacked?) requested
+        self._kbest_jits: dict[tuple[int, bool], object] = {}
+        # On CPU hosts the jitted programs only pay for themselves on
+        # reduction-heavy work: gather-bound path evaluation and tiny
+        # DP slabs are dominated by dispatch + host↔device copies, so
+        # they route to the numpy kernels (results are identical — the
+        # tests pin numpy/jax path and evaluation parity).  On a real
+        # accelerator everything stays on device.
+        self._host = NumpyBackend()
+        self._cpu = jax.default_backend() == "cpu"
 
     # backtracking and the DP share one compiled program; float64 is
     # scoped to the call so the repo's float32 jax code is unaffected.
     def _x64(self):
         return self._jax.experimental.enable_x64()
+
+    _DP_NAMES = ("t_op", "e_op", "valid", "t_trans", "e_trans")
+    _COST_NAMES = ("t_op", "e_op", "t_trans", "e_trans", "switch")
+
+    def _dev(self, arrs, names: tuple[str, ...]):
+        """Device copies of ``arrs``'s tensors, converted once per
+        instance (PaddedArrays / StackedArrays are immutable): repeat
+        kernel calls on the same tensors skip the host→device copy,
+        which otherwise dominates small-host jax walls."""
+        cache = arrs.dev_cache
+        key = ("jnp", names)
+        if key not in cache:
+            jnp = self._jax.numpy
+            with self._x64():
+                cache[key] = tuple(jnp.asarray(getattr(arrs, n))
+                                   for n in names)
+        return cache[key]
 
     def _dp_impl(self, t_op, e_op, valid, t_trans, e_trans, w_e, w_t):
         jnp = self._jax.numpy
@@ -280,6 +656,64 @@ class JaxBackend:
         _, states = lax.scan(back, s_final, parents, reverse=True)
         return jnp.concatenate([states, s_final[None, :]], axis=0).T
 
+    def _kbest_impl(self, t_op, e_op, valid, t_trans, e_trans, mus, *,
+                    k: int):
+        """Single-problem multi-μ k-best frontier as a ``lax.scan``
+        program — the jax twin of the numpy stacked kernel's per-lane
+        operations (``jnp.argsort`` is stable, matching numpy's
+        ``kind="stable"`` tie order exactly)."""
+        jnp = self._jax.numpy
+        lax = self._jax.lax
+        L, S = t_op.shape
+        K = mus.shape[0]
+        node = e_op[:, None, :] + mus[None, :, None] * t_op[:, None, :]
+        node = jnp.where(valid[:, None, :], node, jnp.inf)   # [L, K, S]
+        costs0 = jnp.full((K, S, k), jnp.inf)
+        costs0 = costs0.at[:, :, 0].set(node[0])
+        mu3 = mus[:, None, None]
+
+        def step(costs, xs):
+            tt, et, nd = xs
+            edge = et[None, :, :] + mu3 * tt[None, :, :]     # [K, Sp, Sn]
+            cand = (costs[:, :, :, None]
+                    + edge[:, :, None, :]).reshape(K, S * k, S)
+            order = jnp.argsort(cand, axis=1)[:, :k, :]      # stable
+            vals = jnp.take_along_axis(cand, order, axis=1)
+            new_costs = vals.transpose(0, 2, 1) + nd[:, :, None]
+            return new_costs, (order // k, order % k)
+
+        costs, (ps, pr) = lax.scan(step, costs0,
+                                   (t_trans, e_trans, node[1:]))
+        flat = costs.reshape(K, S * k)
+        order = jnp.argsort(flat, axis=1)[:, :k]             # [K, k]
+        counts = jnp.minimum(k, jnp.isfinite(flat).sum(axis=1))
+        s, r = order // k, order % k
+        qi = jnp.arange(K)[:, None]
+
+        def backstep(carry, x):
+            si, ri = carry
+            ps_i, pr_i = x                                   # [K, k, S]
+            prev_s = ps_i[qi, ri, si]
+            prev_r = pr_i[qi, ri, si]
+            return (prev_s, prev_r), prev_s
+
+        _, states = lax.scan(backstep, (s, r), (ps, pr), reverse=True)
+        paths = jnp.concatenate([states, s[None]], axis=0)   # [L, K, k]
+        return paths.transpose(1, 2, 0), counts
+
+    def _kbest_fn(self, k: int, stacked: bool):
+        key = (k, stacked)
+        if key not in self._kbest_jits:
+            jax = self._jax
+
+            def single(t_op, e_op, valid, t_trans, e_trans, mus):
+                return self._kbest_impl(t_op, e_op, valid, t_trans,
+                                        e_trans, mus, k=k)
+
+            fn = jax.vmap(single) if stacked else single
+            self._kbest_jits[key] = jax.jit(fn)
+        return self._kbest_jits[key]
+
     def _costs_impl(self, t_op, e_op, t_trans, e_trans, switch, paths):
         jnp = self._jax.numpy
         L = t_op.shape[0]
@@ -297,31 +731,170 @@ class JaxBackend:
                 e_trans[lt, a, b].sum(axis=1),
                 switch[lt, a, b].sum(axis=1))
 
+    # minimum DP slab size (weights × layers × S²) worth a jitted
+    # dispatch on a CPU host; smaller slabs (envelope probes, short
+    # rounds) run on the numpy kernel, whose paths are identical.  The
+    # k-best frontier has its own (higher) floor: its numpy kernel is
+    # partition-based and beats the jitted full-sort scan until the
+    # candidate tensors get large
+    _JIT_MIN_WORK = 1 << 16
+    _KBEST_JIT_MIN_WORK = 1 << 22
+
     def dp_multi(self, padded: PaddedArrays, w_e: np.ndarray,
                  w_t: np.ndarray) -> np.ndarray:
+        if self._cpu and len(w_e) * padded.t_op.size * \
+                padded.s_pad < self._JIT_MIN_WORK:
+            return self._host.dp_multi(padded, w_e, w_t)
         jnp = self._jax.numpy
+        dev = self._dev(padded, self._DP_NAMES)
         with self._x64():
             paths = self._dp(
-                jnp.asarray(padded.t_op), jnp.asarray(padded.e_op),
-                jnp.asarray(padded.valid),
-                jnp.asarray(padded.t_trans), jnp.asarray(padded.e_trans),
+                *dev,
                 jnp.asarray(np.asarray(w_e, dtype=float)),
                 jnp.asarray(np.asarray(w_t, dtype=float)))
             return np.asarray(paths, dtype=np.int64)
 
     def path_costs(self, problem, paths: np.ndarray
                    ) -> dict[str, np.ndarray]:
+        if self._cpu:       # gather-bound: jit cannot win on a CPU host
+            return self._host.path_costs(problem, paths)
         jnp = self._jax.numpy
         padded = problem.padded_arrays()
+        dev = self._dev(padded, self._COST_NAMES)
         with self._x64():
             t_op, e_op, t_trans, e_trans, n_switch = self._costs(
-                jnp.asarray(padded.t_op), jnp.asarray(padded.e_op),
-                jnp.asarray(padded.t_trans), jnp.asarray(padded.e_trans),
-                jnp.asarray(padded.switch), jnp.asarray(paths))
+                *dev, jnp.asarray(paths))
         return {"t_op": np.asarray(t_op), "e_op": np.asarray(e_op),
                 "t_trans": np.asarray(t_trans),
                 "e_trans": np.asarray(e_trans),
                 "n_switch": np.asarray(n_switch, dtype=np.int64)}
+
+    # -- stacked variants ---------------------------------------------
+    # Lane counts are padded to a power-of-two bucket (repeating lane 0)
+    # so every round width of the subset-stacked sweep reuses one
+    # compiled program; the pad lanes are dropped before returning.
+
+    @staticmethod
+    def _pad_lanes(stacked: StackedArrays) -> tuple[StackedArrays, int]:
+        B = stacked.n_lanes
+        Bp = lane_bucket(B)
+        if Bp == B:
+            return stacked, B
+        if "lanes_pad" in stacked.dev_cache:    # memoized per instance
+            return stacked.dev_cache["lanes_pad"], B
+        idx = np.minimum(np.arange(Bp), B - 1)
+        # a zero-strided switch dummy (stack_padded with_switch=False)
+        # stays a dummy — fancy indexing would materialize the zeros
+        switch = stacked.switch[idx] if stacked.switch.strides[0] else \
+            np.broadcast_to(np.zeros((), dtype=np.int64),
+                            (Bp,) + stacked.switch.shape[1:])
+        padded = StackedArrays(
+            t_op=stacked.t_op[idx], e_op=stacked.e_op[idx],
+            valid=stacked.valid[idx], t_trans=stacked.t_trans[idx],
+            e_trans=stacked.e_trans[idx], switch=switch,
+            max_sizes=stacked.max_sizes)
+        stacked.dev_cache["lanes_pad"] = padded
+        return padded, B
+
+    @staticmethod
+    def _pad_rows(arr: np.ndarray) -> tuple[np.ndarray, int]:
+        P = arr.shape[0]
+        Pp = lane_bucket(P)
+        if Pp == P:
+            return arr, P
+        idx = np.minimum(np.arange(Pp), P - 1)
+        return arr[idx], P
+
+    def dp_multi_stacked(self, stacked: StackedArrays, w_e: np.ndarray,
+                         w_t: np.ndarray) -> np.ndarray:
+        if self._cpu and np.size(w_e) * stacked.t_op[0].size * \
+                stacked.s_pad < self._JIT_MIN_WORK:
+            return self._host.dp_multi_stacked(stacked, w_e, w_t)
+        jnp = self._jax.numpy
+        stacked, B = self._pad_lanes(stacked)
+        w = np.asarray(w_e, dtype=float)
+        t = np.asarray(w_t, dtype=float)
+        if stacked.n_lanes != B:
+            pad = stacked.n_lanes - B
+            w = np.concatenate([w, np.repeat(w[:1], pad, axis=0)])
+            t = np.concatenate([t, np.repeat(t[:1], pad, axis=0)])
+        dev = self._dev(stacked, self._DP_NAMES)
+        with self._x64():
+            paths = self._dp_stacked(
+                *dev, jnp.asarray(w), jnp.asarray(t))
+            return np.asarray(paths, dtype=np.int64)[:B]
+
+    def kbest_multi(self, padded: PaddedArrays, mus: np.ndarray,
+                    k: int) -> tuple[np.ndarray, np.ndarray]:
+        if self._cpu and np.size(mus) * k * padded.t_op.size * \
+                padded.s_pad < self._KBEST_JIT_MIN_WORK:
+            return self._host.kbest_multi(padded, mus, k)
+        jnp = self._jax.numpy
+        dev = self._dev(padded, self._DP_NAMES)
+        with self._x64():
+            paths, counts = self._kbest_fn(k, stacked=False)(
+                *dev, jnp.asarray(np.asarray(mus, dtype=float)))
+            return (np.asarray(paths, dtype=np.int64),
+                    np.asarray(counts, dtype=np.int64))
+
+    def kbest_multi_stacked(self, stacked: StackedArrays,
+                            mus: np.ndarray, k: int
+                            ) -> tuple[np.ndarray, np.ndarray]:
+        if self._cpu and np.size(mus) * k * stacked.t_op[0].size * \
+                stacked.s_pad < self._KBEST_JIT_MIN_WORK:
+            return self._host.kbest_multi_stacked(stacked, mus, k)
+        jnp = self._jax.numpy
+        stacked, B = self._pad_lanes(stacked)
+        m = np.asarray(mus, dtype=float)
+        if stacked.n_lanes != B:
+            m = np.concatenate(
+                [m, np.repeat(m[:1], stacked.n_lanes - B, axis=0)])
+        dev = self._dev(stacked, self._DP_NAMES)
+        with self._x64():
+            paths, counts = self._kbest_fn(k, stacked=True)(
+                *dev, jnp.asarray(m))
+            return (np.asarray(paths, dtype=np.int64)[:B],
+                    np.asarray(counts, dtype=np.int64)[:B])
+
+    def _costs_stacked_impl(self, t_op, e_op, t_trans, e_trans, switch,
+                            lanes, paths):
+        jnp = self._jax.numpy
+        L = t_op.shape[1]
+        ln = lanes[:, None]
+        li = jnp.arange(L)[None, :]
+        t_sum = t_op[ln, li, paths].sum(axis=1)
+        e_sum = e_op[ln, li, paths].sum(axis=1)
+        if L == 1:
+            zero = jnp.zeros_like(t_sum)
+            return (t_sum, e_sum, zero, zero,
+                    jnp.zeros(t_sum.shape, dtype=jnp.int64))
+        lt = jnp.arange(L - 1)[None, :]
+        a, b = paths[:, :-1], paths[:, 1:]
+        return (t_sum, e_sum,
+                t_trans[ln, lt, a, b].sum(axis=1),
+                e_trans[ln, lt, a, b].sum(axis=1),
+                switch[ln, lt, a, b].sum(axis=1))
+
+    def path_costs_stacked(self, stacked: StackedArrays,
+                           lanes: np.ndarray, paths: np.ndarray
+                           ) -> dict[str, np.ndarray]:
+        if self._cpu:       # gather-bound: jit cannot win on a CPU host
+            return self._host.path_costs_stacked(stacked, lanes, paths)
+        jnp = self._jax.numpy
+        stacked, _ = self._pad_lanes(stacked)
+        lanes = np.asarray(lanes, dtype=np.int64)
+        paths = np.asarray(paths, dtype=np.int64)
+        lanes_p, P = self._pad_rows(lanes)
+        paths_p, _ = self._pad_rows(paths)
+        dev = self._dev(stacked, self._COST_NAMES)
+        with self._x64():
+            t_op, e_op, t_trans, e_trans, n_switch = self._costs_stacked(
+                *dev, jnp.asarray(lanes_p), jnp.asarray(paths_p))
+        return {"t_op": np.asarray(t_op)[:P],
+                "e_op": np.asarray(e_op)[:P],
+                "t_trans": np.asarray(t_trans)[:P],
+                "e_trans": np.asarray(e_trans)[:P],
+                "n_switch": np.asarray(n_switch, dtype=np.int64)[:P]}
 
 
 # -------------------------------------------------------- registry

@@ -31,7 +31,11 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.edge_builder import build_idle_model, layer_states
+from repro.core.edge_builder import (
+    build_idle_model,
+    layer_state_arrays,
+    layer_states,
+)
 from repro.core.problem import (
     ScheduleProblem,
     StateCost,
@@ -69,6 +73,12 @@ class CompilationContext:
         self._trans_cache: dict[
             tuple[bytes, bytes],
             tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        # gating -> per-pair master transition triples (resolved through
+        # the content-keyed cache ONCE; problem_for hands out list
+        # lookups instead of re-hashing the long content keys per pair
+        # per subset — the sweep calls _trans_src thousands of times)
+        self._master_trans: dict[
+            bool, list[tuple[np.ndarray, np.ndarray, np.ndarray]]] = {}
         # (gating, volts content, subset) -> master-state index vector
         self._slice_cache: dict[tuple[bool, bytes, tuple[float, ...]],
                                 np.ndarray] = {}
@@ -81,25 +91,38 @@ class CompilationContext:
         self._master_lock = threading.Lock()
 
     # -- master state table -------------------------------------------
+    def _master_arrays(self, gating: bool) -> None:
+        """Build the per-layer master voltage/t/e arrays once per gating
+        flag (vectorized — no per-state Python objects; every rail
+        subset is an index slice of these arrays)."""
+        with self._master_lock:
+            if gating in self._master_volts:
+                return
+            cols = [layer_state_arrays(c, i, self.acc, self.plan,
+                                       self.levels, gating=gating)
+                    for i, c in enumerate(self.costs)]
+            self._master_t_op[gating] = [t for _, t, _ in cols]
+            self._master_e_op[gating] = [e for _, _, e in cols]
+            self._master_vkey[gating] = [v.tobytes() for v, _, _ in cols]
+            # set last: readers key "is the master built?" off this
+            self._master_volts[gating] = [v for v, _, _ in cols]
+
     def master_states(self, gating: bool) -> list[list[StateCost]]:
-        """Per-layer feasible states over ALL voltage levels (built once
-        per gating flag; every rail subset is a slice of this)."""
+        """Per-layer master :class:`StateCost` lists — the record view
+        of the master arrays, materialized lazily (the sweep hot path
+        only ever touches the arrays)."""
+        self._master_arrays(gating)
         with self._master_lock:
             if gating not in self._master:
-                table = [layer_states(c, i, self.acc, self.plan,
-                                      self.levels, gating=gating)
-                         for i, c in enumerate(self.costs)]
-                self._master_volts[gating] = [
-                    np.array([s.voltages for s in states])
-                    for states in table]
-                self._master_t_op[gating] = [
-                    np.array([s.t_op for s in states]) for states in table]
-                self._master_e_op[gating] = [
-                    np.array([s.e_op for s in states]) for states in table]
-                self._master_vkey[gating] = [
-                    v.tobytes() for v in self._master_volts[gating]]
-                # set last: readers key "is the master built?" off this
-                self._master[gating] = table
+                self._master[gating] = [
+                    [StateCost(voltages=(float(v[0]), float(v[1]),
+                                         float(v[2])),
+                               t_op=float(t), e_op=float(e))
+                     for v, t, e in zip(volts, t_ops, e_ops)]
+                    for volts, t_ops, e_ops in zip(
+                        self._master_volts[gating],
+                        self._master_t_op[gating],
+                        self._master_e_op[gating])]
             return self._master[gating]
 
     def _subset_indices(self, gating: bool, layer: int,
@@ -132,8 +155,8 @@ class CompilationContext:
 
     # -- per-subset problem views -------------------------------------
     def problem_for(self, rails: Sequence[float], *, gating: bool,
-                    allow_sleep: bool,
-                    via_master: bool = True) -> ScheduleProblem:
+                    allow_sleep: bool, via_master: bool = True,
+                    materialize_states: bool = True) -> ScheduleProblem:
         """Derive the rail subset's :class:`ScheduleProblem` as a slice
         of the master table, with transition matrices sliced from the
         content-keyed master cache (nothing is recomputed per subset).
@@ -142,9 +165,14 @@ class CompilationContext:
         cheaper for policies that solve a single subset (no sweep to
         amortize the master table over), unless the master already
         exists.  Both paths produce elementwise-identical problems.
+
+        ``materialize_states=False`` returns an *array-backed* problem
+        (``layer_states=None``): solvers and reporting only touch the
+        injected master-slice arrays, skipping the per-state Python
+        list build — the rail sweep's per-subset hot path.
         """
         rails = tuple(rails)
-        if not via_master and gating not in self._master:
+        if not via_master and gating not in self._master_volts:
             layers = [layer_states(c, i, self.acc, self.plan, rails,
                                    gating=gating)
                       for i, c in enumerate(self.costs)]
@@ -158,12 +186,24 @@ class CompilationContext:
                 rails=rails,
                 name=self.network,
             )
-        master = self.master_states(gating)
+        self._master_arrays(gating)
         master_volts = self._master_volts[gating]
+        n_layers = len(master_volts)
         idx = [self._subset_indices(gating, i, rails)
-               for i in range(len(master))]
-        layers = [[states[j] for j in idx_i]
-                  for states, idx_i in zip(master, idx)]
+               for i in range(n_layers)]
+        if materialize_states:
+            # records built straight from the subset's array slices —
+            # the full master StateCost table is never materialized
+            layers = [
+                [StateCost(voltages=(float(v[0]), float(v[1]),
+                                     float(v[2])),
+                           t_op=float(t), e_op=float(e))
+                 for v, t, e in zip(master_volts[i][idx_i],
+                                    self._master_t_op[gating][i][idx_i],
+                                    self._master_e_op[gating][i][idx_i])]
+                for i, idx_i in enumerate(idx)]
+        else:
+            layers = None
         problem = ScheduleProblem(
             layer_states=layers,
             t_max=self.t_max,
@@ -172,6 +212,7 @@ class CompilationContext:
             transition_model=self.transition_model,
             rails=rails,
             name=self.network,
+            layer_sizes=tuple(len(idx_i) for idx_i in idx),
         )
         # inject the per-layer arrays as master-table slices — bitwise
         # identical to deriving them from the StateCost lists, without
@@ -181,12 +222,20 @@ class CompilationContext:
         problem._e_op_c = [self._master_e_op[gating][i][j]
                            for i, j in enumerate(idx)]
         problem._volts_c = [master_volts[i][j] for i, j in enumerate(idx)]
-        vkey = self._master_vkey[gating]
-        for i in range(len(master) - 1):
-            tt, et, sw = self._transition_keyed(
-                vkey[i], vkey[i + 1], master_volts[i], master_volts[i + 1])
-            sel = np.ix_(idx[i], idx[i + 1])
-            problem._trans_cache[i] = (tt[sel], et[sel], sw[sel])
+        # transitions stay lazy, backed by the content-keyed master
+        # cache: a pair materializes (one fancy gather) only when a
+        # solver touches it, and a pruned view composes its row
+        # selection with ours instead of slicing twice
+        if gating not in self._master_trans:
+            vkey = self._master_vkey[gating]
+            self._master_trans[gating] = [
+                self._transition_keyed(vkey[i], vkey[i + 1],
+                                       master_volts[i],
+                                       master_volts[i + 1])
+                for i in range(n_layers - 1)]
+        master_trans = self._master_trans[gating]
+        problem._trans_src = master_trans.__getitem__
+        problem._trans_sel = idx
         return problem
 
     def min_e_op_bound(self, rails: Sequence[float], *,
@@ -196,7 +245,7 @@ class CompilationContext:
         the sweep to cut subsets that cannot beat the incumbent without
         building or solving them."""
         rails = tuple(rails)
-        self.master_states(gating)
+        self._master_arrays(gating)
         e_op = self._master_e_op[gating]
         total = 0.0
         for i in range(len(e_op)):

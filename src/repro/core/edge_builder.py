@@ -30,6 +30,8 @@ from __future__ import annotations
 
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.problem import IdleModel, ScheduleProblem, StateCost
 from repro.hw.dvfs import V_GATED
 from repro.hw.edge40nm import (
@@ -64,6 +66,26 @@ def build_idle_model(acc: Edge40nmAccelerator, n_banks: int, *,
 def layer_states(cost: LayerCost, layer_idx: int, acc: Edge40nmAccelerator,
                  plan: BankPlan, rails: Sequence[float], *,
                  gating: bool) -> list[StateCost]:
+    """Per-state :class:`StateCost` list (see module docstring).
+
+    Thin wrapper over :func:`layer_state_arrays` — the array form is the
+    master-table hot path; the object list exists for policies and
+    reporting code that want per-state records."""
+    volts, t_op, e_op = layer_state_arrays(cost, layer_idx, acc, plan,
+                                           rails, gating=gating)
+    return [StateCost(voltages=(float(v[0]), float(v[1]), float(v[2])),
+                      t_op=float(t), e_op=float(e))
+            for v, t, e in zip(volts, t_op, e_op)]
+
+
+def layer_state_arrays(cost: LayerCost, layer_idx: int,
+                       acc: Edge40nmAccelerator, plan: BankPlan,
+                       rails: Sequence[float], *, gating: bool
+                       ) -> tuple:
+    """Vectorized :func:`layer_states`: ``(voltages [S, 3], t_op [S],
+    e_op [S])`` numpy arrays in the exact enumeration order (and with
+    the exact per-element float arithmetic) of the scalar state loop —
+    compute-major, feeder, RRAM minor, gated RRAM option last."""
     dvfs_c = acc.dvfs(D_COMPUTE)
     dvfs_f = acc.dvfs(D_FEEDER)
     dvfs_r = acc.dvfs(D_RRAM)     # freq model; leakage handled per-bank
@@ -106,22 +128,26 @@ def layer_states(cost: LayerCost, layer_idx: int, acc: Edge40nmAccelerator,
                       n_awake * bank.leak_power(v_r),
                       wakes * (tm.energy(V_GATED, v_r) / plan.n_banks)))
 
-    states: list[StateCost] = []
-    for v_c, t_c, e_c, leak_c in c_tab:
-        for v_f, t_f, e_f, leak_f in f_tab:
-            t_cf = max(t_c, t_f)
-            e_cf = e_c + e_f
-            leak_cf = leak_c + leak_f
-            for v_r, t_r, e_r, leak_r, e_wk in r_tab:
-                t_op = max(t_cf, t_r) + t_wake_ovh
-                e_op = (e_cf + e_r) + (leak_cf + leak_r) * t_op + e_wk
-                states.append(StateCost(
-                    voltages=(v_c, v_f, v_r),
-                    t_op=t_op,
-                    e_op=e_op,
-                    label=f"L{layer_idx}:{v_c:.2f}/{v_f:.2f}/{v_r:.2f}",
-                ))
-    return states
+    if not c_tab or not f_tab or not r_tab:
+        return (np.zeros((0, 3)), np.zeros(0), np.zeros(0))
+    vc, tc, ec, lc = (np.array(col) for col in zip(*c_tab))
+    vf, tf, ef, lf = (np.array(col) for col in zip(*f_tab))
+    vr, tr, er, lr, ew = (np.array(col) for col in zip(*r_tab))
+    # broadcast the compute×feeder×rram cross product; every elementwise
+    # expression mirrors the scalar loop's operation order exactly, so
+    # the arrays are bit-identical to the per-state construction
+    t_cf = np.maximum(tc[:, None], tf[None, :])           # [C, F]
+    e_cf = ec[:, None] + ef[None, :]
+    leak_cf = lc[:, None] + lf[None, :]
+    t_op = np.maximum(t_cf[:, :, None], tr[None, None, :]) + t_wake_ovh
+    e_op = (e_cf[:, :, None] + er[None, None, :]) \
+        + (leak_cf[:, :, None] + lr[None, None, :]) * t_op \
+        + ew[None, None, :]
+    volts = np.empty(t_op.shape + (3,))
+    volts[..., 0] = vc[:, None, None]
+    volts[..., 1] = vf[None, :, None]
+    volts[..., 2] = vr[None, None, :]
+    return volts.reshape(-1, 3), t_op.ravel(), e_op.ravel()
 
 
 def build_edge_problem(

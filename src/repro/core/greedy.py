@@ -40,7 +40,7 @@ def solve_greedy(problem: ScheduleProblem,
     path = min_energy_path(problem)
     ev = problem.evaluate(path)
     n_layers = problem.n_layers
-    sizes = [len(s) for s in problem.layer_states]
+    sizes = list(problem.sizes)
     s_max = max(sizes)
     iters = 0
     while not ev["feasible"] and iters < max_iters:

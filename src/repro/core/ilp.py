@@ -39,7 +39,7 @@ def solve_ilp(problem: ScheduleProblem, *, time_limit: float = 300.0,
     """Solve exactly; returns the standard evaluation dict + solver info."""
     tic = time.perf_counter()
     L = problem.n_layers
-    sizes = [len(s) for s in problem.layer_states]
+    sizes = list(problem.sizes)
     nx = sum(sizes)
     ny = sum(a * b for a, b in zip(sizes[:-1], sizes[1:]))
     n = nx + ny + 3                       # + u_a, u_s, z

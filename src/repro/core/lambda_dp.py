@@ -188,65 +188,30 @@ def kbest_paths(problem: ScheduleProblem, mu: float,
 
 
 def kbest_paths_multi(problem: ScheduleProblem, mus: Sequence[float],
-                      k: int) -> list[list[list[int]]]:
+                      k: int, *, backend=None) -> list[list[list[int]]]:
     """k-best frontier for every ``mu`` in the batch, one DP pass total.
 
-    Returns one ``kbest_paths(problem, mu, k)``-identical path list per
-    μ: the k-best recurrence carries a leading [K] axis (the per-μ
-    argpartition/argsort lanes run independently), so each lane performs
-    exactly the scalar kernel's operations.  The λ search uses this to
-    fuse the λ* and idle-priced frontier enrichments into one pass.
+    Runs on the pluggable array backend (numpy default, jitted jax
+    ``vmap(lax.scan)`` opt-in): the k-best recurrence carries a leading
+    [K] axis over the padded tensors, each per-μ lane performing the
+    scalar kernel's operations with stable ``(value, index)`` tie
+    breaking.  The λ search uses this to fuse the λ* and idle-priced
+    frontier enrichments into one pass; the subset-stacked sweep runs
+    the same kernel over whole rail-subset buckets at once
+    (``kbest_multi_stacked``), with bit-identical per-lane results.
     """
     mus = np.asarray(mus, dtype=float)
-    K = mus.shape[0]
-    L = problem.n_layers
-    t0, e0 = problem.op_arrays(0)
-    s0 = len(e0)
-    costs = np.full((K, s0, k), np.inf)
-    costs[:, :, 0] = e0[None, :] + mus[:, None] * t0[None, :]
-    # (layer, μ, state, rank) -> (prev_state, prev_rank)
-    back: list[tuple[np.ndarray, np.ndarray]] = []
+    paths, counts = get_backend(backend).kbest_multi(
+        problem.padded_arrays(), mus, k)
+    return kbest_rows_to_lists(paths, counts)
 
-    for i in range(1, L):
-        tt, et = problem.transition_arrays(i - 1)
-        edge = et[None, :, :] + mus[:, None, None] * tt[None, :, :]
-        sp, sn = et.shape
-        cand = (costs[:, :, :, None]
-                + edge[:, :, None, :]).reshape(K, sp * k, sn)
-        kk = min(k, sp * k)
-        idx = np.argpartition(cand, kk - 1, axis=1)[:, :kk, :]
-        vals = np.take_along_axis(cand, idx, axis=1)
-        order = np.argsort(vals, axis=1)
-        idx = np.take_along_axis(idx, order, axis=1)
-        vals = np.take_along_axis(vals, order, axis=1)
-        ti, ei = problem.op_arrays(i)
-        node = ei[None, :] + mus[:, None] * ti[None, :]       # [K, Sn]
-        new_costs = np.full((K, sn, k), np.inf)
-        new_costs[:, :, :kk] = vals.transpose(0, 2, 1) \
-            + node[:, :, None]
-        ps = np.zeros((K, sn, k), dtype=np.int64)
-        pr = np.zeros((K, sn, k), dtype=np.int64)
-        ps[:, :, :kk] = (idx // k).transpose(0, 2, 1)
-        pr[:, :, :kk] = (idx % k).transpose(0, 2, 1)
-        back.append((ps, pr))
-        costs = new_costs
 
-    out: list[list[list[int]]] = []
-    flat = costs.reshape(K, -1)
-    for q in range(K):
-        n_final = min(k, int(np.isfinite(flat[q]).sum()))
-        best = np.argsort(flat[q])[:n_final]
-        paths_q = []
-        for b in best:
-            s, r = int(b // k), int(b % k)
-            path = [s]
-            for ps, pr in reversed(back):
-                s, r = int(ps[q, s, r]), int(pr[q, s, r])
-                path.append(s)
-            path.reverse()
-            paths_q.append(path)
-        out.append(paths_q)
-    return out
+def kbest_rows_to_lists(paths: np.ndarray, counts: np.ndarray
+                        ) -> list[list[list[int]]]:
+    """Convert a backend k-best result ``(paths [K, k, L], counts [K])``
+    to the per-μ list-of-paths form (rows past ``counts[q]`` dropped)."""
+    return [[paths[q, j].tolist() for j in range(int(counts[q]))]
+            for q in range(paths.shape[0])]
 
 
 def min_time_path(problem: ScheduleProblem) -> list[int]:
@@ -427,37 +392,68 @@ _EXTEND_EXPS = np.arange(1, 17)
 _MAX_GRID_ROUNDS = 8
 
 
-def _lambda_search_batched(problem, stats, consider_all, *,
-                           k_candidates, bisect_iters, bisect_rel_tol,
-                           collect_idle_branches, lam_hint,
-                           backend) -> bool:
-    """Batched multi-λ engine: a whole-bracket sweep + envelope cuts.
+@dataclasses.dataclass
+class WorkRequest:
+    """One round of backend work the λ-search machine asks for.
 
-    One batched DP evaluates the min-time limit, μ=0, both idle-priced
-    branches, and a geometric λ grid that brackets the feasibility
-    threshold (rarely, extension sweeps extend the grid upward).  The
-    bracket is then narrowed by parametric cuts: probing the
-    intersection λ of the two bracket endpoints' cost lines
-    ``E_p + λT_p`` either discovers a new envelope line strictly
-    between them or proves the breakpoint exact — so the loop
-    terminates on λ* itself after at most one probe per envelope
-    segment (typically 2–5), not at a fixed bisection depth.
+    ``kind="dp"``: run the batched DP under the ``[K]`` weight pair and
+    evaluate + pool the first ``eval_n`` result paths (``None`` = all).
+    The response is ``(paths [K, L] int64, rows)`` where ``rows`` are
+    the evaluations of the pooled prefix.
+
+    ``kind="eval"``: evaluate + pool ``paths`` (deduped against the
+    pool); response is their evaluation rows, pool-order preserved.
+
+    ``kind="kbest"``: run the fused multi-μ k-best frontier and pool
+    every returned path (μ-major order); no response payload needed.
+
+    ``kind="eval_batch"``: plain batch evaluation of ``paths`` (no
+    pooling, no dedup); response is the
+    :meth:`~repro.core.problem.ScheduleProblem.evaluate_paths`-format
+    dict.  ``kind="moves"``: score the single-layer replacements of
+    the candidate rows ``paths`` (``aux`` carries their
+    ``(t_infer, e_idle)``); response is
+    :func:`repro.core.refinement.move_scores` output.  Both are issued
+    by the refinement machine.
+    """
+
+    kind: str
+    w_e: np.ndarray | None = None
+    w_t: np.ndarray | None = None
+    eval_n: int | None = None
+    paths: np.ndarray | None = None
+    mus: list[float] | None = None
+    k: int = 0
+    aux: tuple | None = None
+
+
+def lambda_rounds(problem: ScheduleProblem, stats: SolverStats, *,
+                  k_candidates: int, bisect_iters: int,
+                  bisect_rel_tol: float, collect_idle_branches: bool,
+                  lam_hint: float | None):
+    """The λ search as a resumable state machine (generator).
+
+    Yields :class:`WorkRequest` rounds and receives their responses via
+    ``send``; returns True when a feasible schedule exists (candidates
+    are in the pool) and False when even the min-time schedule misses
+    the deadline.  Both the sequential driver
+    (:func:`_lambda_search_batched`) and the subset-stacked scheduler
+    (:func:`repro.core.rails.select_rails_stacked`) drive this one
+    implementation, so the probe sequence — and therefore the candidate
+    pool — is identical no matter how rounds are batched across
+    subsets.
+
+    Round structure (the batched multi-λ engine of PR 2, unrolled into
+    requests): one batched DP evaluates the min-time limit, μ=0, both
+    idle-priced branches, and a geometric λ bracket grid; extension
+    sweeps extend the grid upward when needed; parametric envelope cuts
+    then land on the exact breakpoint λ*; a fused multi-μ k-best pass
+    enriches the candidate pool at λ* (and its sleep-priced branch).
     """
 
     def line(r: dict) -> tuple[float, float]:
         # the DP objective's (E, T) of a path: op+transition cost only
         return (r["e_op"] + r["e_trans"], r["t_infer"])
-
-    bk = get_backend(backend)
-    if bk.jitted:
-        # keep single-λ probes on the jitted kernel (no retrace: K=1 is
-        # a stable shape)
-        def probe(lam: float) -> list[int]:
-            return dp_paths_multi(problem, [lam], backend=bk)[0]
-    else:
-        # the ragged scalar kernel beats a K=1 padded batch on numpy
-        def probe(lam: float) -> list[int]:
-            return dp_best_path(problem, lam)
 
     # -- round A+B: limits, idle branches, AND the bracket grid in ONE
     # batched DP pass.  The grid λs cost vector work only; their paths
@@ -475,9 +471,9 @@ def _lambda_search_batched(problem, stats, consider_all, *,
     grid = lam0 * (_WARM_MULTS if hinted else _COLD_MULTS)
     stats.dp_calls += 1
     stats.dp_lambdas += n_a + len(grid)
-    all_paths = dp_paths_multi_weighted(
-        problem, w_e + [1.0] * len(grid), w_t + list(grid), backend=bk)
-    rows = consider_all(all_paths[:n_a])
+    all_paths, rows = yield WorkRequest(
+        "dp", w_e=np.array(w_e + [1.0] * len(grid)),
+        w_t=np.array(w_t + list(grid)), eval_n=n_a)
     if not rows[0]["feasible"]:       # even the min-time schedule misses
         return False
     feasible_at_zero = rows[1]["feasible"]
@@ -485,8 +481,8 @@ def _lambda_search_batched(problem, stats, consider_all, *,
     if feasible_at_zero:
         # deadline slack is abundant: idle-priced unconstrained optima
         # (the speculative grid paths stay out of the candidate pool)
-        consider_all(_frontier(problem, 0.0, k_candidates,
-                               collect_idle_branches))
+        yield _frontier_request(problem, 0.0, k_candidates,
+                                collect_idle_branches)
         return True
 
     # -- bracket the feasibility threshold on the grid
@@ -499,8 +495,11 @@ def _lambda_search_batched(problem, stats, consider_all, *,
             grid = grid[-1] * 4.0 ** _EXTEND_EXPS
             stats.dp_calls += 1
             stats.dp_lambdas += len(grid)
-            grid_paths = dp_paths_multi(problem, grid, backend=bk)
-        grows = consider_all(grid_paths)
+            grid_paths, grows = yield WorkRequest(
+                "dp", w_e=np.ones(len(grid)), w_t=np.asarray(grid),
+                eval_n=None)
+        else:
+            grows = yield WorkRequest("eval", paths=grid_paths)
         for mu, r in zip(grid, grows):
             if r["feasible"]:
                 hi, hi_pt = float(mu), line(r)
@@ -533,7 +532,9 @@ def _lambda_search_batched(problem, stats, consider_all, *,
         stats.lambda_iterations += 1
         stats.dp_calls += 1
         stats.dp_lambdas += 1
-        r = consider_all([probe(lam)])[0]
+        _, probe_rows = yield WorkRequest(
+            "dp", w_e=np.ones(1), w_t=np.array([lam]), eval_n=None)
+        r = probe_rows[0]
         pt = line(r)
         if r["feasible"]:
             if pt == hi_pt:
@@ -551,18 +552,237 @@ def _lambda_search_batched(problem, stats, consider_all, *,
             lo, lo_pt = lam, pt
 
     stats.lambda_star = hi
-    consider_all(_frontier(problem, hi, k_candidates,
-                           collect_idle_branches))
+    yield _frontier_request(problem, hi, k_candidates,
+                            collect_idle_branches)
     return True
 
 
-def _frontier(problem, lam: float, k_candidates: int,
-              collect_idle_branches: bool) -> list[list[int]]:
-    """k-best candidate enrichment at λ (and its sleep-priced branch),
-    fused into one multi-μ k-best pass; path order matches the two
-    sequential ``kbest_paths`` calls exactly."""
-    if not collect_idle_branches:
-        return kbest_paths(problem, lam, k_candidates)
-    a, b = kbest_paths_multi(
-        problem, [lam, lam - problem.idle.p_sleep], k_candidates)
-    return a + b
+def _frontier_request(problem, lam: float, k_candidates: int,
+                      collect_idle_branches: bool) -> WorkRequest:
+    """Candidate enrichment at λ (and its sleep-priced branch), fused
+    into one multi-μ k-best request; pool order matches the sequential
+    per-μ ``kbest_paths`` calls exactly."""
+    mus = [lam]
+    if collect_idle_branches:
+        mus.append(lam - problem.idle.p_sleep)
+    return WorkRequest("kbest", mus=mus, k=k_candidates)
+
+
+def serve_request(problem: ScheduleProblem, req: WorkRequest,
+                  consider_all, bk):
+    """Serve one machine request on the (non-stacked) backend kernels.
+
+    The subset-stacked scheduler replaces this with grouped stacked
+    calls; both produce bit-identical responses (see
+    :mod:`repro.core.backend`).
+    """
+    if req.kind == "dp":
+        if len(req.w_t) == 1 and req.w_e[0] == 1.0 and not bk.jitted:
+            # the ragged scalar kernel beats a K=1 padded batch on numpy
+            paths = np.asarray([dp_best_path(problem, float(req.w_t[0]))],
+                               dtype=np.int64)
+        else:
+            paths = dp_paths_multi_weighted(problem, req.w_e, req.w_t,
+                                            backend=bk)
+        n = len(paths) if req.eval_n is None else req.eval_n
+        return paths, consider_all(paths[:n])
+    if req.kind == "eval":
+        return consider_all(req.paths)
+    if req.kind == "kbest":
+        paths, counts = bk.kbest_multi(problem.padded_arrays(),
+                                       np.asarray(req.mus, dtype=float),
+                                       req.k)
+        flat = [p for per_mu in kbest_rows_to_lists(paths, counts)
+                for p in per_mu]
+        consider_all(flat)
+        return None
+    raise ValueError(f"unknown work request kind {req.kind!r}")
+
+
+def _lambda_search_batched(problem, stats, consider_all, *,
+                           k_candidates, bisect_iters, bisect_rel_tol,
+                           collect_idle_branches, lam_hint,
+                           backend) -> bool:
+    """Sequential driver of :func:`lambda_rounds`: serve each request
+    directly on this problem's backend kernels."""
+    bk = get_backend(backend)
+    machine = lambda_rounds(
+        problem, stats, k_candidates=k_candidates,
+        bisect_iters=bisect_iters, bisect_rel_tol=bisect_rel_tol,
+        collect_idle_branches=collect_idle_branches, lam_hint=lam_hint)
+    resp = None
+    while True:
+        try:
+            req = machine.send(resp)
+        except StopIteration as stop:
+            return stop.value
+        resp = serve_request(problem, req, consider_all, bk)
+
+
+# ----------------------------------------------- subset-stacked tasks
+
+class StackedLambdaTask:
+    """Per-subset λ-search state for the subset-stacked sweep.
+
+    Wraps one :func:`lambda_rounds` machine plus its candidate pool so a
+    round-based scheduler (:func:`repro.core.rails.select_rails_stacked`)
+    can advance many subsets per stacked backend call:
+
+      1. the scheduler reads :attr:`request` and batches same-shaped
+         kernel work across same-:attr:`bucket` tasks;
+      2. :meth:`take_kernel` receives this task's slice of the stacked
+         kernel result and returns the not-yet-pooled paths that still
+         need evaluation (deduplication mirrors the sequential pool);
+      3. :meth:`take_rows` receives the gathered cost components of
+         those paths (one stacked gather for the whole bucket), builds
+         the evaluation rows through the problem's own
+         :meth:`~repro.core.problem.ScheduleProblem.finish_costs`, and
+         advances the machine to its next request.
+
+    Because the machine, the pool bookkeeping, and the row math are the
+    exact objects the sequential driver uses, the pool contents — and
+    hence the solved result — are bit-identical to a sequential
+    ``solve_lambda_dp`` on the same problem (same backend, no hint).
+    """
+
+    def __init__(self, idx: int, rails: tuple[float, ...],
+                 problem: ScheduleProblem, *, k_candidates: int = 10,
+                 bisect_iters: int = 48, bisect_rel_tol: float = 0.0,
+                 collect_idle_branches: bool = True,
+                 lam_hint: float | None = None):
+        from repro.core.backend import bucket_key
+
+        self.idx = idx
+        self.rails = rails
+        self.problem = problem
+        self.k_candidates = k_candidates
+        self.stats = SolverStats()
+        self.stats.states_explored = problem.n_states()
+        self.stats.edges_explored = problem.n_edges()
+        self.padded = problem.padded_arrays()
+        self.bucket = bucket_key(self.padded)
+        self.seen: dict[tuple, dict] = {}
+        self._machine = lambda_rounds(
+            problem, self.stats, k_candidates=k_candidates,
+            bisect_iters=bisect_iters, bisect_rel_tol=bisect_rel_tol,
+            collect_idle_branches=collect_idle_branches,
+            lam_hint=lam_hint)
+        self.request: WorkRequest | None = None
+        self.ok: bool | None = None
+        self._phase = "lambda"
+        self._tic = time.perf_counter()
+        self._pending_keys: list[tuple] | None = None
+        self._fresh: list[tuple] | None = None
+        self._raw: np.ndarray | None = None
+
+    def start(self) -> None:
+        self._advance(None)
+
+    def _post_machine(self):
+        """Hook: a second request generator to drive after a feasible
+        λ search (e.g. stacked refinement).  None = no post phase."""
+        return None
+
+    def _advance(self, resp) -> None:
+        while True:
+            try:
+                self.request = self._machine.send(resp)
+                return
+            except StopIteration as stop:
+                if self._phase == "lambda":
+                    self.ok = bool(stop.value)
+                    self._phase = "post"
+                    nxt = self._post_machine() if self.ok else None
+                    if nxt is not None:
+                        self._machine = nxt
+                        resp = None
+                        continue
+                break
+        self.request = None
+        self._machine = None
+        self.stats.wall_time_s = time.perf_counter() - self._tic
+
+    def take_kernel(self, raw) -> np.ndarray:
+        """Consume this task's slice of the round's stacked kernel
+        output; returns the [F, L] paths still needing cost gathers
+        (possibly empty)."""
+        req = self.request
+        if req.kind == "moves":
+            self._raw = raw                     # (layer, state, gain)
+            return np.empty((0, self.problem.n_layers), dtype=np.int64)
+        if req.kind == "eval_batch":            # plain eval, no pooling
+            return req.paths
+        if req.kind == "dp":
+            self._raw = raw
+            pend = raw if req.eval_n is None else raw[:req.eval_n]
+        elif req.kind == "kbest":
+            paths, counts = raw
+            pend = [p for per_mu in kbest_rows_to_lists(paths, counts)
+                    for p in per_mu]
+        else:                                   # "eval": no kernel ran
+            pend = req.paths
+        if isinstance(pend, np.ndarray):
+            pend = pend.tolist()
+        keys = [tuple(p) for p in pend]
+        fresh: list[tuple] = []
+        fresh_set: set[tuple] = set()
+        for key in keys:
+            if key not in self.seen and key not in fresh_set:
+                fresh.append(key)
+                fresh_set.add(key)
+        self._pending_keys = keys
+        self._fresh = fresh
+        if not fresh:
+            return np.empty((0, self.problem.n_layers), dtype=np.int64)
+        return np.asarray([list(key) for key in fresh], dtype=np.int64)
+
+    def take_rows(self, batch: dict[str, np.ndarray] | None) -> None:
+        """Consume the finished evaluation batch of this task's fresh
+        paths (the :meth:`~repro.core.problem.ScheduleProblem
+        .finish_costs` slice the scheduler computed for the whole
+        bucket), update the pool, and advance the machine one round."""
+        req = self.request
+        if req.kind == "moves":
+            resp = self._raw
+            self._raw = None
+            self._advance(resp)
+            return
+        if req.kind == "eval_batch":
+            self._advance(batch)
+            return
+        if self._fresh:
+            for j, key in enumerate(self._fresh):
+                self.seen[key] = ScheduleProblem.result_row(batch, j)
+            self.stats.candidates_evaluated += len(self._fresh)
+        rows = [self.seen[key] for key in self._pending_keys]
+        if req.kind == "dp":
+            resp = (self._raw, rows)
+        elif req.kind == "eval":
+            resp = rows
+        else:
+            resp = None
+        self._pending_keys = self._fresh = self._raw = None
+        self._advance(resp)
+
+    def candidates(self) -> list[dict]:
+        """The ≤k best distinct feasible paths, exactly as
+        :func:`solve_lambda_dp` would have returned them."""
+        feas = sorted((r for r in self.seen.values() if r["feasible"]),
+                      key=lambda r: r["e_total"])
+        return feas[:self.k_candidates]
+
+    def finalize(self) -> dict | None:
+        """Default finalization for the scheduler: the best feasible
+        candidate — exactly ``solve_lambda_dp``'s ``best`` — annotated
+        with this task's rails and λ*, or None when infeasible.
+        Subclasses override to run their per-subset post-processing
+        (see ``repro.core.policies._PfdnnStackedTask``)."""
+        if not self.ok:
+            return None
+        candidates = self.candidates()
+        if not candidates:
+            return None
+        best = dict(candidates[0])
+        best["rails"] = self.rails
+        best["lambda_star"] = self.stats.lambda_star
+        return best

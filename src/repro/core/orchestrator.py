@@ -2,17 +2,21 @@
 
 ``compile_power_schedule`` runs the staged PF-DNN pipeline:
 
-  characterize layers → bank plan → master state table  (CompilationContext)
+  characterize layers → bank plan → master state arrays (CompilationContext)
   → policy lookup                                       (policy registry)
-  → per-subset solve (slice view → prune → batched multi-λ DP
-    → refinement), on the pluggable array backend       (core.backend)
-  → rail selection (warm-started, incumbent-cut sweep;
-    optionally fanned out over a worker pool)
+  → rail selection: the subset-stacked sweep (default) groups live
+    rail subsets by padded bucket and advances every subset one
+    λ-search round per stacked backend call — each subset runs
+    slice view → prune → batched multi-λ DP → refinement as a
+    resumable state machine on the pluggable array backend
+    (core.backend); ``stack_subsets=False`` / ``sweep_workers=N``
+    restore the legacy per-subset loop / thread-pool sweep
   → emit the PowerSchedule
 
 The per-policy solve strategies live in :mod:`repro.core.policies`; the
-shared precomputation lives in :mod:`repro.core.context`.  This module
-is only the driver: validate, build the context, dispatch.
+shared precomputation lives in :mod:`repro.core.context`; the stacked
+round scheduler lives in :mod:`repro.core.rails`.  This module is only
+the driver: validate, build the context, dispatch.
 """
 
 from __future__ import annotations

@@ -38,15 +38,16 @@ from repro.core.backend import get_backend
 from repro.core.context import CompilationContext
 from repro.core.greedy import solve_greedy
 from repro.core.ilp import solve_ilp
-from repro.core.lambda_dp import solve_lambda_dp
+from repro.core.lambda_dp import StackedLambdaTask, solve_lambda_dp
 from repro.core.problem import ScheduleProblem
 from repro.core.pruning import prune_problem, unprune_path
 from repro.core.rails import (
     all_rail_subsets,
     evenly_spaced_rails,
     select_rails,
+    select_rails_stacked,
 )
-from repro.core.refinement import refine_candidates
+from repro.core.refinement import refine_candidates, refine_rounds
 from repro.core.schedule import PowerSchedule
 
 
@@ -81,6 +82,18 @@ class OrchestratorConfig:
     # $PFDNN_WORKERS or serial).  The parallel sweep selects the same
     # rails as the serial one (see repro.core.rails.select_rails).
     sweep_workers: int | None = None
+    # subset-stacked sweep (default): live rail subsets are grouped by
+    # padded bucket and advanced one λ-search round per stacked backend
+    # call (see repro.core.rails.select_rails_stacked) — provably
+    # selection-identical to the sequential sweep.  False restores the
+    # legacy per-subset loop; an explicit sweep_workers > 1 or
+    # batch_lambda=False also routes to the legacy sweep (the stacked
+    # engine is the batched multi-λ machine by construction).
+    stack_subsets: bool = True
+    # live-task cap of the stacked scheduler (None → $PFDNN_STACK_LIVE
+    # or 16): larger stacks amortize dispatch better, smaller ones make
+    # the incumbent/ceiling cuts bite earlier.
+    stack_max_live: int | None = None
 
 
 PolicyFn = Callable[[CompilationContext, OrchestratorConfig],
@@ -115,7 +128,7 @@ def emit_schedule(policy: str, ctx: CompilationContext,
                   problem: ScheduleProblem, result: dict,
                   stats: dict, *, gating: bool) -> PowerSchedule:
     """Bind a solver result to the deployable artifact (§3.3 emit)."""
-    volts = [problem.layer_states[i][s].voltages
+    volts = [problem.state_voltages(i, s)
              for i, s in enumerate(result["path"])]
     awake = [ctx.plan.awake_banks(i, gating)
              for i in range(problem.n_layers)]
@@ -232,6 +245,75 @@ def _solve_pfdnn_on_rails(problem: ScheduleProblem, cfg: OrchestratorConfig,
     return best, stats
 
 
+class _PfdnnStackedTask(StackedLambdaTask):
+    """One rail subset of the subset-stacked pfdnn sweep: the λ-search
+    machine of :class:`StackedLambdaTask` plus the per-subset pipeline
+    around it (prune → solve → refine → unprune), mirroring
+    :func:`_solve_pfdnn_on_rails` exactly (λ* hints arrive best-effort
+    from the scheduler, like the thread-pool sweep's hint protocol).
+    Refinement runs as post-λ machine rounds, so its move scoring and
+    path evaluations stack across subsets like every other round."""
+
+    def __init__(self, idx: int, rails: tuple[float, ...],
+                 problem: ScheduleProblem, cfg: OrchestratorConfig,
+                 agg: dict, problems: dict,
+                 lam_hint: float | None = None):
+        self._orig = problem
+        self._cfg = cfg
+        self._agg = agg
+        self._problems = problems
+        self._index_maps = None
+        self._best: dict | None = None
+        self._moves: int | None = None
+        target = problem
+        if cfg.prune:
+            target, pinfo = prune_problem(problem)
+            self._index_maps = pinfo.pop("index_maps")
+        super().__init__(
+            idx, rails, target, k_candidates=cfg.k_candidates,
+            bisect_rel_tol=cfg.bisect_rel_tol if cfg.warm_start else 0.0,
+            lam_hint=lam_hint)
+        self.stats.backend = get_backend(cfg.backend).name
+
+    def _post_machine(self):
+        candidates = self.candidates()
+        self._best = candidates[0] if candidates else None
+        if self._best is None or not (self._cfg.refine and candidates):
+            return None
+        return self._refine_machine(candidates)
+
+    def _refine_machine(self, candidates: list[dict]):
+        results, moves = yield from refine_rounds(
+            self.problem,
+            [c["path"] for c in candidates[:self._cfg.k_candidates]],
+            self._cfg.max_moves)
+        best = results[0]
+        for refined in results[1:]:
+            if refined["e_total"] < best["e_total"]:
+                best = refined
+        self._best = best
+        self._moves = sum(moves)
+
+    def finalize(self) -> dict | None:
+        lstats = dataclasses.asdict(self.stats)
+        best = self._best if self.ok else None
+        if best is not None and self._moves is not None:
+            lstats["refinement_moves"] = self._moves
+        if best is not None and self._index_maps is not None:
+            # re-express in the unpruned problem for reporting
+            best = self._orig.evaluate(
+                unprune_path(best["path"], self._index_maps))
+        for key in self._agg:
+            self._agg[key] += lstats.get(key, 0)
+        if best is None:
+            return None
+        self._problems[self.rails] = self._orig
+        best = dict(best)
+        best["rails"] = self.rails
+        best["lambda_star"] = lstats.get("lambda_star")
+        return best
+
+
 def _solve_sweep(policy: str, ctx: CompilationContext,
                  cfg: OrchestratorConfig, *, even: bool,
                  prune: bool) -> PowerSchedule | None:
@@ -245,9 +327,11 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
     def solve_subset(rails: tuple[float, ...],
                      hint: dict | None = None) -> dict | None:
         # the full sweep amortizes the master table over Σ C(|V|,k)
-        # subsets; the evenly-spaced ablation solves only n_max of them
+        # subsets; the evenly-spaced ablation solves only n_max of them.
+        # Swept problems are array-backed (no per-state Python lists)
         problem = ctx.problem_for(rails, gating=True, allow_sleep=True,
-                                  via_master=not even)
+                                  via_master=not even,
+                                  materialize_states=even)
         lam_hint = (hint or {}).get("lam_hint") if cfg.warm_start else None
         best, stats = _solve_pfdnn_on_rails(problem, cfg_local,
                                             lam_hint=lam_hint)
@@ -270,13 +354,34 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
     bound_fn = (lambda rails: ctx.min_e_op_bound(rails, gating=True)) \
         if (cfg.warm_start and not even) else None
     workers = sweep_workers(cfg) if not even else None
-    if workers is not None and workers > 1:
-        # build the shared master table before fanning out (cheaper than
-        # workers piling up on the context lock)
-        ctx.master_states(True)
-    best, best_rails, sel_stats = select_rails(
-        ctx.levels, cfg.n_max_rails, solve_subset, subsets=subsets,
-        bound_fn=bound_fn, workers=workers)
+    # the stacked engine IS the batched multi-λ machine, so an explicit
+    # batch_lambda=False (legacy scalar bisection) must route to the
+    # per-subset loop that honors it
+    if cfg.stack_subsets and cfg.batch_lambda and not even and \
+            (workers is None or workers <= 1):
+        # subset-stacked engine: whole same-bucket buckets of live
+        # subsets advance one λ-search round per stacked backend call
+        def make_task(idx: int, rails: tuple[float, ...],
+                      hint: dict | None = None) -> _PfdnnStackedTask:
+            problem = ctx.problem_for(rails, gating=True,
+                                      allow_sleep=True,
+                                      materialize_states=False)
+            lam_hint = (hint or {}).get("lam_hint") \
+                if cfg.warm_start else None
+            return _PfdnnStackedTask(idx, rails, problem, cfg_local,
+                                     agg, problems, lam_hint=lam_hint)
+
+        best, best_rails, sel_stats = select_rails_stacked(
+            subsets, make_task, bound_fn=bound_fn,
+            backend=cfg.backend, max_live=stack_max_live(cfg))
+    else:
+        if workers is not None and workers > 1:
+            # build the shared master arrays before fanning out (cheaper
+            # than workers piling up on the context lock)
+            ctx._master_arrays(True)
+        best, best_rails, sel_stats = select_rails(
+            ctx.levels, cfg.n_max_rails, solve_subset, subsets=subsets,
+            bound_fn=bound_fn, workers=workers)
     if best is None or best_rails is None:
         return None
     sel_stats.update(agg)
@@ -297,6 +402,17 @@ def sweep_workers(cfg: OrchestratorConfig) -> int | None:
     except ValueError:
         return None
     return env if env > 1 else None
+
+
+def stack_max_live(cfg: OrchestratorConfig) -> int | None:
+    """Resolve the stacked scheduler's live-task cap: explicit config,
+    else $PFDNN_STACK_LIVE, else the scheduler default."""
+    if cfg.stack_max_live is not None:
+        return cfg.stack_max_live
+    try:
+        return int(os.environ["PFDNN_STACK_LIVE"])
+    except (KeyError, ValueError):
+        return None
 
 
 @register_policy("pfdnn")

@@ -99,40 +99,65 @@ def _pairwise_transition(tm: TransitionModel,
     rail switch on at least one domain (a voltage change where neither
     endpoint is gated) — power-gating entries/exits are not rail switches.
     """
-    a = va[:, None, :]   # [Sa, 1, D]
-    b = vb[None, :, :]   # [1, Sb, D]
-    changed = a != b
-    from_gated = (a == V_GATED) & changed
-    to_gated = (b == V_GATED) & changed
-    rail_switch = changed & ~from_gated & ~to_gated
-
-    lat = np.zeros(changed.shape)
-    lat = np.where(from_gated, tm.t_wake, lat)
-    lat = np.where(rail_switch, tm.t_rail, lat)
-    # gating (to_gated) costs no stall time
-    t_trans = lat.max(axis=-1)
-
+    # Each domain column draws from a handful of unique rail levels, so
+    # the per-domain pairwise quantities are computed on the tiny
+    # [Ua, Ub] unique-level grid and gathered out to [Sa, Sb] — one
+    # gather per domain per quantity instead of [Sa, Sb, D] elementwise
+    # sweeps (~3× less memory traffic on wide master tables).  The
+    # per-element arithmetic and the domain reduction order are exactly
+    # the direct formulation's, so results are bit-identical.
+    Sa, D = va.shape
+    Sb = vb.shape[0]
     c = tm._cap_scale()
-    hi = np.maximum(a, b)
-    lo = np.minimum(a, b)
-    e = np.where(changed,
-                 np.where(lo == V_GATED, c * hi**2, c * (hi**2 - lo**2)),
-                 0.0)
-    e_trans = e.sum(axis=-1)
-    n_switch = rail_switch.any(axis=-1).astype(np.int64)
+    t_trans = np.zeros((Sa, Sb))
+    e_trans = np.zeros((Sa, Sb))
+    any_switch = np.zeros((Sa, Sb), dtype=bool)
+    for d in range(D):
+        ua, ia = np.unique(va[:, d], return_inverse=True)
+        ub, ib = np.unique(vb[:, d], return_inverse=True)
+        a = ua[:, None]
+        b = ub[None, :]
+        changed = a != b
+        from_gated = (a == V_GATED) & changed
+        to_gated = (b == V_GATED) & changed
+        rail_switch = changed & ~from_gated & ~to_gated
+        lat = np.where(from_gated, tm.t_wake, 0.0)
+        lat = np.where(rail_switch, tm.t_rail, lat)
+        # gating (to_gated) costs no stall time
+        hi = np.maximum(a, b)
+        lo = np.minimum(a, b)
+        e = np.where(changed,
+                     np.where(lo == V_GATED, c * hi**2,
+                              c * (hi**2 - lo**2)),
+                     0.0)
+        ra = ia[:, None]
+        cb = ib[None, :]
+        np.maximum(t_trans, lat[ra, cb], out=t_trans)
+        e_trans += e[ra, cb]
+        any_switch |= rail_switch[ra, cb]
+    n_switch = any_switch.astype(np.int64)
     return t_trans, e_trans, n_switch
 
 
 @dataclasses.dataclass
 class ScheduleProblem:
-    """Layered state graph + deadline + idle model (paper §4)."""
+    """Layered state graph + deadline + idle model (paper §4).
 
-    layer_states: list[list[StateCost]]
+    ``layer_states`` may be ``None`` for *array-backed* problems (the
+    rail-subset sweep's hot path): the per-layer t/e/voltage arrays are
+    injected as master-table slices and ``layer_sizes`` carries the
+    state counts, skipping the per-state ``StateCost`` Python lists
+    entirely.  Both forms are solver-equivalent; reporting helpers
+    (:meth:`state_voltages`) work on either.
+    """
+
+    layer_states: list[list[StateCost]] | None
     t_max: float
     idle: IdleModel
     transition_model: TransitionModel
     rails: tuple[float, ...] = ()
     name: str = ""
+    layer_sizes: tuple[int, ...] | None = None
 
     def __post_init__(self) -> None:
         # per-layer t_op/e_op/voltage arrays, derived lazily from the
@@ -147,12 +172,25 @@ class ScheduleProblem:
         # slices) or prune_problem (parent slices) instead of recomputed.
         self._trans_cache: dict[
             int, tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        # lazy master-backed transition provider: ``_trans_src(i)``
+        # returns the *master* (T, E, switch) matrices of pair i and
+        # ``_trans_sel[i]`` maps this problem's layer-i states to master
+        # rows.  Slices materialize per pair on first use — the rail
+        # sweep never pays for matrices a subset does not touch, and a
+        # pruned view composes its selection with the parent's instead
+        # of slicing twice.
+        self._trans_src = None
+        self._trans_sel: list[np.ndarray] | None = None
         # lazily-built dense padded tensors for the batched DP / jitted
         # evaluators (repro.core.backend); invalidated never — problems
         # are immutable after construction.
         self._padded: PaddedArrays | None = None
 
     def _build_arrays(self) -> None:
+        if self.layer_states is None:
+            raise ValueError(
+                "array-backed problem (layer_states=None) must have its "
+                "per-layer arrays injected at construction")
         self._t_op_c = [np.array([s.t_op for s in states])
                         for states in self.layer_states]
         self._e_op_c = [np.array([s.e_op for s in states])
@@ -180,17 +218,34 @@ class ScheduleProblem:
 
     # -- accessors ----------------------------------------------------
     @property
+    def sizes(self) -> tuple[int, ...]:
+        """Per-layer feasible-state counts |S_i|."""
+        if self.layer_sizes is not None:
+            return self.layer_sizes
+        return tuple(len(s) for s in self.layer_states)
+
+    @property
     def n_layers(self) -> int:
-        return len(self.layer_states)
+        if self.layer_states is not None:
+            return len(self.layer_states)
+        return len(self.layer_sizes)
 
     def n_states(self) -> int:
         """Σ|S_i| — the layered-state-graph node count (§4.2)."""
-        return sum(len(s) for s in self.layer_states)
+        return sum(self.sizes)
 
     def n_edges(self) -> int:
         """Σ|S_i||S_{i+1}| — adjacent-layer transition count (§4.2)."""
-        return sum(len(a) * len(b) for a, b in
-                   zip(self.layer_states[:-1], self.layer_states[1:]))
+        sizes = self.sizes
+        return sum(a * b for a, b in zip(sizes[:-1], sizes[1:]))
+
+    def state_voltages(self, i: int, s: int) -> tuple[float, ...]:
+        """Per-domain voltages of state ``s`` of layer ``i`` (works on
+        array-backed problems, where no StateCost lists exist).  Plain
+        Python floats — schedules serialize to JSON."""
+        if self.layer_states is not None:
+            return self.layer_states[i][s].voltages
+        return tuple(float(v) for v in self._volts[i][s])
 
     def op_arrays(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         return self._t_op[i], self._e_op[i]
@@ -198,9 +253,33 @@ class ScheduleProblem:
     def _ensure_trans(self, i: int
                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         if i not in self._trans_cache:
-            self._trans_cache[i] = _pairwise_transition(
-                self.transition_model, self._volts[i], self._volts[i + 1])
+            if self._trans_src is not None:
+                tt, et, sw = self._trans_src(i)
+                sel = np.ix_(self._trans_sel[i], self._trans_sel[i + 1])
+                self._trans_cache[i] = (tt[sel], et[sel], sw[sel])
+            else:
+                self._trans_cache[i] = _pairwise_transition(
+                    self.transition_model,
+                    self._volts[i], self._volts[i + 1])
         return self._trans_cache[i]
+
+    def trans_elems(self, i: int, a: np.ndarray, b: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Elementwise (T_trans, E_trans, switch) of crossing layer
+        boundary ``i`` from states ``a`` to ``b`` (index arrays).
+
+        On master-backed problems with the pair not yet materialized,
+        gathers single elements straight from the master matrices —
+        single-path evaluation never pays for a full [S_i, S_{i+1}]
+        slice.  Values are identical either way.
+        """
+        if self._trans_src is not None and i not in self._trans_cache:
+            tt, et, sw = self._trans_src(i)
+            ga = self._trans_sel[i][a]
+            gb = self._trans_sel[i + 1][b]
+            return tt[ga, gb], et[ga, gb], sw[ga, gb]
+        tt, et, sw = self._ensure_trans(i)
+        return tt[a, b], et[a, b], sw[a, b]
 
     def transition_arrays(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         """(T_trans, E_trans) matrices between layer i and i+1 states."""
@@ -237,12 +316,20 @@ class ScheduleProblem:
         if p.ndim != 2 or p.shape[1] != self.n_layers:
             raise ValueError(
                 f"paths must be [P, {self.n_layers}], got {p.shape}")
-        sizes = np.array([len(s) for s in self.layer_states])
+        sizes = np.array(self.sizes)
         if (p < 0).any() or (p >= sizes[None, :]).any():
             raise ValueError(
                 "path state indices out of range for this problem's "
                 f"layer state counts {sizes.tolist()}")
         costs = get_backend(backend).path_costs(self, p)
+        return self.finish_costs(p, costs)
+
+    def finish_costs(self, p: np.ndarray,
+                     costs: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        """Turn gathered per-path cost components into the full
+        evaluation batch (deadline check, idle energy, totals).  Shared
+        by :meth:`evaluate_paths` and the subset-stacked sweep's grouped
+        evaluator, so both produce bit-identical rows."""
         t_trans = costs["t_trans"]
         e_trans = costs["e_trans"]
         e_op = costs["e_op"]

@@ -27,7 +27,7 @@ def _worst_case_transition(problem: ScheduleProblem) -> tuple[float, float]:
     tm = problem.transition_model
     t_bound = max(tm.t_rail, tm.t_wake)
     # energy: per-domain full-swing charge, summed over domains
-    n_domains = len(problem.layer_states[0][0].voltages)
+    n_domains = problem._volts[0].shape[1]
     c = tm._cap_scale()
     e_bound = n_domains * c * tm.v_max**2
     return t_bound, e_bound
@@ -54,7 +54,7 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
     # All layers are scored in one padded [L, S, S] shot; padded slots
     # are excluded via the validity mask, never via inf arithmetic.
     L = problem.n_layers
-    sizes = np.array([len(s) for s in problem.layer_states])
+    sizes = np.array(problem.sizes)
     S = int(sizes.max())
     t = np.zeros((L, S))
     e = np.zeros((L, S))
@@ -79,16 +79,21 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
         del mutual
     dominated = dom.any(axis=1)                  # [L, a]
 
-    new_layers: list[list[StateCost]] = []
+    # array-backed parents stay array-backed: the pruned view only ever
+    # needs the sliced arrays below, so no StateCost lists are built
+    new_layers: list[list[StateCost]] | None = \
+        None if problem.layer_states is None else []
     index_maps: list[list[int]] = []
     removed_total = 0
-    for li, states in enumerate(problem.layer_states):
-        n = len(states)
+    for li in range(L):
+        n = int(sizes[li])
         keep = np.nonzero(~dominated[li, :n])[0]
         keep_idx = [int(i) for i in keep]
         if not keep_idx:                  # never empty a layer
             keep_idx = [int(np.argmin(e[li, :n]))]
-        new_layers.append([states[i] for i in keep_idx])
+        if new_layers is not None:
+            states = problem.layer_states[li]
+            new_layers.append([states[i] for i in keep_idx])
         index_maps.append(keep_idx)
         removed_total += n - len(keep_idx)
 
@@ -99,6 +104,7 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
         transition_model=problem.transition_model,
         rails=problem.rails,
         name=problem.name + "+pruned",
+        layer_sizes=tuple(len(keep) for keep in index_maps),
     )
     # share the parent's already-materialized arrays as index slices —
     # the pruned view never re-runs _pairwise_transition (or the
@@ -112,6 +118,14 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
     for i, (tt, et, sw) in problem._trans_cache.items():
         sel = np.ix_(index_maps[i], index_maps[i + 1])
         pruned._trans_cache[i] = (tt[sel], et[sel], sw[sel])
+    if problem._trans_src is not None:
+        # master-backed parent: compose the keep-selection with the
+        # parent's master rows, so an untouched pair later materializes
+        # with ONE gather at pruned size instead of two
+        pruned._trans_src = problem._trans_src
+        pruned._trans_sel = [
+            sel_i[keep] for sel_i, keep in zip(problem._trans_sel,
+                                               index_maps)]
     info = {
         "states_before": problem.n_states(),
         "states_after": pruned.n_states(),

@@ -54,6 +54,115 @@ def move_deltas(problem: ScheduleProblem, path: list[int], i: int
     return d_t, d_e
 
 
+def move_scores(stacked, lanes: np.ndarray, pa: np.ndarray,
+                t_infer: np.ndarray, e_idle: np.ndarray,
+                t_max: float, idle) -> tuple[np.ndarray, np.ndarray,
+                                             np.ndarray]:
+    """Score every (candidate, layer, state) single-layer replacement
+    of P candidate rows living on lanes of a
+    :class:`~repro.core.backend.StackedArrays`.
+
+    Returns per-row ``(layer, state, gain)`` of the best move (the
+    global argmin over the row's padded [L, S] move tensor).  Rows are
+    independent — per-row results are bit-identical no matter how rows
+    are grouped into calls, and identical to scoring on the row's own
+    (narrower) padded bucket: pad entries are masked to inf and the
+    layer-major argmin tie order is S-invariant.
+    """
+    n_layers = stacked.n_layers
+    s_pad = stacked.s_pad
+    ln = lanes[:, None]
+    li = np.arange(n_layers)[None, :]
+    lt = np.arange(max(n_layers - 1, 0))[None, :]
+    t_op = stacked.t_op[lanes]                          # [P, L, S]
+    e_op = stacked.e_op[lanes]
+    # [P, L, S] move tensors, same accumulation order as the scalar
+    # move deltas: Δop, then the inbound edge, then the outbound
+    d_t = t_op - stacked.t_op[ln, li, pa][:, :, None]
+    d_e = e_op - stacked.e_op[ln, li, pa][:, :, None]
+    if n_layers > 1:
+        prev, cur_t = pa[:, :-1], pa[:, 1:]             # inbound, i ≥ 1
+        d_t[:, 1:, :] += stacked.t_trans[ln, lt, prev, :]
+        d_t[:, 1:, :] -= stacked.t_trans[ln, lt, prev, cur_t][:, :, None]
+        d_e[:, 1:, :] += stacked.e_trans[ln, lt, prev, :]
+        d_e[:, 1:, :] -= stacked.e_trans[ln, lt, prev, cur_t][:, :, None]
+        cur_h, nxt = pa[:, :-1], pa[:, 1:]              # outbound, i < L-1
+        d_t[:, :-1, :] += stacked.t_trans[ln, lt, :, nxt]
+        d_t[:, :-1, :] -= stacked.t_trans[ln, lt, cur_h, nxt][:, :, None]
+        d_e[:, :-1, :] += stacked.e_trans[ln, lt, :, nxt]
+        d_e[:, :-1, :] -= stacked.e_trans[ln, lt, cur_h, nxt][:, :, None]
+    # padded states are not real moves: ΔT → inf makes them
+    # infeasible, which the feasibility mask turns into Δ = inf.
+    # From here on everything is computed in place on d_t / d_e — the
+    # [P, L, S] move tensors are the refinement hot loop and each saved
+    # pass is measurable on deep networks
+    np.copyto(d_t, np.inf, where=~stacked.valid[lanes])
+    d_t += t_infer[:, None, None]                       # d_t is now new_t
+    feasible = d_t <= t_max + 1e-15
+    # Δ total energy includes the idle-energy change from ΔT
+    np.subtract(t_max, d_t, out=d_t)                    # ... now new slack
+    d_idle = idle.energy_batch(d_t)
+    d_idle -= e_idle[:, None, None]
+    # d_e + (e_idle_new − e_idle): the pre-inplace exact association
+    d_e += d_idle
+    np.copyto(d_e, np.inf, where=~feasible)
+    rows_ix = np.arange(pa.shape[0])
+    d_e[rows_ix[:, None], li, pa] = np.inf              # no-ops
+    flat = d_e.reshape(pa.shape[0], -1)
+    best = np.argmin(flat, axis=1)
+    gain = -flat[rows_ix, best]
+    return best // s_pad, best % s_pad, gain
+
+
+def refine_rounds(problem: ScheduleProblem,
+                  paths: Sequence[Sequence[int]],
+                  max_moves: int = 8):
+    """The refinement loop as a resumable state machine (generator).
+
+    Yields :class:`~repro.core.lambda_dp.WorkRequest` rounds — ``kind
+    "moves"`` (score all replacements of the active rows, answered with
+    :func:`move_scores` output) and ``kind "eval_batch"`` (plain batch
+    evaluation, answered with the :meth:`evaluate_paths`-format dict) —
+    and returns ``(evaluations, moves)``.  The sequential
+    :func:`refine_paths` and the subset-stacked sweep drive this one
+    implementation, so refined schedules are identical however rounds
+    are batched across rail subsets.
+    """
+    from repro.core.lambda_dp import WorkRequest
+
+    p = np.asarray([list(path) for path in paths], dtype=np.int64)
+    n_cand, n_layers = p.shape
+    assert n_layers == problem.n_layers
+    ev = yield WorkRequest("eval_batch", paths=p.copy())
+    t_infer = ev["t_infer"].copy()
+    e_idle = ev["e_idle"].copy()
+    moves = np.zeros(n_cand, dtype=np.int64)
+    active = np.full(n_cand, max_moves > 0, dtype=bool)
+
+    while True:
+        act = np.nonzero(active)[0]
+        if act.size == 0:
+            break
+        pa = p[act]                                     # [A, L]
+        layer, state, gain = yield WorkRequest(
+            "moves", paths=pa, aux=(t_infer[act], e_idle[act]))
+        accept = gain > 1e-18
+        active[act[~accept]] = False
+        rows = act[accept]
+        if rows.size == 0:
+            break
+        p[rows, layer[accept]] = state[accept]
+        moves[rows] += 1
+        ev2 = yield WorkRequest("eval_batch", paths=p[rows].copy())
+        t_infer[rows] = ev2["t_infer"]
+        e_idle[rows] = ev2["e_idle"]
+        active[rows] = moves[rows] < max_moves
+
+    final = yield WorkRequest("eval_batch", paths=p.copy())
+    results = [ScheduleProblem.result_row(final, c) for c in range(n_cand)]
+    return results, [int(m) for m in moves]
+
+
 def refine_paths(problem: ScheduleProblem,
                  paths: Sequence[Sequence[int]],
                  max_moves: int = 8) -> tuple[list[dict], list[int]]:
@@ -62,75 +171,28 @@ def refine_paths(problem: ScheduleProblem,
     Each candidate independently applies its best single-layer
     replacement per pass until no move gains energy or ``max_moves`` is
     reached; the passes are batched so one numpy sweep scores every
-    (candidate, layer, state) replacement at once.
+    (candidate, layer, state) replacement at once (sequential driver of
+    :func:`refine_rounds`).
     """
-    p = np.asarray([list(path) for path in paths], dtype=np.int64)
-    n_cand, n_layers = p.shape
-    assert n_layers == problem.n_layers
-    ev = problem.evaluate_paths(p)
-    t_infer = ev["t_infer"].copy()
-    e_idle = ev["e_idle"].copy()
-    moves = np.zeros(n_cand, dtype=np.int64)
-    active = np.full(n_cand, max_moves > 0, dtype=bool)
+    from repro.core.backend import _as_stacked
 
-    # dense padded per-layer tensors: every move pass scores all
-    # (candidate, layer, state) replacements with a handful of whole-
-    # tensor gathers instead of a Python loop over layers
-    padded = problem.padded_arrays()
-    s_pad = padded.s_pad
-    li = np.arange(n_layers)[None, :]
-    lt = np.arange(max(n_layers - 1, 0))[None, :]
-
+    gen = refine_rounds(problem, paths, max_moves)
+    resp = None
+    stacked = None
     while True:
-        act = np.nonzero(active)[0]
-        if act.size == 0:
-            break
-        pa = p[act]                                     # [A, L]
-        # [A, L, S] move tensors, same accumulation order as the scalar
-        # move deltas: Δop, then the inbound edge, then the outbound
-        d_t = padded.t_op[None, :, :] \
-            - padded.t_op[li, pa][:, :, None]
-        d_e = padded.e_op[None, :, :] \
-            - padded.e_op[li, pa][:, :, None]
-        if n_layers > 1:
-            prev, cur_t = pa[:, :-1], pa[:, 1:]         # inbound, i ≥ 1
-            d_t[:, 1:, :] += padded.t_trans[lt, prev, :]
-            d_t[:, 1:, :] -= padded.t_trans[lt, prev, cur_t][:, :, None]
-            d_e[:, 1:, :] += padded.e_trans[lt, prev, :]
-            d_e[:, 1:, :] -= padded.e_trans[lt, prev, cur_t][:, :, None]
-            cur_h, nxt = pa[:, :-1], pa[:, 1:]          # outbound, i < L-1
-            d_t[:, :-1, :] += padded.t_trans[lt, :, nxt]
-            d_t[:, :-1, :] -= padded.t_trans[lt, cur_h, nxt][:, :, None]
-            d_e[:, :-1, :] += padded.e_trans[lt, :, nxt]
-            d_e[:, :-1, :] -= padded.e_trans[lt, cur_h, nxt][:, :, None]
-        # padded states are not real moves: ΔT → inf makes them
-        # infeasible, which the feasibility mask turns into Δ = inf
-        d_t = np.where(padded.valid[None, :, :], d_t, np.inf)
-        new_t = t_infer[act][:, None, None] + d_t
-        feasible = new_t <= problem.t_max + 1e-15
-        # Δ total energy includes the idle-energy change from ΔT
-        e_idle_new = problem.idle.energy_batch(problem.t_max - new_t)
-        d_total = d_e + (e_idle_new - e_idle[act][:, None, None])
-        d_total = np.where(feasible, d_total, np.inf)
-        d_total[np.arange(act.size)[:, None], li, pa] = np.inf  # no-ops
-        flat = d_total.reshape(act.size, -1)
-        best = np.argmin(flat, axis=1)
-        gain = -flat[np.arange(act.size), best]
-        accept = gain > 1e-18
-        active[act[~accept]] = False
-        rows = act[accept]
-        if rows.size == 0:
-            break
-        p[rows, best[accept] // s_pad] = best[accept] % s_pad
-        moves[rows] += 1
-        ev2 = problem.evaluate_paths(p[rows])
-        t_infer[rows] = ev2["t_infer"]
-        e_idle[rows] = ev2["e_idle"]
-        active[rows] = moves[rows] < max_moves
-
-    final = problem.evaluate_paths(p)
-    results = [ScheduleProblem.result_row(final, c) for c in range(n_cand)]
-    return results, [int(m) for m in moves]
+        try:
+            req = gen.send(resp)
+        except StopIteration as stop:
+            return stop.value
+        if req.kind == "eval_batch":
+            resp = problem.evaluate_paths(req.paths)
+        else:
+            if stacked is None:
+                stacked = _as_stacked(problem.padded_arrays())
+            lanes = np.zeros(len(req.paths), dtype=np.int64)
+            resp = move_scores(stacked, lanes, req.paths,
+                               req.aux[0], req.aux[1],
+                               problem.t_max, problem.idle)
 
 
 def refine_path(problem: ScheduleProblem, path: Sequence[int],

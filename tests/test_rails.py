@@ -116,26 +116,49 @@ def test_evenly_spaced_k1_is_vmax():
     assert evenly_spaced_rails(LEVELS, 1) == (LEVELS[-1],)
 
 
-def test_evenly_spaced_k_at_least_len_levels():
+def test_evenly_spaced_k_equals_len_levels_is_identity():
     assert evenly_spaced_rails(LEVELS, len(LEVELS)) == tuple(LEVELS)
-    # k beyond |V| cannot invent levels: still sorted, unique, ⊆ V
-    rails = evenly_spaced_rails(LEVELS, len(LEVELS) + 3)
-    assert set(rails) <= set(LEVELS)
-    assert list(rails) == sorted(set(rails))
-    assert LEVELS[-1] in rails
 
 
-@pytest.mark.parametrize("k", range(1, 12))
+def test_evenly_spaced_k_beyond_levels_raises():
+    # k beyond |distinct V| cannot invent levels: configuration error
+    with pytest.raises(ValueError, match="distinct"):
+        evenly_spaced_rails(LEVELS, len(LEVELS) + 3)
+    with pytest.raises(ValueError, match="at least one"):
+        evenly_spaced_rails(LEVELS, 0)
+
+
+@pytest.mark.parametrize("k", range(1, 10))
 def test_evenly_spaced_invariants(k):
     rails = evenly_spaced_rails(LEVELS, k)
     assert LEVELS[-1] in rails             # V_max always reachable
     assert list(rails) == sorted(rails)    # sorted ...
     assert len(set(rails)) == len(rails)   # ... and duplicate-free
     assert set(rails) <= set(LEVELS)
-    assert 1 <= len(rails) <= min(k, len(LEVELS))
+    assert len(rails) == k                 # exactly k, never fewer
 
 
 def test_evenly_spaced_unsorted_input():
     shuffled = tuple(reversed(LEVELS))
     assert evenly_spaced_rails(shuffled, 3) == \
         evenly_spaced_rails(LEVELS, 3)
+
+
+def test_evenly_spaced_backfills_collapsed_picks():
+    """Duplicate levels used to collapse the linspace picks and return
+    fewer than k rails; the picks are now backfilled with the nearest
+    unused levels so exactly k distinct rails come back."""
+    levels = (1.0, 1.0, 1.0, 1.1, 1.3)     # 3 distinct
+    rails = evenly_spaced_rails(levels, 3)
+    assert rails == (1.0, 1.1, 1.3)
+    with pytest.raises(ValueError, match="distinct"):
+        evenly_spaced_rails(levels, 4)
+
+
+@pytest.mark.parametrize("n_levels,k", [(4, 3), (5, 4), (7, 6), (9, 5)])
+def test_evenly_spaced_always_exactly_k(n_levels, k):
+    levels = tuple(round(0.9 + 0.05 * i, 4) for i in range(n_levels))
+    rails = evenly_spaced_rails(levels, k)
+    assert len(rails) == k
+    assert set(rails) <= set(levels)
+    assert levels[-1] in rails
