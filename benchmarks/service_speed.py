@@ -1,0 +1,201 @@
+"""Wall-clock benchmark of the fleet compile service.
+
+Measures what the process-wide artifact store and the cross-network
+round scheduler buy over per-deployment compilation, on a fixed fleet
+of deployment points (one accelerator, several networks × rates):
+
+  - ``cold_sequential``  — plain per-request ``compile_power_schedule``
+    (fresh context each time): the pre-service baseline;
+  - ``cold_many_unstacked`` — a fresh ``CompileService.compile_many``
+    with cross-network stacking off (store sharing only);
+  - ``cold_many_stacked``   — a fresh ``compile_many`` with all rail
+    sweeps co-scheduled in one round scheduler;
+  - ``warm_solve``  — ``compile_many`` on the now-populated store with
+    the schedule cache cleared: full solves through warm
+    characterization / master / transition / lane-store artifacts;
+  - ``warm_cached`` — repeat traffic: the persistent schedule cache
+    answers every request.
+
+Every variant must emit schedules identical to ``cold_sequential``
+(rails, per-layer voltages, energies) — recorded as ``identical`` in
+the comparison block alongside the speedups.
+
+Usage:
+    PYTHONPATH=src python benchmarks/service_speed.py \
+        [--out BENCH_service.json] [--smoke] [--backend numpy|jax] \
+        [--reps N]
+
+``--smoke`` runs a two-request fleet (n_max_rails=2) as a CI guard:
+schedules must be feasible and identical across all variants; no
+timing is asserted.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+try:
+    from benchmarks.common import max_rate, timed
+except ImportError:  # direct script run: benchmarks/ is sys.path[0]
+    from common import max_rate, timed
+
+from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.models.edge_cnn import edge_network
+from repro.service import CompileRequest, CompileService
+
+HERE = pathlib.Path(__file__).parent
+
+# (network, fraction of max rate, n_max_rails) — ≥3 deployment points on
+# one accelerator, mixing distinct networks with shared-content repeats
+# at other rates (the fleet shape the store amortizes across)
+FLEET = [
+    ("squeezenet1.1", 0.90, 3),
+    ("mobilenetv3-small", 0.85, 3),
+    ("squeezenet1.1", 0.50, 3),
+]
+SMOKE_FLEET = [
+    ("squeezenet1.1", 0.90, 2),
+    ("mobilenetv3-small", 0.85, 2),
+]
+POLICY = "pfdnn"
+
+
+def build_requests(fleet, backend: str | None) -> list[CompileRequest]:
+    reqs = []
+    for network, frac, n_rails in fleet:
+        reqs.append(CompileRequest(
+            edge_network(network), max_rate(network) * frac,
+            OrchestratorConfig(policy=POLICY, n_max_rails=n_rails,
+                               backend=backend),
+            network=f"{network}|{frac}"))
+    return reqs
+
+
+def same_schedules(a, b) -> bool:
+    if len(a) != len(b):
+        return False
+    for x, y in zip(a, b):
+        if (x is None) != (y is None):
+            return False
+        if x is not None and (
+                x.rails != y.rails
+                or x.layer_voltages != y.layer_voltages
+                or x.e_total != y.e_total
+                or x.t_infer != y.t_infer):
+            return False
+    return True
+
+
+def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
+    results: dict = {"fleet": [f"{n}|{f}|r{k}" for n, f, k in fleet],
+                     "policy": POLICY, "reps": reps}
+
+    def best_of(fn, n=reps):
+        walls, out = [], None
+        for _ in range(n):
+            out, wall = timed(fn)
+            walls.append(wall)
+        return out, min(walls), walls
+
+    def cold_sequential():
+        reqs = build_requests(fleet, backend)
+        return [compile_power_schedule(
+            r.specs, r.target_rate_hz, cfg=r.cfg, network=r.network)
+            for r in reqs]
+
+    ref, wall, walls = best_of(cold_sequential)
+    results["cold_sequential"] = {"wall_s": wall, "wall_all_s": walls}
+
+    def cold_many(stack: bool):
+        def inner():
+            svc = CompileService()              # fresh store: cold
+            return svc.compile_many(build_requests(fleet, backend),
+                                    stack_networks=stack)
+        return inner
+
+    out_u, wall, walls = best_of(cold_many(False))
+    results["cold_many_unstacked"] = {"wall_s": wall,
+                                      "wall_all_s": walls,
+                                      "identical": same_schedules(out_u,
+                                                                  ref)}
+    out_s, wall, walls = best_of(cold_many(True))
+    results["cold_many_stacked"] = {"wall_s": wall, "wall_all_s": walls,
+                                    "identical": same_schedules(out_s,
+                                                                ref)}
+
+    # one persistent service: populate, then measure the warm regimes
+    svc = CompileService()
+    svc.compile_many(build_requests(fleet, backend))
+
+    def warm_solve():
+        svc.store.clear(schedules=True, stacks=False, tables=False)
+        return svc.compile_many(build_requests(fleet, backend))
+
+    out_w, wall, walls = best_of(warm_solve)
+    results["warm_solve"] = {"wall_s": wall, "wall_all_s": walls,
+                             "identical": same_schedules(out_w, ref)}
+
+    svc.compile_many(build_requests(fleet, backend))   # refill the cache
+
+    def warm_cached():
+        return svc.compile_many(build_requests(fleet, backend))
+
+    out_c, wall, walls = best_of(warm_cached)
+    results["warm_cached"] = {"wall_s": wall, "wall_all_s": walls,
+                              "identical": same_schedules(out_c, ref)}
+    results["store_stats"] = svc.store.stats()
+
+    base = results["cold_sequential"]["wall_s"]
+    results["comparison"] = {
+        "speedup_cold_many_stacked": base
+        / results["cold_many_stacked"]["wall_s"],
+        "speedup_cold_many_unstacked": base
+        / results["cold_many_unstacked"]["wall_s"],
+        "speedup_warm_solve": base / results["warm_solve"]["wall_s"],
+        "speedup_warm_cached": base / results["warm_cached"]["wall_s"],
+        "stacked_vs_unstacked": results["cold_many_unstacked"]["wall_s"]
+        / results["cold_many_stacked"]["wall_s"],
+        "identical": all(results[k]["identical"] for k in (
+            "cold_many_unstacked", "cold_many_stacked", "warm_solve",
+            "warm_cached")),
+    }
+    for key, val in results["comparison"].items():
+        print(f"{key}: {val if isinstance(val, bool) else f'{val:.2f}x'}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out",
+                    default=str(HERE.parent / "BENCH_service.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="two-request fleet; assert identical feasible "
+                         "schedules across all variants and exit")
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="solver array backend (default: $PFDNN_BACKEND "
+                         "or numpy)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="best-of-N walls per variant")
+    args = ap.parse_args()
+
+    tic = time.perf_counter()
+    fleet = SMOKE_FLEET if args.smoke else FLEET
+    results = run_fleet(fleet, backend=args.backend,
+                        reps=1 if args.smoke else args.reps)
+    if args.smoke:
+        assert results["comparison"]["identical"], \
+            "service variants emitted different schedules"
+        assert results["store_stats"]["schedules"] >= len(fleet), \
+            "schedule cache did not populate"
+        print(f"service smoke OK ({time.perf_counter() - tic:.1f}s)")
+        return
+    results["backend"] = args.backend or "default"
+    pathlib.Path(args.out).write_text(json.dumps(results, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,12 @@ Public API:
   - compile_power_schedule / PowerSchedule   — §3.3 compiler driver
 """
 
-from repro.core.backend import available_backends, get_backend
+from repro.core.backend import (
+    BucketStack,
+    StackCaches,
+    available_backends,
+    get_backend,
+)
 from repro.core.context import CompilationContext
 from repro.core.edge_builder import build_edge_problem, build_idle_model
 from repro.core.greedy import min_energy_path, solve_greedy
@@ -43,8 +48,10 @@ from repro.core.orchestrator import (
 from repro.core.problem import IdleModel, ScheduleProblem, StateCost
 from repro.core.pruning import prune_problem, unprune_path
 from repro.core.rails import (
+    StackedSweep,
     all_rail_subsets,
     evenly_spaced_rails,
+    run_stacked_sweeps,
     select_rails,
     select_rails_stacked,
 )
@@ -70,6 +77,8 @@ __all__ = [
     "min_time_path",
     "SolverStats", "StackedLambdaTask",
     "get_backend", "available_backends",
+    "BucketStack", "StackCaches",
+    "StackedSweep", "run_stacked_sweeps",
     "refine_candidates", "refine_path",
     "prune_problem", "unprune_path",
     "solve_ilp", "IlpBlowupError",

@@ -26,6 +26,7 @@ problem the monolithic builder would have produced.
 
 from __future__ import annotations
 
+import hashlib
 import threading
 from typing import Sequence
 
@@ -47,22 +48,60 @@ from repro.perfmodel.gating import plan_banks
 from repro.perfmodel.layer_costs import LayerSpec, characterize_network
 
 
+def _digest(*parts: str) -> str:
+    """Deterministic short content digest of string parts (frozen
+    dataclass reprs round-trip floats exactly, so equal content always
+    yields equal keys across processes)."""
+    h = hashlib.blake2b(digest_size=16)
+    for part in parts:
+        h.update(part.encode())
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
 class CompilationContext:
     """Per-compile shared state: characterization, bank plan, master
-    state tables, and the content-keyed transition cache."""
+    state tables, and the content-keyed transition cache.
+
+    With an injected ``store`` (the fleet service's
+    :class:`~repro.service.ArtifactStore`, or any object with the same
+    ``characterization`` / ``transition`` / ``master`` /
+    ``put_master`` methods), everything content-addressable is read
+    from — and published to — the process-wide store instead of being
+    rebuilt per compile: layer characterization + bank plan, the master
+    per-layer state tables, and the pairwise transition matrices.  A
+    second context for the same network content (at *any* target rate —
+    none of these depend on the deadline) warm-starts in microseconds.
+    """
 
     def __init__(self, specs: Sequence[LayerSpec], target_rate_hz: float,
                  *, acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
                  network: str = "net",
-                 e_switch_nom: float | None = None):
+                 e_switch_nom: float | None = None,
+                 store=None):
         self.specs = list(specs)
         self.acc = acc
         self.network = network
+        self.store = store
         self.t_max = 1.0 / target_rate_hz
-        self.costs = characterize_network(self.specs, acc)
-        self.plan = plan_banks(self.costs, acc)
         self.levels: tuple[float, ...] = acc.levels()
         self.transition_model = acc.transitions(e_switch_nom)
+        # content keys (deterministic digests of frozen-dataclass reprs):
+        # specs_acc_key addresses everything derived from (specs, acc) —
+        # characterization and master tables; content_key additionally
+        # folds in the transition model (e_switch_nom) and addresses
+        # transition-dependent artifacts — subset lane stores and the
+        # service's schedule cache
+        self.specs_acc_key = _digest(repr(tuple(self.specs)), repr(acc))
+        self.content_key = _digest(self.specs_acc_key,
+                                   repr(self.transition_model))
+        self._tm_key = repr(self.transition_model)
+        if store is not None:
+            self.costs, self.plan = store.characterization(
+                self.specs, acc, key=self.specs_acc_key)
+        else:
+            self.costs = characterize_network(self.specs, acc)
+            self.plan = plan_banks(self.costs, acc)
         # gating flag -> per-layer master StateCost lists / voltage tables
         self._master: dict[bool, list[list[StateCost]]] = {}
         self._master_volts: dict[bool, list[np.ndarray]] = {}
@@ -94,18 +133,37 @@ class CompilationContext:
     def _master_arrays(self, gating: bool) -> None:
         """Build the per-layer master voltage/t/e arrays once per gating
         flag (vectorized — no per-state Python objects; every rail
-        subset is an index slice of these arrays)."""
+        subset is an index slice of these arrays).
+
+        Thread-safety under the shared store: the whole check-fetch-
+        build-publish sequence runs under this context's master lock, so
+        within one context the four dicts become visible together.
+        Across contexts the store's record is immutable once published
+        (readers only ever slice the arrays); two contexts racing on a
+        cold store both build and publish identical content — wasted
+        work, never a torn read."""
         with self._master_lock:
             if gating in self._master_volts:
                 return
-            cols = [layer_state_arrays(c, i, self.acc, self.plan,
-                                       self.levels, gating=gating)
-                    for i, c in enumerate(self.costs)]
-            self._master_t_op[gating] = [t for _, t, _ in cols]
-            self._master_e_op[gating] = [e for _, _, e in cols]
-            self._master_vkey[gating] = [v.tobytes() for v, _, _ in cols]
+            rec = None
+            mkey = (self.specs_acc_key, gating)
+            if self.store is not None:
+                rec = self.store.master(mkey)
+            if rec is None:
+                cols = [layer_state_arrays(c, i, self.acc, self.plan,
+                                           self.levels, gating=gating)
+                        for i, c in enumerate(self.costs)]
+                rec = {"volts": [v for v, _, _ in cols],
+                       "t_op": [t for _, t, _ in cols],
+                       "e_op": [e for _, _, e in cols],
+                       "vkey": [v.tobytes() for v, _, _ in cols]}
+                if self.store is not None:
+                    self.store.put_master(mkey, rec)
+            self._master_t_op[gating] = rec["t_op"]
+            self._master_e_op[gating] = rec["e_op"]
+            self._master_vkey[gating] = rec["vkey"]
             # set last: readers key "is the master built?" off this
-            self._master_volts[gating] = [v for v, _, _ in cols]
+            self._master_volts[gating] = rec["volts"]
 
     def master_states(self, gating: bool) -> list[list[StateCost]]:
         """Per-layer master :class:`StateCost` lists — the record view
@@ -148,10 +206,19 @@ class CompilationContext:
                           va: np.ndarray, vb: np.ndarray
                           ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         key = (ka, kb)
-        if key not in self._trans_cache:
-            self._trans_cache[key] = _pairwise_transition(
-                self.transition_model, va, vb)
-        return self._trans_cache[key]
+        hit = self._trans_cache.get(key)
+        if hit is None:
+            if self.store is not None:
+                # shared content-keyed cache (the store's key adds the
+                # transition-model content, so different accelerators /
+                # e_switch_nom never alias)
+                hit = self.store.transition(self._tm_key, ka, kb,
+                                            self.transition_model,
+                                            va, vb)
+            else:
+                hit = _pairwise_transition(self.transition_model, va, vb)
+            self._trans_cache[key] = hit
+        return hit
 
     # -- per-subset problem views -------------------------------------
     def problem_for(self, rails: Sequence[float], *, gating: bool,

@@ -649,8 +649,10 @@ class StackedLambdaTask:
                  problem: ScheduleProblem, *, k_candidates: int = 10,
                  bisect_iters: int = 48, bisect_rel_tol: float = 0.0,
                  collect_idle_branches: bool = True,
-                 lam_hint: float | None = None):
-        from repro.core.backend import bucket_key
+                 lam_hint: float | None = None,
+                 lane_key=None, sig_prefix: tuple = (),
+                 caches=None):
+        from repro.core.backend import bucket_key, pad_bucket
 
         self.idx = idx
         self.rails = rails
@@ -659,6 +661,24 @@ class StackedLambdaTask:
         self.stats = SolverStats()
         self.stats.states_explored = problem.n_states()
         self.stats.edges_explored = problem.n_edges()
+        # lane provenance for the round scheduler: a content-derived
+        # lane key lets a persistent (store-owned) BucketStack recognize
+        # this subset's padded tensors across compiles — both skipping
+        # the admission copy and, here, skipping build_padded entirely
+        # by reading the resident lane back as a zero-copy view.  The
+        # bucket signature is ``sig_prefix + (n_layers, s_pad)`` (the
+        # fleet service prefixes the accelerator's voltage levels).
+        self.lane_key = lane_key
+        self.bucket_sig = sig_prefix + (
+            problem.n_layers, pad_bucket(max(problem.sizes)))
+        self.uid: int | None = None      # assigned by run_stacked_sweeps
+        if caches is not None and lane_key is not None \
+                and problem._padded is None:
+            bs = caches.buckets.get(self.bucket_sig)
+            if bs is not None:
+                warm = bs.padded(lane_key)
+                if warm is not None:
+                    problem._padded = warm
         self.padded = problem.padded_arrays()
         self.bucket = bucket_key(self.padded)
         self.seen: dict[tuple, dict] = {}

@@ -50,16 +50,71 @@ def compile_power_schedule(
     *,
     cfg: OrchestratorConfig | None = None,
     acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
-    network: str = "net",
+    network: str | None = None,
+    ctx: CompilationContext | None = None,
+    store=None,
 ) -> PowerSchedule | None:
     """Compile a deployment power schedule (once per deployment, §3.3).
 
     Returns None when the deadline 1/rate is infeasible even at V_max
     (beyond the model's maximum feasible inference rate).
+
+    ``ctx`` reuses a prebuilt :class:`CompilationContext` across
+    policies of the same deployment point (characterization, bank plan,
+    master tables, and transition caches are shared instead of being
+    silently rebuilt per call); it must describe the same network,
+    rate, accelerator, and transition energy — mismatches raise
+    ``ValueError``.  ``store`` plugs a process-wide artifact store
+    (:class:`repro.service.ArtifactStore`) into a freshly built
+    context, warm-starting it from — and publishing it to — the
+    content-addressed process caches.
     """
     cfg = cfg or OrchestratorConfig()
     policy = get_policy(cfg.policy)
-    ctx = CompilationContext(
-        specs, target_rate_hz, acc=acc, network=network,
-        e_switch_nom=cfg.e_switch_nom)
+    if ctx is None:
+        ctx = CompilationContext(
+            specs, target_rate_hz, acc=acc,
+            network=network if network is not None else "net",
+            e_switch_nom=cfg.e_switch_nom, store=store)
+    else:
+        _check_reused_context(ctx, specs, target_rate_hz, acc, cfg,
+                              network=network, store=store)
     return policy(ctx, cfg)
+
+
+def _check_reused_context(ctx: CompilationContext,
+                          specs: Sequence[LayerSpec],
+                          target_rate_hz: float,
+                          acc: Edge40nmAccelerator,
+                          cfg: OrchestratorConfig, *,
+                          network: str | None, store) -> None:
+    """A reused context must match the compile request exactly — a
+    silently mismatched context would emit a schedule for the wrong
+    network, deadline, or transition energies (or bypass the caller's
+    artifact store)."""
+    if network is not None and network != ctx.network:
+        raise ValueError(
+            f"ctx= was built for network label {ctx.network!r} but the "
+            f"request names {network!r}; the emitted schedule's label "
+            "comes from the context — build a new CompilationContext "
+            "(or drop the network= argument)")
+    if store is not None and store is not ctx.store:
+        raise ValueError(
+            "ctx= carries its own artifact store; passing a different "
+            "store= alongside it would be silently ignored — build the "
+            "context with that store instead")
+    if list(specs) != ctx.specs:
+        raise ValueError(
+            "ctx= was built for a different network (layer specs "
+            "differ); build a new CompilationContext")
+    if ctx.t_max != 1.0 / target_rate_hz:
+        raise ValueError(
+            f"ctx= was built for deadline {ctx.t_max} s but the request "
+            f"asks for {1.0 / target_rate_hz} s; build a new "
+            "CompilationContext")
+    if acc != ctx.acc:
+        raise ValueError("ctx= was built for a different accelerator")
+    if ctx.transition_model != acc.transitions(cfg.e_switch_nom):
+        raise ValueError(
+            "ctx= was built with a different e_switch_nom than cfg "
+            "requests; build a new CompilationContext")

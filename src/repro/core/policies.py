@@ -42,10 +42,11 @@ from repro.core.lambda_dp import StackedLambdaTask, solve_lambda_dp
 from repro.core.problem import ScheduleProblem
 from repro.core.pruning import prune_problem, unprune_path
 from repro.core.rails import (
+    StackedSweep,
     all_rail_subsets,
     evenly_spaced_rails,
+    run_stacked_sweeps,
     select_rails,
-    select_rails_stacked,
 )
 from repro.core.refinement import refine_candidates, refine_rounds
 from repro.core.schedule import PowerSchedule
@@ -257,7 +258,8 @@ class _PfdnnStackedTask(StackedLambdaTask):
     def __init__(self, idx: int, rails: tuple[float, ...],
                  problem: ScheduleProblem, cfg: OrchestratorConfig,
                  agg: dict, problems: dict,
-                 lam_hint: float | None = None):
+                 lam_hint: float | None = None,
+                 lane_key=None, sig_prefix: tuple = (), caches=None):
         self._orig = problem
         self._cfg = cfg
         self._agg = agg
@@ -272,7 +274,8 @@ class _PfdnnStackedTask(StackedLambdaTask):
         super().__init__(
             idx, rails, target, k_candidates=cfg.k_candidates,
             bisect_rel_tol=cfg.bisect_rel_tol if cfg.warm_start else 0.0,
-            lam_hint=lam_hint)
+            lam_hint=lam_hint, lane_key=lane_key, sig_prefix=sig_prefix,
+            caches=caches)
         self.stats.backend = get_backend(cfg.backend).name
 
     def _post_machine(self):
@@ -314,10 +317,131 @@ class _PfdnnStackedTask(StackedLambdaTask):
         return best
 
 
+class StackedSweepJob:
+    """One network's pfdnn-family rail sweep, prepared for the round
+    scheduler but not yet run — the unit the fleet compile service
+    co-schedules across networks.
+
+    ``job.sweep`` is the :class:`~repro.core.rails.StackedSweep` to hand
+    to :func:`~repro.core.rails.run_stacked_sweeps` (alone, or together
+    with other networks' jobs for cross-network bucket stacking);
+    ``job.emit(fleet_stats)`` afterwards binds the sweep's selection to
+    the deployable :class:`~repro.core.schedule.PowerSchedule`.  Tasks
+    carry content-derived lane keys (network content × rails × pruning),
+    so a persistent store-owned cache recognizes resident subset lanes
+    across compiles.
+    """
+
+    def __init__(self, policy: str, ctx: CompilationContext,
+                 cfg: OrchestratorConfig, *, prune: bool = True,
+                 caches=None):
+        self.policy = policy
+        self.ctx = ctx
+        self.cfg = cfg
+        self._tic = time.perf_counter()
+        cfg_local = dataclasses.replace(cfg, prune=(cfg.prune and prune))
+        self.problems: dict[tuple, ScheduleProblem] = {}
+        self.agg = {"dp_calls": 0, "dp_lambdas": 0,
+                    "candidates_evaluated": 0, "lambda_iterations": 0,
+                    "refinement_moves": 0}
+        subsets = all_rail_subsets(ctx.levels, cfg.n_max_rails)
+        bound_fn = (lambda rails: ctx.min_e_op_bound(rails, gating=True)) \
+            if cfg.warm_start else None
+        # lane content is fully determined by (network content, rails,
+        # gating/sleep flags, pruning); bucket stores partition by the
+        # accelerator's level set so same-accelerator networks stack
+        lane_base = (ctx.content_key, True, True, bool(cfg_local.prune))
+        sig_prefix = (ctx.levels,)
+
+        def make_task(idx: int, rails: tuple[float, ...],
+                      hint: dict | None = None) -> _PfdnnStackedTask:
+            problem = ctx.problem_for(rails, gating=True,
+                                      allow_sleep=True,
+                                      materialize_states=False)
+            lam_hint = (hint or {}).get("lam_hint") \
+                if cfg.warm_start else None
+            return _PfdnnStackedTask(idx, rails, problem, cfg_local,
+                                     self.agg, self.problems,
+                                     lam_hint=lam_hint,
+                                     lane_key=lane_base + (rails,),
+                                     sig_prefix=sig_prefix,
+                                     caches=caches)
+
+        self.sweep = StackedSweep(subsets, make_task, bound_fn=bound_fn,
+                                  max_live=stack_max_live(cfg),
+                                  name=ctx.network)
+
+    def start_clock(self) -> None:
+        """Restart the wall-time clock.  ``compile_many`` builds every
+        job up front but runs one fleet per backend; calling this right
+        before a job's fleet starts keeps its reported ``wall_time_s``
+        from absorbing other fleets' solves.  (Within one fleet the
+        wall still spans the whole co-scheduled run — per-network
+        attribution is meaningless when rounds interleave.)"""
+        self._tic = time.perf_counter()
+
+    def emit(self, fleet: dict) -> PowerSchedule | None:
+        """Bind the finished sweep's selection to the schedule artifact
+        (None when every subset was deadline-infeasible)."""
+        best, best_rails = self.sweep.selection()
+        if best is None or best_rails is None:
+            return None
+        sel_stats = dict(self.sweep.stats)
+        sel_stats["stacked_rounds"] = fleet["stacked_rounds"]
+        sel_stats["stacked_calls"] = fleet["stacked_calls"]
+        if fleet.get("networks", 1) > 1:
+            sel_stats["fleet_networks"] = fleet["networks"]
+        sel_stats.update(self.agg)
+        sel_stats["backend"] = get_backend(self.cfg.backend).name
+        sel_stats["wall_time_s"] = time.perf_counter() - self._tic
+        return emit_schedule(self.policy, self.ctx,
+                             self.problems[best_rails], best, sel_stats,
+                             gating=True)
+
+
+# pfdnn-family policies whose rail sweep the round scheduler can stack
+# (policy name -> prune flag); the evenly-spaced ablation solves only
+# n_max subsets, so there is nothing to stack
+_STACKABLE_SWEEPS = {"pfdnn": True, "pfdnn_nopp": False}
+
+
+def stacked_compile_job(ctx: CompilationContext, cfg: OrchestratorConfig,
+                        *, caches=None) -> StackedSweepJob | None:
+    """Build the :class:`StackedSweepJob` for ``cfg`` when its policy
+    and solver options route to the subset-stacked engine, else None
+    (legacy scalar bisection, explicit thread fan-out, stacking
+    disabled, or a non-sweep policy).  The fleet service uses this to
+    co-schedule many networks' sweeps in one round scheduler."""
+    workers = sweep_workers(cfg)
+    if not (cfg.stack_subsets and cfg.batch_lambda
+            and (workers is None or workers <= 1)):
+        return None
+    prune = _STACKABLE_SWEEPS.get(cfg.policy)
+    if prune is None:
+        return None
+    return StackedSweepJob(cfg.policy, ctx, cfg, prune=prune,
+                           caches=caches)
+
+
 def _solve_sweep(policy: str, ctx: CompilationContext,
                  cfg: OrchestratorConfig, *, even: bool,
                  prune: bool) -> PowerSchedule | None:
     tic = time.perf_counter()
+    # the stacked engine IS the batched multi-λ machine, so an explicit
+    # batch_lambda=False (legacy scalar bisection) must route to the
+    # per-subset loop that honors it
+    if not even:
+        caches = ctx.store.stack_caches if ctx.store is not None else None
+        job = stacked_compile_job(
+            ctx, cfg if cfg.policy == policy
+            else dataclasses.replace(cfg, policy=policy), caches=caches)
+        if job is not None:
+            # subset-stacked engine: whole same-bucket buckets of live
+            # subsets advance one λ-search round per stacked backend call
+            fleet = run_stacked_sweeps([job.sweep], backend=cfg.backend,
+                                       caches=caches)
+            return job.emit(fleet)
+
     cfg_local = dataclasses.replace(cfg, prune=(cfg.prune and prune))
     problems: dict[tuple, ScheduleProblem] = {}
     agg = {"dp_calls": 0, "dp_lambdas": 0, "candidates_evaluated": 0,
@@ -354,34 +478,13 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
     bound_fn = (lambda rails: ctx.min_e_op_bound(rails, gating=True)) \
         if (cfg.warm_start and not even) else None
     workers = sweep_workers(cfg) if not even else None
-    # the stacked engine IS the batched multi-λ machine, so an explicit
-    # batch_lambda=False (legacy scalar bisection) must route to the
-    # per-subset loop that honors it
-    if cfg.stack_subsets and cfg.batch_lambda and not even and \
-            (workers is None or workers <= 1):
-        # subset-stacked engine: whole same-bucket buckets of live
-        # subsets advance one λ-search round per stacked backend call
-        def make_task(idx: int, rails: tuple[float, ...],
-                      hint: dict | None = None) -> _PfdnnStackedTask:
-            problem = ctx.problem_for(rails, gating=True,
-                                      allow_sleep=True,
-                                      materialize_states=False)
-            lam_hint = (hint or {}).get("lam_hint") \
-                if cfg.warm_start else None
-            return _PfdnnStackedTask(idx, rails, problem, cfg_local,
-                                     agg, problems, lam_hint=lam_hint)
-
-        best, best_rails, sel_stats = select_rails_stacked(
-            subsets, make_task, bound_fn=bound_fn,
-            backend=cfg.backend, max_live=stack_max_live(cfg))
-    else:
-        if workers is not None and workers > 1:
-            # build the shared master arrays before fanning out (cheaper
-            # than workers piling up on the context lock)
-            ctx._master_arrays(True)
-        best, best_rails, sel_stats = select_rails(
-            ctx.levels, cfg.n_max_rails, solve_subset, subsets=subsets,
-            bound_fn=bound_fn, workers=workers)
+    if workers is not None and workers > 1:
+        # build the shared master arrays before fanning out (cheaper
+        # than workers piling up on the context lock)
+        ctx._master_arrays(True)
+    best, best_rails, sel_stats = select_rails(
+        ctx.levels, cfg.n_max_rails, solve_subset, subsets=subsets,
+        bound_fn=bound_fn, workers=workers)
     if best is None or best_rails is None:
         return None
     sel_stats.update(agg)

@@ -15,74 +15,8 @@ from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
-from repro.core.backend import StackedArrays, get_backend, stack_padded
+from repro.core.backend import StackCaches, get_backend
 from repro.core.refinement import move_scores
-
-
-class _BucketStack:
-    """Persistent lane store of one padded bucket: every task admitted
-    to the bucket copies its padded tensors in ONCE; gather-based
-    stacked calls (path cost evaluation, refinement move scoring) then
-    read zero-copy views with global lane indices instead of restacking
-    members every round."""
-
-    def __init__(self, n_layers: int, s_pad: int):
-        self.n = 0
-        self._cap = 8
-        self.slot: dict[int, int] = {}
-        L, S = n_layers, s_pad
-        self._t_op = np.zeros((self._cap, L, S))
-        self._e_op = np.zeros((self._cap, L, S))
-        self._valid = np.zeros((self._cap, L, S), dtype=bool)
-        self._t_trans = np.zeros((self._cap, max(L - 1, 0), S, S))
-        self._e_trans = np.zeros((self._cap, max(L - 1, 0), S, S))
-        self._switch = np.zeros((self._cap, max(L - 1, 0), S, S),
-                                dtype=np.int64)
-        self._sizes = np.zeros((self._cap, L), dtype=np.int64)
-        self._view: StackedArrays | None = None
-
-    def _grow(self) -> None:
-        self._cap *= 2
-        for name in ("_t_op", "_e_op", "_valid", "_t_trans",
-                     "_e_trans", "_switch", "_sizes"):
-            old = getattr(self, name)
-            new = np.zeros((self._cap,) + old.shape[1:], dtype=old.dtype)
-            new[:old.shape[0]] = old
-            setattr(self, name, new)
-
-    def add(self, task) -> int:
-        if task.idx in self.slot:
-            return self.slot[task.idx]
-        if self.n == self._cap:
-            self._grow()
-        p = task.padded
-        b = self.n
-        self._t_op[b] = p.t_op
-        self._e_op[b] = p.e_op
-        self._valid[b] = p.valid
-        self._t_trans[b] = p.t_trans
-        self._e_trans[b] = p.e_trans
-        self._switch[b] = p.switch
-        self._sizes[b] = p.sizes
-        self.slot[task.idx] = b
-        self.n += 1
-        self._view = None
-        return b
-
-    def view(self) -> StackedArrays:
-        if self._view is None:
-            n = self.n
-            self._view = StackedArrays(
-                t_op=self._t_op[:n], e_op=self._e_op[:n],
-                valid=self._valid[:n], t_trans=self._t_trans[:n],
-                e_trans=self._e_trans[:n], switch=self._switch[:n],
-                max_sizes=tuple(int(m)
-                                for m in self._sizes[:n].max(axis=0)))
-        return self._view
-
-    def lanes(self, tasks) -> np.ndarray:
-        return np.array([self.slot[t.idx] for t in tasks],
-                        dtype=np.int64)
 
 
 def all_rail_subsets(levels: Sequence[float],
@@ -336,6 +270,327 @@ _DEFAULT_MAX_LIVE = 16
 # skip provably non-winning work).
 _BOOTSTRAP_LIVE = 4
 
+# run-unique task uids: member-stack cache keys and anonymous lane keys
+# must never collide across sweeps sharing one (store-owned) StackCaches
+_TASK_UIDS = itertools.count()
+
+
+class StackedSweep:
+    """One network's rail-subset sweep state for the round scheduler.
+
+    Holds the enumeration-ordered admission queue, the sequential
+    sweep's ceiling/bound cuts, the lexicographic
+    ``(e_total, enumeration index)`` incumbent, the per-sweep λ*-hint,
+    and the live task list.  :func:`run_stacked_sweeps` drives any
+    number of these in lock-step rounds; each sweep's admission order,
+    cuts, and hints depend only on its *own* results, so its selection
+    is identical whether it runs alone or co-scheduled with other
+    networks' sweeps (cross-network co-scheduling only changes how
+    kernel calls are grouped, and per-lane stacked kernel results are
+    bit-identical to solo calls — see :mod:`repro.core.backend`).
+    """
+
+    def __init__(self, subsets: Iterable[tuple[float, ...]],
+                 make_task: Callable[..., object], *,
+                 bound_fn: Callable[[tuple[float, ...]], float] | None
+                 = None,
+                 max_live: int | None = None,
+                 name: str = "net"):
+        self.make_task = make_task
+        self.bound_fn = bound_fn
+        self.name = name
+        self.subset_list = list(subsets)
+        # same enumeration order as select_rails: high-voltage subsets
+        # first, so the infeasibility ceiling is established early
+        self.subset_list.sort(key=lambda s: -max(s))
+        if max_live is None:
+            max_live = _DEFAULT_MAX_LIVE
+        self.max_live = max(1, int(max_live))
+        self.pending = deque(enumerate(self.subset_list))
+        self.active: list = []
+        self.state = {"ceiling": -np.inf, "incumbent": np.inf,
+                      "incumbent_idx": -1, "lam_hint": None}
+        self.results: dict[int, dict] = {}
+        self.stats = {"subsets_total": 0, "subsets_solved": 0,
+                      "subsets_skipped": 0, "subsets_cut": 0,
+                      "workers": 1, "stack_max_live": self.max_live}
+
+    def admit(self) -> list:
+        """Admit pending subsets up to the live cap (with the
+        sequential sweep's ceiling/bound cuts and the cold bootstrap
+        wave); returns the newly created tasks."""
+        state, stats = self.state, self.stats
+        out: list = []
+        while self.pending and len(self.active) < self.max_live:
+            if state["lam_hint"] is None and \
+                    len(self.active) >= min(_BOOTSTRAP_LIVE,
+                                            self.max_live):
+                break                       # cold bootstrap wave is full
+            idx, subset = self.pending.popleft()
+            stats["subsets_total"] += 1
+            if max(subset) <= state["ceiling"]:
+                stats["subsets_skipped"] += 1
+                continue
+            if self.bound_fn is not None and \
+                    np.isfinite(state["incumbent"]):
+                bound = self.bound_fn(subset)
+                if state["incumbent"] < bound or (
+                        state["incumbent"] == bound
+                        and state["incumbent_idx"] < idx):
+                    stats["subsets_cut"] += 1
+                    continue
+            task = self.make_task(idx, subset,
+                                  {"lam_hint": state["lam_hint"]})
+            task.start()
+            self.active.append(task)
+            out.append(task)
+        return out
+
+    def finish(self, task) -> None:
+        state, stats = self.state, self.stats
+        stats["subsets_solved"] += 1
+        result = task.finalize()
+        if result is None:
+            state["ceiling"] = max(state["ceiling"], max(task.rails))
+            return
+        self.results[task.idx] = result
+        if result.get("lambda_star"):
+            state["lam_hint"] = result["lambda_star"]
+        e = result["e_total"]
+        if (e, task.idx) < (state["incumbent"], state["incumbent_idx"]):
+            state["incumbent"] = e
+            state["incumbent_idx"] = task.idx
+
+    def selection(self) -> tuple[dict | None, tuple[float, ...] | None]:
+        """Lexicographic ``(e_total, enumeration order)`` minimum over
+        all solved subsets — exactly the sequential sweep's pick."""
+        best: dict | None = None
+        best_subset: tuple[float, ...] | None = None
+        for idx in sorted(self.results):
+            result = self.results[idx]
+            if best is None or result["e_total"] < best["e_total"]:
+                best = result
+                best_subset = self.subset_list[idx]
+        return best, best_subset
+
+
+def _register_task(task, caches: StackCaches) -> None:
+    """Driver-side task registration: assign the run-unique uid, default
+    the lane key / bucket signature, and admit the padded tensors into
+    the bucket's persistent lane store (a no-op when a previous compile
+    already holds this lane content).  The resolved store and lane index
+    are pinned on the task so the round loop never repeats the lookups
+    (both are stable for the task's lifetime — lanes are append-only
+    and store resets are forbidden while sweeps are in flight)."""
+    task.uid = next(_TASK_UIDS)
+    if getattr(task, "bucket_sig", None) is None:
+        task.bucket_sig = task.bucket
+    if getattr(task, "lane_key", None) is None:
+        task.lane_key = ("uid", task.uid)
+    bs = caches.bucket(task.bucket_sig, *task.bucket)
+    task.lane_store = bs
+    task.lane = bs.add(task.lane_key, task.padded)
+
+
+def run_stacked_sweeps(
+    sweeps: Sequence[StackedSweep],
+    *,
+    backend=None,
+    caches: StackCaches | None = None,
+) -> dict:
+    """Round-based subset-stacked scheduler over one or more sweeps:
+    solve whole rail-subset buckets — possibly spanning *different
+    networks* — in single backend DP passes.
+
+    Every live task of every sweep advances one λ-search round per
+    iteration:
+
+      1. **kernel phase** — tasks whose pending requests share a
+         ``(kind, padded bucket, batch shape)`` are stacked along a new
+         leading lane axis and solved in ONE backend call
+         (``dp_multi_stacked`` / ``kbest_multi_stacked``), regardless
+         of which sweep (network) they belong to;
+      2. **evaluation phase** — the fresh candidate paths of every task
+         in a bucket are concatenated and costed with one stacked
+         gather (``path_costs_stacked``); the deadline/idle finishing
+         math then runs per ``(t_max, idle)`` subgroup, so networks
+         with different deadlines share the gather but keep their own
+         row semantics;
+      3. **bookkeeping phase** — finished tasks are finalized into
+         their sweep (ceiling / incumbent / λ*-hint updates), and each
+         sweep admits new subsets from its enumeration-ordered queue
+         with exactly the sequential sweep's cuts.
+
+    Selection is provably identical to running each sweep alone (and
+    therefore to :func:`select_rails` per network): per-lane stacked
+    kernel results are bit-identical to the non-stacked calls (see
+    :mod:`repro.core.backend`), each task's round sequence depends only
+    on its own responses, and each sweep's cuts/hints read only its own
+    state — co-scheduling changes call grouping, never results.  Round
+    concurrency can only make a sweep's cuts *weaker* (more subsets
+    solved), exactly like the thread-pool sweep — minus the threads.
+
+    ``caches`` carries the persistent per-bucket lane stores and the
+    round member-stack cache; passing a store-owned
+    :class:`~repro.core.backend.StackCaches` lets later compilations
+    reuse resident lane content (content-keyed, see
+    :class:`~repro.core.backend.BucketStack`).  Returns the fleet-level
+    stats dict (rounds, stacked calls, lane-store hits).
+    """
+    bk = get_backend(backend)
+    if caches is None:
+        caches = StackCaches()
+    fleet = {"stacked_rounds": 0, "stacked_calls": 0,
+             "networks": len(sweeps)}
+    # uids of tasks admitted but not yet finished: member stacks are
+    # keyed by run-unique uids no later run can hit, so an aborted run
+    # (backend error, KeyboardInterrupt) must evict its live tasks'
+    # stacks from the possibly store-owned caches on the way out
+    live_uids: set[int] = set()
+
+    def admit_all() -> None:
+        for sw in sweeps:
+            for task in sw.admit():
+                _register_task(task, caches)
+                live_uids.add(task.uid)
+
+    def stack_for(tasks) -> object:
+        # group members share one padded bucket (the shape is part of
+        # the group key), so each task's own padded tensors stack
+        # directly; switch tensors are skipped — the DP / k-best
+        # reduction kernels never read them (cost gathers go through
+        # the persistent BucketStack views instead)
+        key = (tasks[0].bucket,) + tuple(t.uid for t in tasks)
+        return caches.member_stack(key, [t.padded for t in tasks])
+
+    try:
+        admit_all()
+        while any(sw.active for sw in sweeps):
+            active = [t for sw in sweeps for t in sw.active]
+            fleet["stacked_rounds"] += 1
+            # -- kernel phase: one stacked call per request-shape group.
+            # Groups are per padded bucket: small-bucket subsets never pay
+            # a wide bucket's reduction widths (the kernels additionally
+            # slice down to the group's widest valid prefix).  Tasks of
+            # different sweeps group together whenever their buckets and
+            # batch shapes match — the cross-network stacking.
+            groups: dict[tuple, list] = {}
+            for task in active:
+                req = task.request
+                if req.kind == "dp":
+                    key = ("dp", task.bucket, len(req.w_e))
+                elif req.kind == "kbest":
+                    key = ("kbest", task.bucket, len(req.mus), req.k)
+                elif req.kind == "moves":
+                    # move scoring folds in the deadline/idle math, so the
+                    # group additionally keys on (t_max, idle); the lanes
+                    # must live in one store, hence the bucket signature
+                    key = ("moves", task.bucket_sig,
+                           task.problem.t_max, task.problem.idle)
+                else:                   # "eval"/"eval_batch": no kernel
+                    continue
+                groups.setdefault(key, []).append(task)
+            raw: dict[int, object] = {}
+            for key, tasks in groups.items():
+                fleet["stacked_calls"] += 1
+                if key[0] == "dp":
+                    stack = stack_for(tasks)
+                    w_e = np.stack([t.request.w_e for t in tasks])
+                    w_t = np.stack([t.request.w_t for t in tasks])
+                    paths = bk.dp_multi_stacked(stack, w_e, w_t)
+                    for b, t in enumerate(tasks):
+                        raw[t.uid] = paths[b]
+                elif key[0] == "kbest":
+                    stack = stack_for(tasks)
+                    mus = np.stack([np.asarray(t.request.mus, dtype=float)
+                                    for t in tasks])
+                    paths, counts = bk.kbest_multi_stacked(stack, mus,
+                                                           key[3])
+                    for b, t in enumerate(tasks):
+                        raw[t.uid] = (paths[b], counts[b])
+                else:                                 # refinement moves
+                    counts = [len(t.request.paths) for t in tasks]
+                    bs = tasks[0].lane_store
+                    lanes = np.concatenate(
+                        [np.full(n, t.lane, dtype=np.int64)
+                         for t, n in zip(tasks, counts)])
+                    pa = np.concatenate([t.request.paths for t in tasks])
+                    t_inf = np.concatenate([t.request.aux[0] for t in tasks])
+                    e_idl = np.concatenate([t.request.aux[1] for t in tasks])
+                    mv_layer, mv_state, mv_gain = move_scores(
+                        bs.view(), lanes, pa, t_inf, e_idl, key[2], key[3])
+                    off = 0
+                    for t, n in zip(tasks, counts):
+                        raw[t.uid] = (mv_layer[off:off + n],
+                                      mv_state[off:off + n],
+                                      mv_gain[off:off + n])
+                        off += n
+            # -- evaluation phase: ONE stacked cost gather per bucket for
+            # every fresh path of the round, then advance each machine.
+            # Machines whose next request is evaluation-only (no kernel
+            # needed) are served again within the same round, so pure-eval
+            # rounds never exist.
+            todo = active
+            while todo:
+                fresh = {t.uid: t.take_kernel(raw.pop(t.uid, None))
+                         for t in todo}
+                by_bucket: dict[tuple, dict[tuple, list]] = {}
+                for t in todo:
+                    if len(fresh[t.uid]):
+                        fin = (t.problem.t_max, t.problem.idle)
+                        by_bucket.setdefault(t.bucket_sig, {}) \
+                            .setdefault(fin, []).append(t)
+                for sig, fin_groups in by_bucket.items():
+                    need = [t for sub in fin_groups.values() for t in sub]
+                    bs = need[0].lane_store
+                    lanes = np.concatenate(
+                        [np.full(len(fresh[t.uid]), t.lane,
+                                 dtype=np.int64) for t in need])
+                    paths = np.concatenate([fresh[t.uid] for t in need])
+                    fleet["stacked_calls"] += 1
+                    costs = bk.path_costs_stacked(bs.view(), lanes, paths)
+                    # the deadline/idle finishing math is shared per
+                    # (t_max, idle) subgroup — one vectorized pass each,
+                    # row-identical to per-task evaluation
+                    off = 0
+                    for sub in fin_groups.values():
+                        n_sub = sum(len(fresh[t.uid]) for t in sub)
+                        batch = sub[0].problem.finish_costs(
+                            paths[off:off + n_sub],
+                            {ck: val[off:off + n_sub]
+                             for ck, val in costs.items()})
+                        soff = 0
+                        for t in sub:
+                            n = len(fresh[t.uid])
+                            t.take_rows({ck: val[soff:soff + n]
+                                         for ck, val in batch.items()})
+                            soff += n
+                        off += n_sub
+                for t in todo:
+                    if len(fresh[t.uid]) == 0:
+                        t.take_rows(None)
+                todo = [t for t in todo if t.request is not None
+                        and t.request.kind in ("eval", "eval_batch")]
+            # -- bookkeeping phase: completions, cuts, admission
+            for sw in sweeps:
+                still = []
+                for task in sw.active:
+                    if task.request is None:
+                        sw.finish(task)
+                        caches.evict_members(task.uid)
+                        live_uids.discard(task.uid)
+                    else:
+                        still.append(task)
+                sw.active = still
+            admit_all()
+    finally:
+        # eviction normally happens per finished task; an aborted
+        # run evicts its still-live tasks' member stacks here so a
+        # store-owned cache never strands unreachable uid-keyed arrays
+        for uid in live_uids:
+            caches.evict_members(uid)
+    return fleet
+
 
 def select_rails_stacked(
     subsets: Iterable[tuple[float, ...]],
@@ -344,241 +599,27 @@ def select_rails_stacked(
     bound_fn: Callable[[tuple[float, ...]], float] | None = None,
     backend=None,
     max_live: int | None = None,
+    caches: StackCaches | None = None,
 ) -> tuple[dict | None, tuple[float, ...] | None, dict]:
-    """Round-based subset-stacked sweep: solve whole rail-subset
-    buckets in single backend DP passes.
+    """Single-network subset-stacked sweep (see
+    :func:`run_stacked_sweeps` for the round scheduler semantics and
+    :class:`StackedSweep` for the per-sweep state).
 
     ``make_task(idx, subset, hint)`` builds a per-subset solver task
     (see :class:`repro.core.lambda_dp.StackedLambdaTask`); ``hint``
     carries the best-effort λ* of the most recently finished subset
     (``{"lam_hint": float | None}``), exactly like the thread-pool
-    sweep's hint protocol — tasks admitted after the first completions
-    warm-start their bracket grids.  The scheduler
-    keeps up to ``max_live`` tasks live at once and advances every live
-    task one λ-search round per iteration:
-
-      1. **kernel phase** — tasks whose pending requests share a
-         ``(kind, padded bucket, batch shape)`` are stacked along a new
-         leading lane axis and solved in ONE backend call
-         (``dp_multi_stacked`` / ``kbest_multi_stacked``);
-      2. **evaluation phase** — the fresh candidate paths of every task
-         in a bucket are concatenated and costed with one stacked
-         gather (``path_costs_stacked``);
-      3. **bookkeeping phase** — finished tasks are finalized, the
-         infeasibility ceiling and the lexicographic
-         ``(e_total, enumeration index)`` incumbent are updated, and
-         new subsets are admitted from the enumeration-ordered queue
-         with exactly the sequential sweep's ceiling/bound cuts.
-
-    Selection is provably identical to :func:`select_rails`: per-lane
-    stacked kernel results are bit-identical to the non-stacked calls
-    (see :mod:`repro.core.backend`), so each task solves exactly the
-    problem the sequential sweep would have solved; the cuts only ever
-    skip provably non-winning work (a ceiling skip is provably
-    deadline-infeasible, a cut subset's bound is ≥ the final incumbent
-    under the tie-index rule); and the final selection is the
-    lexicographic minimum of ``(e_total, enumeration order)`` over all
-    solved subsets — the same subset the sequential loop's
-    first-strict-improvement rule keeps.  Round concurrency can only
-    make the cuts *weaker* (more subsets solved), exactly like the
-    thread-pool sweep — minus the threads.
+    sweep's hint protocol.  ``caches`` optionally injects store-owned
+    persistent lane stores (cross-compile reuse); by default every call
+    runs on fresh caches, reproducing the pre-service behaviour.
     """
-    bk = get_backend(backend)
-    subset_list = list(subsets)
-    # same enumeration order as select_rails: high-voltage subsets
-    # first, so the infeasibility ceiling is established early
-    subset_list.sort(key=lambda s: -max(s))
-    if max_live is None:
-        max_live = _DEFAULT_MAX_LIVE
-    max_live = max(1, int(max_live))
-
-    stats = {"subsets_total": 0, "subsets_solved": 0,
-             "subsets_skipped": 0, "subsets_cut": 0, "workers": 1,
-             "stacked_rounds": 0, "stacked_calls": 0,
-             "stack_max_live": max_live}
-    state = {"ceiling": -np.inf, "incumbent": np.inf,
-             "incumbent_idx": -1, "lam_hint": None}
-    results: dict[int, dict] = {}
-    pending = deque(enumerate(subset_list))
-    active: list = []
-    # persistent per-bucket lane stores: gather-based stacked calls
-    # (evaluation, move scoring) read zero-copy views; member stacks
-    # for the reduction kernels are cached while membership holds
-    buckets: dict[tuple, _BucketStack] = {}
-    stack_cache: dict[tuple[int, ...], object] = {}
-
-    def bucket_of(task) -> _BucketStack:
-        key = (task.padded.n_layers, task.padded.s_pad)
-        if key not in buckets:
-            buckets[key] = _BucketStack(*key)
-        return buckets[key]
-
-    def admit() -> None:
-        while pending and len(active) < max_live:
-            if state["lam_hint"] is None and \
-                    len(active) >= min(_BOOTSTRAP_LIVE, max_live):
-                return                      # cold bootstrap wave is full
-            idx, subset = pending.popleft()
-            stats["subsets_total"] += 1
-            if max(subset) <= state["ceiling"]:
-                stats["subsets_skipped"] += 1
-                continue
-            if bound_fn is not None and np.isfinite(state["incumbent"]):
-                bound = bound_fn(subset)
-                if state["incumbent"] < bound or (
-                        state["incumbent"] == bound
-                        and state["incumbent_idx"] < idx):
-                    stats["subsets_cut"] += 1
-                    continue
-            task = make_task(idx, subset,
-                             {"lam_hint": state["lam_hint"]})
-            task.start()
-            bucket_of(task).add(task)
-            active.append(task)
-
-    def stack_for(tasks, s_pad: int) -> object:
-        # group members share one bucket (s_pad is part of the group
-        # key), so each task's own padded tensors stack directly
-        key = (s_pad,) + tuple(t.idx for t in tasks)
-        if key not in stack_cache:
-            # switch tensors are skipped: the DP / k-best reduction
-            # kernels never read them (cost gathers go through the
-            # persistent _BucketStack view instead)
-            stack_cache[key] = stack_padded(
-                [t.padded for t in tasks], with_switch=False)
-        return stack_cache[key]
-
-    def evict_stacks(idx: int) -> None:
-        # membership tuples churn as tasks finish/admit; dropping every
-        # entry that references a finished task keeps the cache bounded
-        # by the live-task phase mix instead of growing all sweep long
-        for key in [k for k in stack_cache if idx in k[1:]]:
-            del stack_cache[key]
-
-    def finish(task) -> None:
-        stats["subsets_solved"] += 1
-        result = task.finalize()
-        if result is None:
-            state["ceiling"] = max(state["ceiling"], max(task.rails))
-            return
-        results[task.idx] = result
-        if result.get("lambda_star"):
-            state["lam_hint"] = result["lambda_star"]
-        e = result["e_total"]
-        if (e, task.idx) < (state["incumbent"], state["incumbent_idx"]):
-            state["incumbent"] = e
-            state["incumbent_idx"] = task.idx
-
-    admit()
-    while active:
-        stats["stacked_rounds"] += 1
-        # -- kernel phase: one stacked call per request-shape group.
-        # Groups are per padded bucket: small-bucket subsets never pay
-        # a wide bucket's reduction widths (the kernels additionally
-        # slice down to the group's widest valid prefix)
-        groups: dict[tuple, list] = {}
-        for task in active:
-            req = task.request
-            if req.kind == "dp":
-                key = ("dp", task.padded.s_pad, len(req.w_e))
-            elif req.kind == "kbest":
-                key = ("kbest", task.padded.s_pad, len(req.mus), req.k)
-            elif req.kind == "moves":
-                key = ("moves", task.padded.n_layers,
-                       task.padded.s_pad,
-                       task.problem.t_max, task.problem.idle)
-            else:                   # "eval"/"eval_batch": no kernel
-                continue
-            groups.setdefault(key, []).append(task)
-        raw: dict[int, object] = {}
-        for key, tasks in groups.items():
-            stats["stacked_calls"] += 1
-            if key[0] == "dp":
-                stack = stack_for(tasks, key[1])
-                w_e = np.stack([t.request.w_e for t in tasks])
-                w_t = np.stack([t.request.w_t for t in tasks])
-                paths = bk.dp_multi_stacked(stack, w_e, w_t)
-                for b, t in enumerate(tasks):
-                    raw[t.idx] = paths[b]
-            elif key[0] == "kbest":
-                stack = stack_for(tasks, key[1])
-                mus = np.stack([np.asarray(t.request.mus, dtype=float)
-                                for t in tasks])
-                paths, counts = bk.kbest_multi_stacked(stack, mus,
-                                                       key[3])
-                for b, t in enumerate(tasks):
-                    raw[t.idx] = (paths[b], counts[b])
-            else:                                 # refinement moves
-                counts = [len(t.request.paths) for t in tasks]
-                bs = bucket_of(tasks[0])
-                lanes = np.concatenate(
-                    [np.full(n, bs.slot[t.idx], dtype=np.int64)
-                     for t, n in zip(tasks, counts)])
-                pa = np.concatenate([t.request.paths for t in tasks])
-                t_inf = np.concatenate([t.request.aux[0] for t in tasks])
-                e_idl = np.concatenate([t.request.aux[1] for t in tasks])
-                mv_layer, mv_state, mv_gain = move_scores(
-                    bs.view(), lanes, pa, t_inf, e_idl, key[3], key[4])
-                off = 0
-                for t, n in zip(tasks, counts):
-                    raw[t.idx] = (mv_layer[off:off + n],
-                                  mv_state[off:off + n],
-                                  mv_gain[off:off + n])
-                    off += n
-        # -- evaluation phase: ONE stacked cost gather for every fresh
-        # path of the round, then advance each machine.  Machines whose
-        # next request is evaluation-only (no kernel needed) are served
-        # again within the same round, so pure-eval rounds never exist.
-        todo = list(active)
-        while todo:
-            fresh = {t.idx: t.take_kernel(raw.pop(t.idx, None))
-                     for t in todo}
-            by_bucket: dict[tuple, list] = {}
-            for t in todo:
-                if len(fresh[t.idx]):
-                    key = (t.padded.n_layers, t.padded.s_pad,
-                           t.problem.t_max, t.problem.idle)
-                    by_bucket.setdefault(key, []).append(t)
-            for key, need in by_bucket.items():
-                bs = buckets[key[:2]]
-                lanes = np.concatenate(
-                    [np.full(len(fresh[t.idx]), bs.slot[t.idx],
-                             dtype=np.int64) for t in need])
-                paths = np.concatenate([fresh[t.idx] for t in need])
-                stats["stacked_calls"] += 1
-                costs = bk.path_costs_stacked(bs.view(), lanes, paths)
-                # the deadline/idle finishing math is shared by every
-                # problem of the group — run it ONCE on the whole batch
-                batch = need[0].problem.finish_costs(paths, costs)
-                off = 0
-                for t in need:
-                    n = len(fresh[t.idx])
-                    t.take_rows({ck: val[off:off + n]
-                                 for ck, val in batch.items()})
-                    off += n
-            for t in todo:
-                if len(fresh[t.idx]) == 0:
-                    t.take_rows(None)
-            todo = [t for t in todo if t.request is not None
-                    and t.request.kind in ("eval", "eval_batch")]
-        # -- bookkeeping phase: completions, cuts, admission
-        still = []
-        for task in active:
-            if task.request is None:
-                finish(task)
-                evict_stacks(task.idx)
-            else:
-                still.append(task)
-        active = still
-        admit()
-
-    best: dict | None = None
-    best_subset: tuple[float, ...] | None = None
-    for idx in sorted(results):
-        result = results[idx]
-        if best is None or result["e_total"] < best["e_total"]:
-            best = result
-            best_subset = subset_list[idx]
+    sweep = StackedSweep(subsets, make_task, bound_fn=bound_fn,
+                         max_live=max_live)
+    fleet = run_stacked_sweeps([sweep], backend=backend, caches=caches)
+    best, best_subset = sweep.selection()
+    stats = dict(sweep.stats)
+    stats["stacked_rounds"] = fleet["stacked_rounds"]
+    stats["stacked_calls"] = fleet["stacked_calls"]
     return best, best_subset, stats
 
 

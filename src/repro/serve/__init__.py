@@ -1,6 +1,10 @@
 from repro.serve.engine import EngineConfig, ServingEngine
 from repro.serve.power_runtime import PowerRuntime, simulate_interval
 from repro.serve.scheduler import PeriodicScheduler
+# the compile-side of the serving deployment: schedules served by
+# PowerRuntime are produced by the fleet compile service
+from repro.service import ArtifactStore, CompileRequest, CompileService
 
 __all__ = ["ServingEngine", "EngineConfig", "PeriodicScheduler",
-           "PowerRuntime", "simulate_interval"]
+           "PowerRuntime", "simulate_interval",
+           "CompileService", "CompileRequest", "ArtifactStore"]

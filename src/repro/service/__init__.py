@@ -1,0 +1,19 @@
+"""Fleet compile service: process-wide artifact store, warm-started
+compiles, cross-network bucket stacking, persistent schedule cache.
+
+  - :class:`ArtifactStore` — thread-safe content-addressable cache of
+    every shareable compilation artifact (characterization, master
+    tables, transition matrices, subset lane stores, schedules), with
+    npz+JSON disk persistence;
+  - :class:`CompileService` — ``compile`` / ``compile_many`` drivers
+    that warm-start from the store and co-schedule many networks'
+    rail sweeps in one round scheduler.
+"""
+
+from repro.service.compile_service import (
+    CompileRequest,
+    CompileService,
+)
+from repro.service.store import ArtifactStore
+
+__all__ = ["ArtifactStore", "CompileService", "CompileRequest"]

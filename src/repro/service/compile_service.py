@@ -1,0 +1,219 @@
+"""Fleet compile service: many networks, one accelerator, shared work.
+
+The paper compiles one schedule per deployment (§3.3); a deployment
+service compiles *many* networks for one accelerator under heavy
+traffic.  :class:`CompileService` wraps the staged compiler with the
+process-wide :class:`~repro.service.store.ArtifactStore`:
+
+  - ``compile(...)`` answers repeat requests from the persistent
+    schedule cache (keyed by network content hash × rate × semantic
+    config) and warm-starts cold compiles from the store's
+    characterization / master-table / transition / lane-store caches;
+  - ``compile_many([...])`` additionally co-schedules the rail-subset
+    sweeps of every request in ONE round scheduler
+    (:func:`~repro.core.rails.run_stacked_sweeps`): rail subsets from
+    different networks that share a padded bucket are stacked into the
+    same lane axis and advanced in one backend call per round.
+
+Warm or cold, stacked or solo, the emitted schedules are identical to
+``compile_power_schedule`` run from scratch: every shared artifact is
+content-addressed and immutable, per-lane stacked kernel results are
+bit-identical to solo calls, and each network's sweep reads only its
+own cuts and hints (see :mod:`repro.core.rails`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.backend import get_backend
+from repro.core.context import CompilationContext
+from repro.core.orchestrator import compile_power_schedule
+from repro.core.policies import OrchestratorConfig, stacked_compile_job
+from repro.core.rails import run_stacked_sweeps
+from repro.core.schedule import PowerSchedule
+from repro.hw.edge40nm import EDGE40NM_DEFAULT, Edge40nmAccelerator
+from repro.perfmodel.layer_costs import LayerSpec
+from repro.service.store import _INFEASIBLE, ArtifactStore
+
+# config fields that provably cannot change the emitted schedule (the
+# parallel and stacked sweeps are selection-identical to the sequential
+# one, see repro.core.rails) — excluded from the schedule-cache key so
+# operational knobs don't fragment the cache.  Everything else (policy,
+# rails budget, solver options, backend — which may differ in the last
+# ulp) stays in the key.
+_NON_SEMANTIC_CFG = ("sweep_workers", "stack_max_live", "stack_subsets")
+
+
+def _cfg_key(cfg: OrchestratorConfig) -> str:
+    d = dataclasses.asdict(cfg)
+    for field in _NON_SEMANTIC_CFG:
+        d.pop(field, None)
+    # resolve the backend default ($PFDNN_BACKEND) so cache entries
+    # written under one backend are never served under another
+    d["backend"] = get_backend(cfg.backend).name
+    return repr(sorted(d.items()))
+
+
+@dataclasses.dataclass
+class CompileRequest:
+    """One deployment point of a ``compile_many`` batch."""
+
+    specs: Sequence[LayerSpec]
+    target_rate_hz: float
+    cfg: OrchestratorConfig | None = None
+    network: str = "net"
+
+
+class CompileService:
+    """Compile deployment power schedules against one accelerator,
+    amortizing all content-addressable work across requests (and, with
+    ``compile_many``, across networks inside one round scheduler).
+
+    One service instance (or at least one shared :class:`ArtifactStore`)
+    per accelerator per process is the intended deployment shape; the
+    store is thread-safe, so concurrent ``compile``/``compile_many``
+    calls may share it.
+    """
+
+    def __init__(self, acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
+                 store: ArtifactStore | None = None, *,
+                 use_schedule_cache: bool = True):
+        self.acc = acc
+        self.store = store if store is not None else ArtifactStore()
+        self.use_schedule_cache = use_schedule_cache
+
+    # -- single compile ------------------------------------------------
+    def context_for(self, specs: Sequence[LayerSpec],
+                    target_rate_hz: float, *,
+                    cfg: OrchestratorConfig | None = None,
+                    network: str = "net") -> CompilationContext:
+        """A store-backed context for one deployment point (reusable
+        across policies via ``compile_power_schedule(..., ctx=...)``)."""
+        cfg = cfg or OrchestratorConfig()
+        return CompilationContext(
+            specs, target_rate_hz, acc=self.acc, network=network,
+            e_switch_nom=cfg.e_switch_nom, store=self.store)
+
+    def _schedule_key(self, ctx: CompilationContext, rate: float,
+                      cfg: OrchestratorConfig) -> tuple:
+        return (ctx.content_key, repr(float(rate)), _cfg_key(cfg))
+
+    def _cached(self, key: tuple,
+                network: str) -> PowerSchedule | None | str:
+        """Schedule-cache lookup: a schedule, the infeasible sentinel,
+        or None on miss.  The cached artifact is content-keyed, so only
+        the cosmetic network label is rebound to the request's."""
+        if not self.use_schedule_cache:
+            return None
+        hit = self.store.schedule(key)
+        if isinstance(hit, PowerSchedule) and hit.network != network:
+            hit = dataclasses.replace(hit, network=network)
+        return hit
+
+    def compile(self, specs: Sequence[LayerSpec],
+                target_rate_hz: float, *,
+                cfg: OrchestratorConfig | None = None,
+                network: str = "net") -> PowerSchedule | None:
+        """Compile one deployment point through the store (schedule
+        cache first, then a warm-started cold compile)."""
+        cfg = cfg or OrchestratorConfig()
+        ctx = self.context_for(specs, target_rate_hz, cfg=cfg,
+                               network=network)
+        key = self._schedule_key(ctx, target_rate_hz, cfg)
+        hit = self._cached(key, network)
+        if hit is not None:
+            return None if hit == _INFEASIBLE else hit
+        sched = compile_power_schedule(
+            specs, target_rate_hz, cfg=cfg, acc=self.acc,
+            network=network, ctx=ctx)
+        if self.use_schedule_cache:
+            self.store.put_schedule(key, sched)
+        return sched
+
+    # -- batched compile ----------------------------------------------
+    def compile_many(self, requests: Sequence[CompileRequest], *,
+                     stack_networks: bool = True
+                     ) -> list[PowerSchedule | None]:
+        """Compile a batch of deployment points, sharing work three
+        ways: the schedule cache answers repeats (within the batch and
+        across calls), the artifact store warm-starts every context,
+        and — with ``stack_networks`` — all stackable rail sweeps run
+        in ONE round scheduler, so same-bucket subsets of different
+        networks advance in single backend calls.
+
+        Results are positionally aligned with ``requests`` and
+        identical to per-request ``compile`` calls (which are in turn
+        identical to cold ``compile_power_schedule`` runs).
+        """
+        results: list = [None] * len(requests)
+        key_of: dict[int, tuple] = {}
+        first_of_key: dict[tuple, int] = {}
+        fleets: dict[str, list] = {}       # backend name -> (i, job)
+        for i, req in enumerate(requests):
+            cfg = req.cfg or OrchestratorConfig()
+            ctx = self.context_for(req.specs, req.target_rate_hz,
+                                   cfg=cfg, network=req.network)
+            key = self._schedule_key(ctx, req.target_rate_hz, cfg)
+            key_of[i] = key
+            hit = self._cached(key, req.network)
+            if hit is not None:
+                results[i] = None if hit == _INFEASIBLE else hit
+                continue
+            if key in first_of_key:        # in-batch duplicate: solve once
+                results[i] = first_of_key[key]
+                continue
+            first_of_key[key] = i
+            job = stacked_compile_job(
+                ctx, cfg, caches=self.store.stack_caches) \
+                if stack_networks else None
+            if job is None:
+                # non-stackable policy/config: plain warm compile
+                sched = compile_power_schedule(
+                    req.specs, req.target_rate_hz, cfg=cfg,
+                    acc=self.acc, network=req.network, ctx=ctx)
+                if self.use_schedule_cache:
+                    self.store.put_schedule(key, sched)
+                results[i] = sched
+            else:
+                fleets.setdefault(get_backend(cfg.backend).name,
+                                  []).append((i, req, cfg, job))
+        # one round scheduler per backend: every live rail subset of
+        # every network advances one λ-search round per stacked call
+        for backend, jobs in fleets.items():
+            for _, _, _, job in jobs:
+                job.start_clock()      # exclude other fleets' solves
+            fleet = run_stacked_sweeps(
+                [job.sweep for _, _, _, job in jobs], backend=backend,
+                caches=self.store.stack_caches)
+            for i, req, cfg, job in jobs:
+                sched = job.emit(fleet)
+                if self.use_schedule_cache:
+                    self.store.put_schedule(key_of[i], sched)
+                results[i] = sched
+        # resolve in-batch duplicates (marked with the first index)
+        for i, val in enumerate(results):
+            if isinstance(val, int):
+                dup = results[val]
+                if isinstance(dup, PowerSchedule) \
+                        and dup.network != requests[i].network:
+                    dup = dataclasses.replace(
+                        dup, network=requests[i].network)
+                results[i] = dup
+        return results
+
+    # -- maintenance ---------------------------------------------------
+    def save(self, path) -> None:
+        """Persist the store (see :meth:`ArtifactStore.save`)."""
+        self.store.save(path)
+
+    def load(self, path) -> "CompileService":
+        self.store.load(path)
+        return self
+
+    def trim(self, max_lanes: int = 4096) -> bool:
+        """Bound the resident subset lane stores (drop-and-rebuild; see
+        :meth:`ArtifactStore.trim_stacks`).  Call between batches — not
+        concurrently with an in-flight compile on the same store."""
+        return self.store.trim_stacks(max_lanes)

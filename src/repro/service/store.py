@@ -1,0 +1,282 @@
+"""Process-wide artifact store for the fleet compile service.
+
+A deployment service compiles many networks for one accelerator under
+heavy traffic; almost everything the compiler builds per call is
+content-addressable and therefore shareable process-wide:
+
+  - **characterization + bank plan** — keyed by (layer specs, accelerator)
+    content;
+  - **master per-layer state tables** — keyed by the same content plus
+    the gating flag (none of these depend on the target rate);
+  - **pairwise transition matrices** — keyed by (transition model,
+    voltage table content) pairs, exactly the content keys
+    :class:`~repro.core.context.CompilationContext` already uses, now
+    shared across contexts;
+  - **subset lane stores** (:class:`~repro.core.backend.BucketStack`)
+    — the padded tensors of every solved rail subset, keyed by
+    ``(levels, n_layers, S_pad)`` bucket signature with content-derived
+    lane keys, so later compilations of the same subsets skip both
+    ``build_padded`` and the admission copy, and rail subsets of
+    *different* networks sharing a bucket stack into one lane axis;
+  - **compiled schedules** — keyed by (network content hash, rate,
+    semantic config), serialized through ``PowerSchedule.to_json`` so a
+    cache hit returns a fresh deserialized artifact.
+
+The backend jit caches are already process-wide (``get_backend``
+memoizes backend instances, and jitted programs key on padded shapes);
+:meth:`ArtifactStore.backend` exposes them so the store is the single
+handle a service owns.
+
+All caches hold immutable values; mutating operations take the store
+lock, and value recomputation races at worst duplicate work (identical
+content), never tear a read — safe for concurrent ``compile_many``.
+
+``save``/``load`` persist the transition matrices, master tables, and
+the schedule cache to one ``.npz`` file (arrays + a JSON manifest), so
+a service restart warm-starts from disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.backend import StackCaches, get_backend
+from repro.core.context import _digest
+from repro.core.problem import _pairwise_transition
+from repro.core.schedule import PowerSchedule
+from repro.hw.edge40nm import Edge40nmAccelerator
+from repro.perfmodel.gating import plan_banks
+from repro.perfmodel.layer_costs import LayerSpec, characterize_network
+
+# schedule-cache sentinel for "compiled and found infeasible" — an
+# infeasible sweep is as expensive as a feasible one, so repeats of an
+# impossible (network, rate) must hit the cache too
+_INFEASIBLE = "__infeasible__"
+
+
+class ArtifactStore:
+    """Thread-safe, content-addressable cache of every shareable
+    compilation artifact (see module docstring)."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        # specs_acc_key -> (costs, plan)
+        self._characterization: dict = {}
+        # (specs_acc_key, gating) -> master record (volts/t_op/e_op/vkey)
+        self._masters: dict = {}
+        # (tm_key, volts_a bytes, volts_b bytes) -> (T, E, switch)
+        self._transitions: dict = {}
+        # (content_key, rate_key, cfg_key) -> PowerSchedule JSON text
+        self._schedules: dict = {}
+        # persistent subset lane stores + round member-stack cache
+        self.stack_caches = StackCaches()
+        self.hits = {"characterization": 0, "master": 0,
+                     "transition": 0, "schedule": 0}
+        self.misses = {"characterization": 0, "master": 0,
+                       "transition": 0, "schedule": 0}
+
+    # -- characterization ---------------------------------------------
+    def characterization(self, specs: Sequence[LayerSpec],
+                         acc: Edge40nmAccelerator,
+                         key: str | None = None):
+        """(costs, plan) for the network content — computed once per
+        (specs, accelerator) content process-wide.  ``key`` accepts the
+        caller's precomputed specs/acc digest (the context computes it
+        anyway; repr-ing the full spec tuple twice would dominate the
+        warm fast path)."""
+        if key is None:
+            key = _digest(repr(tuple(specs)), repr(acc))
+        hit = self._characterization.get(key)
+        if hit is not None:
+            with self._lock:
+                self.hits["characterization"] += 1
+            return hit
+        costs = characterize_network(list(specs), acc)
+        plan = plan_banks(costs, acc)
+        with self._lock:
+            self.misses["characterization"] += 1
+            self._characterization.setdefault(key, (costs, plan))
+            return self._characterization[key]
+
+    # -- master state tables ------------------------------------------
+    def master(self, key: tuple) -> dict | None:
+        rec = self._masters.get(key)
+        with self._lock:
+            if rec is None:
+                self.misses["master"] += 1
+            else:
+                self.hits["master"] += 1
+        return rec
+
+    def put_master(self, key: tuple, rec: dict) -> None:
+        with self._lock:
+            self._masters.setdefault(key, rec)
+
+    # -- transition matrices ------------------------------------------
+    def transition(self, tm_key: str, ka: bytes, kb: bytes,
+                   tm, va: np.ndarray, vb: np.ndarray):
+        """(T_trans, E_trans, switch) for two voltage tables under the
+        transition model ``tm`` — content-keyed, shared across every
+        context (and network) on the store."""
+        key = (tm_key, ka, kb)
+        hit = self._transitions.get(key)
+        if hit is not None:
+            with self._lock:
+                self.hits["transition"] += 1
+            return hit
+        val = _pairwise_transition(tm, va, vb)
+        with self._lock:
+            self.misses["transition"] += 1
+            self._transitions.setdefault(key, val)
+            return self._transitions[key]
+
+    # -- compiled schedules -------------------------------------------
+    def schedule(self, key: tuple) -> PowerSchedule | None | str:
+        """Cached schedule for ``key``: a fresh deserialized
+        :class:`PowerSchedule`, the :data:`_INFEASIBLE` sentinel when
+        the point was compiled and found infeasible, or None on miss."""
+        text = self._schedules.get(key)
+        with self._lock:
+            if text is None:
+                self.misses["schedule"] += 1
+            else:
+                self.hits["schedule"] += 1
+        if text is None:
+            return None
+        if text == _INFEASIBLE:
+            return _INFEASIBLE
+        return PowerSchedule.from_json(text)
+
+    def put_schedule(self, key: tuple,
+                     sched: PowerSchedule | None) -> None:
+        with self._lock:
+            self._schedules[key] = _INFEASIBLE if sched is None \
+                else sched.to_json()
+
+    # -- bookkeeping ---------------------------------------------------
+    def backend(self, name: str | None = None):
+        """The (process-wide) backend instance — jitted programs and
+        device caches live on it, so holding the store keeps every jit
+        cache reachable from one place."""
+        return get_backend(name)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "characterizations": len(self._characterization),
+                "masters": len(self._masters),
+                "transitions": len(self._transitions),
+                "schedules": len(self._schedules),
+                "resident_lanes": self.stack_caches.n_lanes(),
+                "hits": dict(self.hits),
+                "misses": dict(self.misses),
+            }
+
+    def clear(self, *, schedules: bool = True, stacks: bool = True,
+              tables: bool = True) -> None:
+        """Drop cached artifacts (selectively).  ``tables`` covers
+        characterization, master tables, and transition matrices."""
+        with self._lock:
+            if schedules:
+                self._schedules.clear()
+            if stacks:
+                self.stack_caches.clear()
+            if tables:
+                self._characterization.clear()
+                self._masters.clear()
+                self._transitions.clear()
+
+    def trim_stacks(self, max_lanes: int) -> bool:
+        """Reset the subset lane stores once they exceed ``max_lanes``
+        resident lanes (correctness-neutral: evicted lanes are simply
+        rebuilt on next use).  Returns True when a trim happened."""
+        if self.stack_caches.n_lanes() <= max_lanes:
+            return False
+        self.stack_caches.clear()
+        return True
+
+    # -- disk persistence ---------------------------------------------
+    def save(self, path) -> None:
+        """Persist transition matrices, master tables, and the schedule
+        cache to ``path`` as one ``.npz`` (arrays + JSON manifest)."""
+        with self._lock:
+            transitions = dict(self._transitions)
+            masters = dict(self._masters)
+            schedules = dict(self._schedules)
+        arrays: dict[str, np.ndarray] = {}
+        manifest: dict = {"version": 1, "transitions": [],
+                          "masters": [], "schedules": []}
+        for i, ((tmk, ka, kb), (t, e, sw)) in \
+                enumerate(transitions.items()):
+            manifest["transitions"].append(
+                {"tm": tmk, "a": ka.hex(), "b": kb.hex()})
+            arrays[f"tr{i}_t"] = t
+            arrays[f"tr{i}_e"] = e
+            arrays[f"tr{i}_s"] = sw
+        for j, ((sak, gating), rec) in enumerate(masters.items()):
+            manifest["masters"].append(
+                {"key": sak, "gating": bool(gating),
+                 "layers": len(rec["volts"])})
+            for i, (v, t, e) in enumerate(zip(rec["volts"], rec["t_op"],
+                                              rec["e_op"])):
+                arrays[f"ma{j}_v{i}"] = v
+                arrays[f"ma{j}_t{i}"] = t
+                arrays[f"ma{j}_e{i}"] = e
+        manifest["schedules"] = [
+            {"key": list(k), "json": text}
+            for k, text in schedules.items()]
+        arrays["manifest"] = np.frombuffer(
+            json.dumps(manifest).encode(), dtype=np.uint8)
+        # crash-safe: stream into a sibling temp file, then atomically
+        # replace — a killed save never leaves a truncated snapshot
+        # where the next service start expects a valid one
+        path = pathlib.Path(path)
+        if path.suffix != ".npz":       # np.savez appends it anyway
+            path = path.with_name(path.name + ".npz")
+        tmp = path.with_name(path.name + ".tmp.npz")
+        try:
+            np.savez_compressed(tmp, **arrays)
+            os.replace(tmp, path)
+        finally:
+            tmp.unlink(missing_ok=True)
+
+    def load(self, path) -> "ArtifactStore":
+        """Merge a :meth:`save` snapshot into this store (existing
+        entries win — loaded content is by construction identical for
+        equal keys).  Returns ``self`` for chaining."""
+        with np.load(path) as data:
+            manifest = json.loads(bytes(data["manifest"]).decode())
+            if manifest.get("version") != 1:
+                raise ValueError(
+                    f"unknown artifact snapshot version "
+                    f"{manifest.get('version')!r}")
+            with self._lock:
+                for i, ent in enumerate(manifest["transitions"]):
+                    key = (ent["tm"], bytes.fromhex(ent["a"]),
+                           bytes.fromhex(ent["b"]))
+                    self._transitions.setdefault(
+                        key, (data[f"tr{i}_t"], data[f"tr{i}_e"],
+                              data[f"tr{i}_s"]))
+                for j, ent in enumerate(manifest["masters"]):
+                    volts = [data[f"ma{j}_v{i}"]
+                             for i in range(ent["layers"])]
+                    rec = {
+                        "volts": volts,
+                        "t_op": [data[f"ma{j}_t{i}"]
+                                 for i in range(ent["layers"])],
+                        "e_op": [data[f"ma{j}_e{i}"]
+                                 for i in range(ent["layers"])],
+                        "vkey": [v.tobytes() for v in volts],
+                    }
+                    self._masters.setdefault(
+                        (ent["key"], ent["gating"]), rec)
+                for ent in manifest["schedules"]:
+                    self._schedules.setdefault(tuple(ent["key"]),
+                                               ent["json"])
+        return self

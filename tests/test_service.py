@@ -1,0 +1,375 @@
+"""Fleet compile service: warm-start parity, cross-network stacking
+identity, schedule-cache round-trips, store persistence, and the
+concurrent-compile stress test.
+
+The load-bearing property: no matter how a schedule is produced —
+cold ``compile_power_schedule``, warm ``CompileService.compile`` on a
+pre-populated store, ``compile_many`` with cross-network bucket
+stacking on or off, a schedule-cache hit, or a concurrent compile —
+the emitted rails, per-layer states, and energies are identical.
+"""
+
+import dataclasses
+import json
+import pathlib
+import threading
+
+import pytest
+
+from conftest import max_rate
+from repro.core import (
+    CompilationContext,
+    OrchestratorConfig,
+    compile_power_schedule,
+)
+from repro.core.schedule import PowerSchedule
+from repro.hw.dvfs import V_GATED
+from repro.models.edge_cnn import edge_network
+from repro.service import ArtifactStore, CompileRequest, CompileService
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden" / "pipeline.json")
+    .read_text())
+
+
+def _assert_same_schedule(a: PowerSchedule, b: PowerSchedule) -> None:
+    """Bit-identical deployment artifact: rails, per-layer states,
+    energies, and the runtime ledger fields."""
+    assert a.rails == b.rails
+    assert a.layer_voltages == b.layer_voltages
+    assert a.awake_banks == b.awake_banks
+    assert a.e_total == b.e_total
+    assert a.t_infer == b.t_infer
+    assert a.e_op == b.e_op
+    assert a.e_trans == b.e_trans
+    assert a.e_idle == b.e_idle
+    assert a.z_active_idle == b.z_active_idle
+    assert a.n_rail_switches == b.n_rail_switches
+    assert a.feasible == b.feasible
+
+
+def _cfg_for(key: str) -> tuple[str, float, OrchestratorConfig]:
+    network, frac, n_rails, policy = key.split("|")
+    rate = max_rate(network) * float(frac)
+    return network, rate, OrchestratorConfig(policy=policy,
+                                             n_max_rails=int(n_rails))
+
+
+@pytest.fixture(scope="module")
+def warm_service():
+    """A service whose store was populated by compiling every golden
+    config once — the fleet steady state every warm test starts from."""
+    svc = CompileService()
+    first: dict[str, PowerSchedule | None] = {}
+    for key in sorted(GOLDEN):
+        network, rate, cfg = _cfg_for(key)
+        first[key] = svc.compile(edge_network(network), rate, cfg=cfg,
+                                 network=network)
+    return svc, first
+
+
+# --------------------------------------------- warm-start parity
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_warm_solve_parity_golden(key, warm_service):
+    """A full solve on a pre-populated store (schedule cache bypassed)
+    is bit-identical to a cold compile_power_schedule run."""
+    svc, _ = warm_service
+    network, rate, cfg = _cfg_for(key)
+    cold = compile_power_schedule(edge_network(network), rate, cfg=cfg,
+                                  network=network)
+    warm_svc = CompileService(store=svc.store, use_schedule_cache=False)
+    warm = warm_svc.compile(edge_network(network), rate, cfg=cfg,
+                            network=network)
+    assert (cold is None) == (warm is None)
+    if cold is not None:
+        _assert_same_schedule(warm, cold)
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN))
+def test_schedule_cache_roundtrip_golden(key, warm_service):
+    """A schedule-cache hit (to_json → from_json round trip) returns
+    the first compile's artifact bit-identically."""
+    svc, first = warm_service
+    network, rate, cfg = _cfg_for(key)
+    hit = svc.compile(edge_network(network), rate, cfg=cfg,
+                      network=network)
+    assert (first[key] is None) == (hit is None)
+    if hit is not None:
+        _assert_same_schedule(hit, first[key])
+        assert hit.solver_stats == first[key].solver_stats
+        assert hit.domains == first[key].domains
+
+
+@pytest.mark.parametrize(
+    "key", [k for k in sorted(GOLDEN) if k.endswith("pfdnn")
+            or k.endswith("pfdnn_nopp")])
+def test_warm_parity_with_stacking_off(key, warm_service):
+    """Warm parity also holds when the subset-stacked engine is
+    disabled (legacy per-subset sweep on a warm store)."""
+    svc, _ = warm_service
+    network, rate, cfg = _cfg_for(key)
+    cfg = dataclasses.replace(cfg, stack_subsets=False)
+    cold = compile_power_schedule(edge_network(network), rate, cfg=cfg,
+                                  network=network)
+    warm_svc = CompileService(store=svc.store, use_schedule_cache=False)
+    warm = warm_svc.compile(edge_network(network), rate, cfg=cfg,
+                            network=network)
+    _assert_same_schedule(warm, cold)
+
+
+# --------------------------------------------- cross-network stacking
+
+def _fleet_requests() -> list[CompileRequest]:
+    cfg2 = OrchestratorConfig(policy="pfdnn", n_max_rails=2)
+    return [
+        CompileRequest(edge_network("squeezenet1.1"),
+                       max_rate("squeezenet1.1") * 0.9, cfg2, "sqz"),
+        CompileRequest(edge_network("mobilenetv3-small"),
+                       max_rate("mobilenetv3-small") * 0.85, cfg2,
+                       "mnv3"),
+        CompileRequest(edge_network("squeezenet1.1"),
+                       max_rate("squeezenet1.1") * 0.5,
+                       OrchestratorConfig(policy="pfdnn", n_max_rails=3),
+                       "sqz-slow"),
+    ]
+
+
+@pytest.fixture(scope="module")
+def solo_fleet_schedules():
+    return [compile_power_schedule(r.specs, r.target_rate_hz, cfg=r.cfg,
+                                   network=r.network)
+            for r in _fleet_requests()]
+
+
+@pytest.mark.parametrize("stack_networks", [True, False])
+def test_compile_many_matches_solo(stack_networks, solo_fleet_schedules):
+    """compile_many over ≥3 deployment points — with and without
+    cross-network stacking — emits exactly the solo schedules."""
+    svc = CompileService()
+    many = svc.compile_many(_fleet_requests(),
+                            stack_networks=stack_networks)
+    assert len(many) == 3
+    for got, ref in zip(many, solo_fleet_schedules):
+        _assert_same_schedule(got, ref)
+    if stack_networks:
+        # the sweeps really were co-scheduled in one round scheduler
+        assert all(s.solver_stats.get("fleet_networks") == 3
+                   for s in many)
+
+
+def test_compile_many_dedups_and_caches(solo_fleet_schedules):
+    reqs = _fleet_requests()
+    # append an in-batch duplicate of request 0 under another label
+    dup = CompileRequest(reqs[0].specs, reqs[0].target_rate_hz,
+                         reqs[0].cfg, "sqz-copy")
+    svc = CompileService()
+    many = svc.compile_many(reqs + [dup])
+    _assert_same_schedule(many[3], solo_fleet_schedules[0])
+    assert many[3].network == "sqz-copy"
+    # repeat traffic: the whole batch answers from the schedule cache
+    before = svc.store.stats()["hits"]["schedule"]
+    again = svc.compile_many(reqs)
+    assert svc.store.stats()["hits"]["schedule"] == before + 3
+    for got, ref in zip(again, solo_fleet_schedules):
+        _assert_same_schedule(got, ref)
+
+
+def test_infeasible_point_is_cached():
+    specs = edge_network("squeezenet1.1")
+    rate = max_rate("squeezenet1.1") * 2.0        # beyond max rate
+    svc = CompileService()
+    cfg = OrchestratorConfig(policy="pfdnn", n_max_rails=2)
+    assert svc.compile(specs, rate, cfg=cfg) is None
+    before = svc.store.stats()["hits"]["schedule"]
+    assert svc.compile(specs, rate, cfg=cfg) is None
+    assert svc.store.stats()["hits"]["schedule"] == before + 1
+
+
+# --------------------------------------------- concurrent compiles
+
+def test_threaded_compile_many_stress(solo_fleet_schedules):
+    """Two threads drive overlapping compile_many batches through ONE
+    service (same accelerator, overlapping buckets): every result must
+    equal the solo compile, and the shared store must stay coherent."""
+    svc = CompileService(use_schedule_cache=False)   # force full solves
+    reqs = _fleet_requests()
+    orders = [[0, 1, 2], [2, 0, 1]]
+    results: dict[int, list] = {}
+    errors: list[BaseException] = []
+
+    def run(tid: int, order: list[int]) -> None:
+        try:
+            out = svc.compile_many([reqs[i] for i in order])
+            results[tid] = [out[order.index(i)] for i in range(3)]
+        except BaseException as exc:             # surface in main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=run, args=(t, o))
+               for t, o in enumerate(orders)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    for tid in range(2):
+        for got, ref in zip(results[tid], solo_fleet_schedules):
+            _assert_same_schedule(got, ref)
+    # overlapping buckets really were shared (lanes resident once)
+    assert svc.store.stats()["resident_lanes"] > 0
+
+
+# --------------------------------------------- store persistence
+
+def test_store_save_load_roundtrip(tmp_path):
+    specs = edge_network("squeezenet1.1")
+    rate = max_rate("squeezenet1.1") * 0.9
+    cfg = OrchestratorConfig(policy="pfdnn", n_max_rails=2)
+    svc = CompileService()
+    ref = svc.compile(specs, rate, cfg=cfg, network="sqz")
+    path = tmp_path / "artifacts.npz"
+    svc.save(path)
+
+    loaded = CompileService(store=ArtifactStore().load(path))
+    stats = loaded.store.stats()
+    assert stats["schedules"] >= 1
+    assert stats["masters"] >= 1
+    assert stats["transitions"] >= 1
+    # schedule-cache hit straight from disk
+    hit = loaded.compile(specs, rate, cfg=cfg, network="sqz")
+    _assert_same_schedule(hit, ref)
+    # warm full solve from the persisted tables
+    loaded.store.clear(schedules=True, stacks=False, tables=False)
+    warm = loaded.compile(specs, rate, cfg=cfg, network="sqz")
+    _assert_same_schedule(warm, ref)
+
+
+def test_store_trim_and_clear_stay_correct():
+    specs = edge_network("squeezenet1.1")
+    rate = max_rate("squeezenet1.1") * 0.9
+    cfg = OrchestratorConfig(policy="pfdnn", n_max_rails=2)
+    svc = CompileService(use_schedule_cache=False)
+    ref = svc.compile(specs, rate, cfg=cfg, network="sqz")
+    assert svc.store.stats()["resident_lanes"] > 0
+    assert svc.trim(max_lanes=0)                  # force a lane reset
+    assert svc.store.stats()["resident_lanes"] == 0
+    again = svc.compile(specs, rate, cfg=cfg, network="sqz")
+    _assert_same_schedule(again, ref)
+    svc.store.clear()
+    assert svc.store.stats()["schedules"] == 0
+    _assert_same_schedule(
+        svc.compile(specs, rate, cfg=cfg, network="sqz"), ref)
+
+
+# --------------------------------------------- ctx= reuse (satellite)
+
+def test_compile_with_prebuilt_ctx_reuses_characterization(monkeypatch):
+    import repro.core.context as context_mod
+
+    calls = {"n": 0}
+    real = context_mod.characterize_network
+
+    def counting(specs, acc):
+        calls["n"] += 1
+        return real(specs, acc)
+
+    monkeypatch.setattr(context_mod, "characterize_network", counting)
+    specs = edge_network("squeezenet1.1")
+    rate = max_rate("squeezenet1.1") * 0.9
+    ctx = CompilationContext(specs, rate, network="sqz")
+    assert calls["n"] == 1
+    ref_pf = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy="pfdnn",
+                                            n_max_rails=2))
+    ref_gr = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy="greedy_gating",
+                                            n_max_rails=2))
+    calls["n"] = 0
+    via_ctx_pf = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy="pfdnn",
+                                            n_max_rails=2), ctx=ctx)
+    via_ctx_gr = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy="greedy_gating",
+                                            n_max_rails=2), ctx=ctx)
+    assert calls["n"] == 0        # no silent re-characterization
+    _assert_same_schedule(via_ctx_pf, ref_pf)
+    _assert_same_schedule(via_ctx_gr, ref_gr)
+
+
+def test_compile_with_mismatched_ctx_raises():
+    specs = edge_network("squeezenet1.1")
+    rate = max_rate("squeezenet1.1") * 0.9
+    ctx = CompilationContext(specs, rate, network="sqz")
+    with pytest.raises(ValueError, match="deadline"):
+        compile_power_schedule(specs, rate * 0.5, ctx=ctx)
+    with pytest.raises(ValueError, match="different network"):
+        compile_power_schedule(edge_network("mobilenetv3-small"), rate,
+                               ctx=ctx)
+    with pytest.raises(ValueError, match="e_switch_nom"):
+        compile_power_schedule(
+            specs, rate, cfg=OrchestratorConfig(e_switch_nom=5e-9),
+            ctx=ctx)
+    with pytest.raises(ValueError, match="network label"):
+        compile_power_schedule(specs, rate, network="other", ctx=ctx)
+    with pytest.raises(ValueError, match="store"):
+        compile_power_schedule(specs, rate, ctx=ctx,
+                               store=ArtifactStore())
+    # matching label (or omitting it) is fine
+    assert compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy="baseline"),
+        network="sqz", ctx=ctx) is not None
+
+
+# ------------------------------------- PowerSchedule JSON round-trips
+
+def test_schedule_json_roundtrip_gated_states_and_ledger():
+    """Hand-built schedule with gated (0.0) states, non-representable
+    float rails, and every ledger field: two round trips must be exact
+    (the persistent schedule cache depends on this)."""
+    sched = PowerSchedule(
+        policy="pfdnn",
+        network="unit",
+        rails=(0.1 + 0.2, 0.95, 1.3),            # 0.30000000000000004
+        layer_voltages=[(1.3, 1.3, 1.3), (0.95, 0.95, V_GATED),
+                        (0.1 + 0.2, 0.95, 0.95)],
+        awake_banks=[16, 0, 7],
+        t_max=1.0 / 3.0,
+        t_infer=0.123456789012345678,
+        e_total=1.0000000000000002e-6,
+        e_op=9.999999999999999e-7,
+        e_trans=1.5e-13,
+        e_idle=4.9e-14,
+        z_active_idle=0,
+        n_rail_switches=2,
+        feasible=True,
+        solver_stats={"dp_calls": 17, "lambda_star": 0.007,
+                      "nested": {"wall_time_s": 0.25}},
+    )
+    once = PowerSchedule.from_json(sched.to_json())
+    twice = PowerSchedule.from_json(once.to_json())
+    for restored in (once, twice):
+        assert restored == sched                  # full dataclass equality
+        assert isinstance(restored.rails, tuple)
+        assert isinstance(restored.domains, tuple)
+        assert all(isinstance(v, tuple)
+                   for v in restored.layer_voltages)
+        assert restored.layer_voltages[1][2] == V_GATED
+        assert restored.solver_stats["nested"]["wall_time_s"] == 0.25
+    assert once.program() == sched.program()
+    assert once.slack == sched.slack
+
+
+@pytest.mark.parametrize("policy", ["pfdnn", "greedy_gating",
+                                    "baseline"])
+def test_schedule_json_roundtrip_compiled(policy):
+    """Compiled artifacts (solver_stats included) survive the round
+    trip with full equality."""
+    specs = edge_network("squeezenet1.1")
+    rate = max_rate("squeezenet1.1") * 0.9
+    sched = compile_power_schedule(
+        specs, rate, cfg=OrchestratorConfig(policy=policy,
+                                            n_max_rails=2),
+        network="sqz")
+    restored = PowerSchedule.from_json(sched.to_json())
+    assert restored == sched
+    _assert_same_schedule(restored, sched)

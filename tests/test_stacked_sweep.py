@@ -301,6 +301,39 @@ except ImportError:                                  # pragma: no cover
     pass
 
 
+def test_aborted_run_evicts_member_stacks():
+    """A fleet that dies mid-round (backend error, interrupt) must not
+    strand its uid-keyed member stacks in a possibly store-owned
+    StackCaches — no later run can ever hit those keys."""
+    from repro.core.backend import NumpyBackend, StackCaches
+    from repro.core.rails import StackedSweep, run_stacked_sweeps
+
+    class Boom(Exception):
+        pass
+
+    class FailingBackend(NumpyBackend):
+        def __init__(self):
+            self.calls = 0
+
+        def dp_multi_stacked(self, *args, **kwargs):
+            self.calls += 1
+            if self.calls >= 2:
+                raise Boom()
+            return super().dp_multi_stacked(*args, **kwargs)
+
+    inst = _MasterInstance(0, n_layers=4, n_levels=4,
+                           thresh_frac=0.5, tie_energies=False)
+    caches = StackCaches()
+    sweep = StackedSweep(
+        all_rail_subsets(inst.levels, 3),
+        lambda idx, s, hint=None: StackedLambdaTask(
+            idx, s, inst.problem(s)))
+    with pytest.raises(Boom):
+        run_stacked_sweeps([sweep], backend=FailingBackend(),
+                           caches=caches)
+    assert caches.member_stacks == {}
+
+
 # ------------------------------------------ end-to-end + golden pins
 
 def _compile(network, frac, n_rails, policy, **cfg_kwargs):
