@@ -1,0 +1,110 @@
+"""CI smoke for the goal-driven compile API: one network compiled
+under each goal type, on the chosen backend.
+
+Asserts (no timing):
+  - ``MinEnergy`` reproduces the frozen golden for its config (the
+    default path is unchanged by the goal redesign);
+  - ``MinLatency`` respects its energy budget exactly (zero-slack
+    artifact, budget is the binding constraint);
+  - ``ParetoFront`` emits the same per-point schedules as independent
+    MinEnergy compiles at those deadlines;
+  - provably impossible goals come back as structured
+    ``InfeasibleGoal`` values with the right reason.
+
+Usage:
+    PYTHONPATH=src python benchmarks/goals_smoke.py [--backend numpy|jax]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+try:
+    from benchmarks.common import max_rate
+except ImportError:  # direct script run: benchmarks/ is sys.path[0]
+    from common import max_rate
+
+from repro.core import (
+    InfeasibleGoal,
+    MinEnergy,
+    MinLatency,
+    OrchestratorConfig,
+    ParetoFront,
+    compile as compile_goal,
+)
+from repro.core.goals import REASON_BUDGET, REASON_DEADLINE
+from repro.models.edge_cnn import edge_network
+
+GOLDEN_PATH = (pathlib.Path(__file__).parent.parent / "tests" /
+               "golden" / "pipeline.json")
+NETWORK = "squeezenet1.1"
+FRAC, N_RAILS, POLICY = 0.9, 2, "pfdnn"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"))
+    args = ap.parse_args()
+    tic = time.perf_counter()
+
+    specs = edge_network(NETWORK)
+    rate = max_rate(NETWORK) * FRAC
+    cfg = OrchestratorConfig(policy=POLICY, n_max_rails=N_RAILS,
+                             backend=args.backend)
+    golden = json.loads(GOLDEN_PATH.read_text())[
+        f"{NETWORK}|{FRAC}|{N_RAILS}|{POLICY}"]
+
+    # -- MinEnergy: must equal the golden
+    me = compile_goal(specs, MinEnergy(rate_hz=rate), cfg=cfg,
+                      network=NETWORK)
+    assert abs(me.e_total - golden["e_total"]) <= \
+        1e-9 * abs(golden["e_total"]), \
+        f"MinEnergy drifted from golden: {me.e_total} vs " \
+        f"{golden['e_total']}"
+    assert [list(v) for v in me.layer_voltages] == \
+        golden["layer_voltages"], "MinEnergy voltages drifted"
+    print(f"MinEnergy == golden: E={me.e_total:.6g}  "
+          f"binding={me.binding_constraint}")
+
+    # -- MinLatency: budget respected, zero-slack artifact
+    budget = (me.e_op + me.e_trans) * 1.3
+    ml = compile_goal(specs, MinLatency(energy_budget_j=budget),
+                      cfg=cfg, network=NETWORK)
+    assert ml.e_op + ml.e_trans <= budget, "budget exceeded"
+    assert ml.e_idle == 0.0 and ml.t_max == ml.t_infer
+    assert ml.binding_constraint == "energy_budget"
+    print(f"MinLatency within budget: E={ml.e_op + ml.e_trans:.6g} "
+          f"<= {budget:.6g}  T={ml.t_infer * 1e3:.3f}ms")
+
+    # -- ParetoFront: per-point parity vs independent compiles
+    front = compile_goal(specs, ParetoFront(n_points=3), cfg=cfg,
+                         network=NETWORK)
+    for p in front.points:
+        solo = compile_goal(specs, MinEnergy(deadline_s=p.deadline_s),
+                            cfg=cfg, network=NETWORK)
+        if p.feasible:
+            assert p.schedule.e_total == solo.e_total and \
+                p.schedule.layer_voltages == solo.layer_voltages, \
+                f"frontier point {p.deadline_s} != solo compile"
+        else:
+            assert isinstance(solo, InfeasibleGoal)
+    print(f"ParetoFront == {len(front.points)} solo compiles")
+
+    # -- structured infeasibility
+    inf_t = compile_goal(specs, MinEnergy(deadline_s=1e-7), cfg=cfg,
+                         network=NETWORK)
+    assert isinstance(inf_t, InfeasibleGoal) and \
+        inf_t.reason == REASON_DEADLINE
+    inf_e = compile_goal(specs, MinLatency(energy_budget_j=1e-12),
+                         cfg=cfg, network=NETWORK)
+    assert isinstance(inf_e, InfeasibleGoal) and \
+        inf_e.reason == REASON_BUDGET
+    print(f"goals smoke OK ({time.perf_counter() - tic:.1f}s, "
+          f"backend={args.backend or 'default'})")
+
+
+if __name__ == "__main__":
+    main()

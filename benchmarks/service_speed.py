@@ -14,11 +14,16 @@ of deployment points (one accelerator, several networks × rates):
     the schedule cache cleared: full solves through warm
     characterization / master / transition / lane-store artifacts;
   - ``warm_cached`` — repeat traffic: the persistent schedule cache
-    answers every request.
+    answers every request;
+  - ``pareto_frontier`` — one ``ParetoFront(deadlines=...)`` compile
+    (all points co-scheduled as stacked sweeps on a fresh store) vs N
+    independent cold ``compile_power_schedule`` calls at the same
+    deadlines: the goal API's frontier row.
 
 Every variant must emit schedules identical to ``cold_sequential``
 (rails, per-layer voltages, energies) — recorded as ``identical`` in
-the comparison block alongside the speedups.
+the comparison block alongside the speedups; the frontier's per-point
+schedules must equal the independent compiles.
 
 Usage:
     PYTHONPATH=src python benchmarks/service_speed.py \
@@ -42,7 +47,11 @@ try:
 except ImportError:  # direct script run: benchmarks/ is sys.path[0]
     from common import max_rate, timed
 
-from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.core import (
+    OrchestratorConfig,
+    ParetoFront,
+    compile_power_schedule,
+)
 from repro.models.edge_cnn import edge_network
 from repro.service import CompileRequest, CompileService
 
@@ -61,6 +70,10 @@ SMOKE_FLEET = [
     ("mobilenetv3-small", 0.85, 2),
 ]
 POLICY = "pfdnn"
+# frontier row: deadlines as fractions of one network's max rate
+PARETO_NETWORK = "squeezenet1.1"
+PARETO_FRACS = (0.9, 0.7, 0.5, 0.35)
+SMOKE_PARETO_FRACS = (0.9, 0.5)
 
 
 def build_requests(fleet, backend: str | None) -> list[CompileRequest]:
@@ -148,6 +161,38 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
                               "identical": same_schedules(out_c, ref)}
     results["store_stats"] = svc.store.stats()
 
+    # -- Pareto frontier: one goal-API compile (stacked sweeps sharing
+    # one context + store) vs N independent cold compiles
+    fracs = SMOKE_PARETO_FRACS if len(fleet) < 3 else PARETO_FRACS
+    n_rails = fleet[0][2]
+    specs = edge_network(PARETO_NETWORK)
+    deadlines = tuple(1.0 / (max_rate(PARETO_NETWORK) * f)
+                      for f in fracs)
+    cfg = OrchestratorConfig(policy=POLICY, n_max_rails=n_rails,
+                             backend=backend)
+
+    def frontier_compile():
+        return CompileService().compile(
+            specs, cfg=cfg, network=PARETO_NETWORK,
+            goal=ParetoFront(deadlines=deadlines))
+
+    def independent_points():
+        return [compile_power_schedule(specs, 1.0 / d, cfg=cfg,
+                                       network=PARETO_NETWORK)
+                for d in deadlines]
+
+    front, wall_f, walls_f = best_of(frontier_compile)
+    solo, wall_s, walls_s = best_of(independent_points)
+    results["pareto_frontier"] = {
+        "n_points": len(deadlines),
+        "wall_s": wall_f, "wall_all_s": walls_f,
+        "independent_wall_s": wall_s,
+        "independent_wall_all_s": walls_s,
+        "identical": same_schedules(
+            [p.schedule if p.feasible else None
+             for p in front.points], solo),
+    }
+
     base = results["cold_sequential"]["wall_s"]
     results["comparison"] = {
         "speedup_cold_many_stacked": base
@@ -158,9 +203,12 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
         "speedup_warm_cached": base / results["warm_cached"]["wall_s"],
         "stacked_vs_unstacked": results["cold_many_unstacked"]["wall_s"]
         / results["cold_many_stacked"]["wall_s"],
+        "speedup_pareto_vs_independent":
+        results["pareto_frontier"]["independent_wall_s"]
+        / results["pareto_frontier"]["wall_s"],
         "identical": all(results[k]["identical"] for k in (
             "cold_many_unstacked", "cold_many_stacked", "warm_solve",
-            "warm_cached")),
+            "warm_cached", "pareto_frontier")),
     }
     for key, val in results["comparison"].items():
         print(f"{key}: {val if isinstance(val, bool) else f'{val:.2f}x'}")

@@ -1,10 +1,21 @@
 """Quickstart: compile a PF-DNN power schedule for SqueezeNet at 40 fps
 and inspect it.
 
+Compilation is goal-driven: the objective is a first-class value
+(``MinEnergy`` here — the paper's min-energy-under-deadline scenario;
+see examples/energy_budget.py for the dual and the Pareto frontier).
+An impossible goal comes back as a structured ``InfeasibleGoal``
+instead of ``None``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.core import (
+    InfeasibleGoal,
+    MinEnergy,
+    OrchestratorConfig,
+    compile,
+)
 from repro.hw.edge40nm import EDGE40NM_DEFAULT
 from repro.models.edge_cnn import edge_network
 from repro.perfmodel import characterize_network, plan_banks
@@ -17,21 +28,27 @@ print(f"workload: {len(specs)} layers, "
       f"{sum(s.weight_bytes for s in specs)/1e6:.2f} MB weights")
 
 # 2. compile: unified DVFS + power-gating schedule under a 25 ms deadline
+goal = MinEnergy(rate_hz=40.0)
 for policy in ("baseline", "greedy_gating", "pfdnn"):
-    sched = compile_power_schedule(
-        specs, target_rate_hz=40.0,
-        cfg=OrchestratorConfig(policy=policy),
-        network="squeezenet1.1")
+    sched = compile(specs, goal,
+                    cfg=OrchestratorConfig(policy=policy),
+                    network="squeezenet1.1")
     print(sched.summary())
 
 # 3. the compiled artifact: per-anchor register writes for the pg_manager
-sched = compile_power_schedule(
-    specs, 40.0, cfg=OrchestratorConfig(policy="pfdnn"),
-    network="squeezenet1.1")
+sched = compile(specs, goal, cfg=OrchestratorConfig(policy="pfdnn"),
+                network="squeezenet1.1")
+assert not isinstance(sched, InfeasibleGoal)   # 40 fps is attainable
 prog = sched.program()
 print(f"\ncompiled program: {len(prog)} register writes; first 6:")
 for op in prog[:6]:
     print("  ", op)
+
+# an impossible deadline is a structured result, not a bare None
+impossible = compile(specs, MinEnergy(rate_hz=1e6),
+                     cfg=OrchestratorConfig(policy="pfdnn"),
+                     network="squeezenet1.1")
+print(f"\n{impossible.summary()}")
 
 # 4. execute one interval on the power runtime and verify the ledger
 costs = characterize_network(specs, EDGE40NM_DEFAULT)

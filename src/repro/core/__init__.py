@@ -13,7 +13,11 @@ Public API:
   - solve_ilp                                — §4.3 exact oracle
   - solve_greedy                             — §6 marginal-utility baseline
   - select_rails / evenly_spaced_rails       — §6.3 rail selection
+  - compile / MinEnergy / MinLatency / ParetoFront — goal-driven entry
+    (deadline primal, energy-budget dual via solve_budget_dp, stacked
+    Pareto frontiers; InfeasibleGoal for provably impossible goals)
   - compile_power_schedule / PowerSchedule   — §3.3 compiler driver
+    (back-compat MinEnergy wrapper)
 """
 
 from repro.core.backend import (
@@ -24,8 +28,18 @@ from repro.core.backend import (
 )
 from repro.core.context import CompilationContext
 from repro.core.edge_builder import build_edge_problem, build_idle_model
+from repro.core.goals import (
+    Goal,
+    InfeasibleGoal,
+    MinEnergy,
+    MinLatency,
+    ParetoFront,
+    ParetoFrontier,
+    ParetoPoint,
+    as_goal,
+)
 from repro.core.greedy import min_energy_path, solve_greedy
-from repro.core.ilp import IlpBlowupError, solve_ilp
+from repro.core.ilp import IlpBlowupError, solve_ilp, solve_ilp_min_latency
 from repro.core.lambda_dp import (
     SolverStats,
     StackedLambdaTask,
@@ -36,10 +50,12 @@ from repro.core.lambda_dp import (
     kbest_paths,
     kbest_paths_multi,
     min_time_path,
+    solve_budget_dp,
     solve_lambda_dp,
 )
 from repro.core.orchestrator import (
     OrchestratorConfig,
+    compile,
     compile_power_schedule,
     get_policy,
     policy_names,
@@ -48,6 +64,8 @@ from repro.core.orchestrator import (
 from repro.core.problem import IdleModel, ScheduleProblem, StateCost
 from repro.core.pruning import prune_problem, unprune_path
 from repro.core.rails import (
+    MinEnergySelection,
+    MinLatencySelection,
     StackedSweep,
     all_rail_subsets,
     evenly_spaced_rails,
@@ -71,7 +89,10 @@ def __getattr__(name: str):
 __all__ = [
     "ScheduleProblem", "StateCost", "IdleModel",
     "CompilationContext", "register_policy", "get_policy",
-    "solve_lambda_dp", "dp_paths", "dp_best_path", "kbest_paths",
+    "Goal", "MinEnergy", "MinLatency", "ParetoFront", "as_goal",
+    "InfeasibleGoal", "ParetoFrontier", "ParetoPoint",
+    "solve_lambda_dp", "solve_budget_dp",
+    "dp_paths", "dp_best_path", "kbest_paths",
     "kbest_paths_multi",
     "dp_paths_multi", "dp_paths_multi_weighted",
     "min_time_path",
@@ -79,13 +100,18 @@ __all__ = [
     "get_backend", "available_backends",
     "BucketStack", "StackCaches",
     "StackedSweep", "run_stacked_sweeps",
+    "MinEnergySelection", "MinLatencySelection",
     "refine_candidates", "refine_path",
     "prune_problem", "unprune_path",
-    "solve_ilp", "IlpBlowupError",
+    "solve_ilp", "solve_ilp_min_latency", "IlpBlowupError",
     "solve_greedy", "min_energy_path",
     "select_rails", "select_rails_stacked", "evenly_spaced_rails",
     "all_rail_subsets",
     "build_edge_problem", "build_idle_model",
-    "compile_power_schedule", "OrchestratorConfig", "POLICIES",
+    # NOTE: the goal-driven entry `compile` is importable explicitly
+    # (`from repro.core import compile`) but deliberately left out of
+    # __all__ so `from repro.core import *` never shadows the builtin
+    "compile_power_schedule",
+    "OrchestratorConfig", "POLICIES",
     "PowerSchedule",
 ]

@@ -74,16 +74,29 @@ class CompilationContext:
     none of these depend on the deadline) warm-starts in microseconds.
     """
 
-    def __init__(self, specs: Sequence[LayerSpec], target_rate_hz: float,
+    def __init__(self, specs: Sequence[LayerSpec],
+                 target_rate_hz: float | None = None,
                  *, acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
                  network: str = "net",
                  e_switch_nom: float | None = None,
-                 store=None):
+                 store=None, deadline_s: float | None = None):
+        if target_rate_hz is not None and deadline_s is not None:
+            raise ValueError(
+                "give at most one of target_rate_hz / deadline_s")
         self.specs = list(specs)
         self.acc = acc
         self.network = network
         self.store = store
-        self.t_max = 1.0 / target_rate_hz
+        # the *default* deadline for problem_for(t_max=None).  None of
+        # the context's artifacts (characterization, masters,
+        # transitions, bounds) depend on it, so one context serves every
+        # goal and deadline of its network — a deadline-free context
+        # (both None) just requires callers to pass t_max explicitly.
+        if deadline_s is not None:
+            self.t_max: float | None = float(deadline_s)
+        else:
+            self.t_max = (1.0 / target_rate_hz
+                          if target_rate_hz is not None else None)
         self.levels: tuple[float, ...] = acc.levels()
         self.transition_model = acc.transitions(e_switch_nom)
         # content keys (deterministic digests of frozen-dataclass reprs):
@@ -221,9 +234,19 @@ class CompilationContext:
         return hit
 
     # -- per-subset problem views -------------------------------------
+    def _resolve_t_max(self, t_max: float | None) -> float:
+        if t_max is not None:
+            return t_max
+        if self.t_max is None:
+            raise ValueError(
+                "deadline-free CompilationContext: pass t_max= to "
+                "problem_for (or build the context with a rate/deadline)")
+        return self.t_max
+
     def problem_for(self, rails: Sequence[float], *, gating: bool,
                     allow_sleep: bool, via_master: bool = True,
-                    materialize_states: bool = True) -> ScheduleProblem:
+                    materialize_states: bool = True,
+                    t_max: float | None = None) -> ScheduleProblem:
         """Derive the rail subset's :class:`ScheduleProblem` as a slice
         of the master table, with transition matrices sliced from the
         content-keyed master cache (nothing is recomputed per subset).
@@ -237,15 +260,22 @@ class CompilationContext:
         (``layer_states=None``): solvers and reporting only touch the
         injected master-slice arrays, skipping the per-state Python
         list build — the rail sweep's per-subset hot path.
+
+        ``t_max`` overrides the context's default deadline (goal-driven
+        compiles build problems for any deadline — or ``0.0``, the dual
+        solver's "no deadline, no idle interval" form — from one
+        context; the master tables and transition caches are
+        deadline-independent).
         """
         rails = tuple(rails)
+        t_max = self._resolve_t_max(t_max)
         if not via_master and gating not in self._master_volts:
             layers = [layer_states(c, i, self.acc, self.plan, rails,
                                    gating=gating)
                       for i, c in enumerate(self.costs)]
             return ScheduleProblem(
                 layer_states=layers,
-                t_max=self.t_max,
+                t_max=t_max,
                 idle=build_idle_model(self.acc, self.plan.n_banks,
                                       gating=gating,
                                       allow_sleep=allow_sleep),
@@ -273,7 +303,7 @@ class CompilationContext:
             layers = None
         problem = ScheduleProblem(
             layer_states=layers,
-            t_max=self.t_max,
+            t_max=t_max,
             idle=build_idle_model(self.acc, self.plan.n_banks,
                                   gating=gating, allow_sleep=allow_sleep),
             transition_model=self.transition_model,
@@ -305,19 +335,39 @@ class CompilationContext:
         problem._trans_sel = idx
         return problem
 
+    def _min_op_bound(self, arrays: list[np.ndarray],
+                      rails: tuple[float, ...], gating: bool) -> float:
+        """Σ_i min over the subset's states of a per-layer master
+        array — the shared reduction behind both sweep bounds (inf for
+        an empty subset)."""
+        total = 0.0
+        for i in range(len(arrays)):
+            idx = self._subset_indices(gating, i, rails)
+            if idx.size == 0:
+                return float("inf")
+            total += float(arrays[i][idx].min())
+        return total
+
     def min_e_op_bound(self, rails: Sequence[float], *,
                        gating: bool = True) -> float:
         """Cheap lower bound on any schedule's E_total under ``rails``:
         Σ_i min_s E_op (transitions and idle are non-negative).  Used by
         the sweep to cut subsets that cannot beat the incumbent without
-        building or solving them."""
+        building or solving them — and by the dual sweep to skip
+        subsets that provably cannot fit the energy budget."""
         rails = tuple(rails)
         self._master_arrays(gating)
-        e_op = self._master_e_op[gating]
-        total = 0.0
-        for i in range(len(e_op)):
-            idx = self._subset_indices(gating, i, rails)
-            if idx.size == 0:
-                return float("inf")
-            total += float(e_op[i][idx].min())
-        return total
+        return self._min_op_bound(self._master_e_op[gating], rails,
+                                  gating)
+
+    def min_t_op_bound(self, rails: Sequence[float], *,
+                       gating: bool = True) -> float:
+        """Cheap lower bound on any schedule's T_infer under ``rails``:
+        Σ_i min_s t_op (transition latencies are non-negative).  The
+        dual (energy-budget) sweep cuts subsets whose bound already
+        exceeds the fastest incumbent; on the full level set it anchors
+        infeasibility reporting and the frontier's deadline grid."""
+        rails = tuple(rails)
+        self._master_arrays(gating)
+        return self._min_op_bound(self._master_t_op[gating], rails,
+                                  gating)

@@ -1,22 +1,32 @@
 """Top-level compiler driver (paper §3.3 + §6 policy definitions).
 
-``compile_power_schedule`` runs the staged PF-DNN pipeline:
+``compile`` is the goal-driven entry point: objectives and constraints
+are first-class :mod:`repro.core.goals` values —
+
+  compile(specs, MinEnergy(rate_hz=40.0))       # the paper's primal
+  compile(specs, MinLatency(energy_budget_j=b)) # the dual
+  compile(specs, ParetoFront(n_points=8))       # the whole frontier
+
+It runs the staged PF-DNN pipeline:
 
   characterize layers → bank plan → master state arrays (CompilationContext)
   → policy lookup                                       (policy registry)
-  → rail selection: the subset-stacked sweep (default) groups live
-    rail subsets by padded bucket and advances every subset one
-    λ-search round per stacked backend call — each subset runs
-    slice view → prune → batched multi-λ DP → refinement as a
-    resumable state machine on the pluggable array backend
-    (core.backend); ``stack_subsets=False`` / ``sweep_workers=N``
-    restore the legacy per-subset loop / thread-pool sweep
-  → emit the PowerSchedule
+  → goal-aware rail selection: the subset-stacked sweep (default)
+    groups live rail subsets by padded bucket and advances every
+    subset one λ-search round per stacked backend call; MinEnergy
+    bisects the deadline axis of the λ envelope, MinLatency the
+    energy axis, and ParetoFront co-schedules one sweep per deadline
+    through :func:`~repro.core.rails.run_stacked_sweeps`
+  → emit the PowerSchedule (goal + binding constraint recorded), a
+    structured InfeasibleGoal, or a ParetoFrontier
 
-The per-policy solve strategies live in :mod:`repro.core.policies`; the
-shared precomputation lives in :mod:`repro.core.context`; the stacked
-round scheduler lives in :mod:`repro.core.rails`.  This module is only
-the driver: validate, build the context, dispatch.
+``compile_power_schedule(specs, target_rate_hz)`` remains as a thin
+back-compat wrapper (``MinEnergy(rate_hz=...)``, bit-identical results,
+``None`` for infeasible).  The per-policy solve strategies live in
+:mod:`repro.core.policies`; the shared precomputation lives in
+:mod:`repro.core.context`; the stacked round scheduler lives in
+:mod:`repro.core.rails`.  This module is only the driver: validate,
+build the context, dispatch.
 """
 
 from __future__ import annotations
@@ -24,12 +34,27 @@ from __future__ import annotations
 from typing import Sequence
 
 from repro.core.context import CompilationContext
+from repro.core.goals import (
+    REASON_BUDGET,
+    REASON_DEADLINE,
+    REASON_POLICY,
+    Goal,
+    InfeasibleGoal,
+    MinEnergy,
+    MinLatency,
+    ParetoFront,
+    ParetoFrontier,
+    ParetoPoint,
+    as_goal,
+)
 from repro.core.policies import (          # noqa: F401  (re-exports)
     OrchestratorConfig,
     get_policy,
     policy_names,
     register_policy,
+    stacked_compile_job,
 )
+from repro.core.rails import accepts_param, run_stacked_sweeps
 from repro.core.schedule import PowerSchedule
 from repro.hw.edge40nm import Edge40nmAccelerator, EDGE40NM_DEFAULT
 from repro.perfmodel.layer_costs import LayerSpec
@@ -44,6 +69,54 @@ def __getattr__(name: str):
         f"module {__name__!r} has no attribute {name!r}")
 
 
+def compile(
+    specs: Sequence[LayerSpec],
+    goal: Goal,
+    *,
+    cfg: OrchestratorConfig | None = None,
+    acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
+    network: str | None = None,
+    ctx: CompilationContext | None = None,
+    store=None,
+) -> PowerSchedule | InfeasibleGoal | ParetoFrontier:
+    """Compile a deployment power schedule for an explicit goal.
+
+    Returns the :class:`PowerSchedule` (goal and binding constraint
+    recorded on the artifact), a structured :class:`InfeasibleGoal`
+    when the goal is provably impossible (deadline below the network's
+    min-time, or budget below its min-energy), or — for
+    :class:`ParetoFront` goals — a :class:`ParetoFrontier` whose
+    per-point schedules are identical to independent MinEnergy
+    compiles at those deadlines.
+
+    ``ctx`` reuses a prebuilt :class:`CompilationContext` across
+    policies, goals, *and deadlines* of the same network (none of the
+    context's artifacts depend on the deadline); it must describe the
+    same network, accelerator, and transition energy — mismatches
+    raise ``ValueError``.  ``store`` plugs a process-wide artifact
+    store (:class:`repro.service.ArtifactStore`) into a freshly built
+    context.
+    """
+    goal = as_goal(goal)
+    cfg = cfg or OrchestratorConfig()
+    if ctx is None:
+        ctx = CompilationContext(
+            specs, acc=acc,
+            network=network if network is not None else "net",
+            e_switch_nom=cfg.e_switch_nom, store=store,
+            deadline_s=goal.deadline if isinstance(goal, MinEnergy)
+            else None)
+    else:
+        _check_reused_context(ctx, specs, acc, cfg, network=network,
+                              store=store)
+    if isinstance(goal, ParetoFront):
+        return _compile_frontier(ctx, goal, cfg)
+    sched = _dispatch(ctx, cfg, goal)
+    if sched is None:
+        return infeasible_result(goal, ctx)
+    return sched
+
+
 def compile_power_schedule(
     specs: Sequence[LayerSpec],
     target_rate_hz: float,
@@ -54,44 +127,122 @@ def compile_power_schedule(
     ctx: CompilationContext | None = None,
     store=None,
 ) -> PowerSchedule | None:
-    """Compile a deployment power schedule (once per deployment, §3.3).
+    """Back-compat wrapper: compile the paper's scenario — min energy at
+    a periodic inference rate (``MinEnergy(rate_hz=...)``, §3.3) — and
+    keep the legacy ``None`` for an infeasible deadline.  Bit-identical
+    to the pre-goal compiler."""
+    result = compile(specs, MinEnergy(rate_hz=target_rate_hz), cfg=cfg,
+                     acc=acc, network=network, ctx=ctx, store=store)
+    return None if isinstance(result, InfeasibleGoal) else result
 
-    Returns None when the deadline 1/rate is infeasible even at V_max
-    (beyond the model's maximum feasible inference rate).
 
-    ``ctx`` reuses a prebuilt :class:`CompilationContext` across
-    policies of the same deployment point (characterization, bank plan,
-    master tables, and transition caches are shared instead of being
-    silently rebuilt per call); it must describe the same network,
-    rate, accelerator, and transition energy — mismatches raise
-    ``ValueError``.  ``store`` plugs a process-wide artifact store
-    (:class:`repro.service.ArtifactStore`) into a freshly built
-    context, warm-starting it from — and publishing it to — the
-    content-addressed process caches.
-    """
-    cfg = cfg or OrchestratorConfig()
+def _dispatch(ctx: CompilationContext, cfg: OrchestratorConfig,
+              goal: Goal) -> PowerSchedule | None:
+    """Run the policy for one point goal (MinEnergy / MinLatency)."""
     policy = get_policy(cfg.policy)
-    if ctx is None:
-        ctx = CompilationContext(
-            specs, target_rate_hz, acc=acc,
-            network=network if network is not None else "net",
-            e_switch_nom=cfg.e_switch_nom, store=store)
-    else:
-        _check_reused_context(ctx, specs, target_rate_hz, acc, cfg,
-                              network=network, store=store)
+    if _accepts_goal(policy):
+        return policy(ctx, cfg, goal=goal)
+    # legacy custom policy (ctx, cfg): it reads the deadline off the
+    # context, so the context must actually be built at this goal's
+    # deadline — a silent mismatch would emit a wrong-deadline schedule
+    if not isinstance(goal, MinEnergy):
+        raise ValueError(
+            f"policy {cfg.policy!r} does not accept goal=; only "
+            f"MinEnergy goals can run through the legacy (ctx, cfg) "
+            f"signature")
+    if ctx.t_max != goal.deadline:
+        raise ValueError(
+            f"policy {cfg.policy!r} does not accept goal= and the "
+            f"reused context's deadline {ctx.t_max} differs from the "
+            f"goal's {goal.deadline}; build a matching context or add "
+            f"a goal parameter to the policy")
     return policy(ctx, cfg)
+
+
+def infeasible_result(goal: Goal, ctx: CompilationContext
+                      ) -> InfeasibleGoal:
+    """Structured infeasible result for a point goal.  The reason is
+    honest: the provably-impossible reasons are claimed only when the
+    constraint actually lies below the network's bound; otherwise the
+    policy simply found no schedule (heuristics can miss, the ILP can
+    time out) and :data:`~repro.core.goals.REASON_POLICY` says so —
+    renegotiating the constraint may not be the fix.  Either way the
+    bound ships in ``detail``."""
+    if isinstance(goal, MinLatency):
+        e_bound = ctx.min_e_op_bound(ctx.levels)
+        return InfeasibleGoal(
+            reason=REASON_BUDGET if goal.energy_budget_j < e_bound
+            else REASON_POLICY,
+            goal=goal.describe(),
+            detail={"energy_budget_j": goal.energy_budget_j,
+                    "min_energy_lower_bound_j": e_bound},
+            network=ctx.network)
+    t_bound = ctx.min_t_op_bound(ctx.levels)
+    return InfeasibleGoal(
+        reason=REASON_DEADLINE if goal.deadline < t_bound
+        else REASON_POLICY,
+        goal=goal.describe(),
+        detail={"deadline_s": goal.deadline,
+                "min_time_lower_bound_s": t_bound},
+        network=ctx.network)
+
+
+def _compile_frontier(ctx: CompilationContext, goal: ParetoFront,
+                      cfg: OrchestratorConfig) -> ParetoFrontier:
+    """Frontier compile: one MinEnergy point per deadline, co-scheduled
+    as separate :class:`~repro.core.rails.StackedSweep`s through ONE
+    round scheduler, so masters / transitions / subset lanes (and the
+    artifact store, when present) are shared and the curve costs little
+    more than one compile.  Each sweep's admission order, cuts, and
+    hints read only its own state, so every point's schedule is
+    identical to an independent MinEnergy compile at that deadline."""
+    deadlines = goal.resolve_deadlines(ctx.min_t_op_bound(ctx.levels))
+    caches = ctx.store.stack_caches if ctx.store is not None else None
+    # duplicate deadlines (explicit repeats) solve once and fan out
+    results: dict[float, object] = {}
+    jobs = []
+    for deadline in deadlines:
+        if deadline in results:
+            continue
+        sub = MinEnergy(deadline_s=deadline)
+        job = stacked_compile_job(ctx, cfg, caches=caches, goal=sub)
+        if job is None:
+            # non-stackable policy/config: plain per-point compile
+            sched = _dispatch(ctx, cfg, sub)
+            results[deadline] = sched if sched is not None \
+                else infeasible_result(sub, ctx)
+        else:
+            results[deadline] = None           # placeholder: in a job
+            jobs.append((deadline, sub, job))
+    if jobs:
+        fleet = run_stacked_sweeps([job.sweep for _, _, job in jobs],
+                                   backend=cfg.backend, caches=caches)
+        for deadline, sub, job in jobs:
+            sched = job.emit(fleet)
+            results[deadline] = sched if sched is not None \
+                else infeasible_result(sub, ctx)
+    return ParetoFrontier(
+        network=ctx.network,
+        points=[ParetoPoint(d, results[d]) for d in deadlines])
+
+
+def _accepts_goal(policy) -> bool:
+    """True when the policy declares a ``goal`` parameter (or **kwargs);
+    legacy custom policies keep the plain ``(ctx, cfg)`` signature."""
+    return accepts_param(policy, "goal")
 
 
 def _check_reused_context(ctx: CompilationContext,
                           specs: Sequence[LayerSpec],
-                          target_rate_hz: float,
                           acc: Edge40nmAccelerator,
                           cfg: OrchestratorConfig, *,
                           network: str | None, store) -> None:
-    """A reused context must match the compile request exactly — a
-    silently mismatched context would emit a schedule for the wrong
-    network, deadline, or transition energies (or bypass the caller's
-    artifact store)."""
+    """A reused context must match the compile request — a silently
+    mismatched context would emit a schedule for the wrong network or
+    transition energies (or bypass the caller's artifact store).  The
+    deadline is deliberately NOT checked: none of the context's
+    artifacts depend on it, so one context serves every goal, rate,
+    and frontier point of its network."""
     if network is not None and network != ctx.network:
         raise ValueError(
             f"ctx= was built for network label {ctx.network!r} but the "
@@ -107,11 +258,6 @@ def _check_reused_context(ctx: CompilationContext,
         raise ValueError(
             "ctx= was built for a different network (layer specs "
             "differ); build a new CompilationContext")
-    if ctx.t_max != 1.0 / target_rate_hz:
-        raise ValueError(
-            f"ctx= was built for deadline {ctx.t_max} s but the request "
-            f"asks for {1.0 / target_rate_hz} s; build a new "
-            "CompilationContext")
     if acc != ctx.acc:
         raise ValueError("ctx= was built for a different accelerator")
     if ctx.transition_model != acc.transitions(cfg.e_switch_nom):

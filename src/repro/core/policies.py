@@ -36,19 +36,25 @@ import numpy as np
 
 from repro.core.backend import get_backend
 from repro.core.context import CompilationContext
+from repro.core.goals import MinEnergy, MinLatency
 from repro.core.greedy import solve_greedy
-from repro.core.ilp import solve_ilp
+from repro.core.ilp import solve_ilp, solve_ilp_min_latency
 from repro.core.lambda_dp import StackedLambdaTask, solve_lambda_dp
 from repro.core.problem import ScheduleProblem
 from repro.core.pruning import prune_problem, unprune_path
 from repro.core.rails import (
+    MinLatencySelection,
     StackedSweep,
     all_rail_subsets,
     evenly_spaced_rails,
     run_stacked_sweeps,
     select_rails,
 )
-from repro.core.refinement import refine_candidates, refine_rounds
+from repro.core.refinement import (
+    budget_refine_rounds,
+    refine_candidates,
+    refine_rounds,
+)
 from repro.core.schedule import PowerSchedule
 
 
@@ -97,10 +103,22 @@ class OrchestratorConfig:
     stack_max_live: int | None = None
 
 
-PolicyFn = Callable[[CompilationContext, OrchestratorConfig],
-                    PowerSchedule | None]
+PolicyFn = Callable[..., PowerSchedule | None]
 
 _REGISTRY: dict[str, PolicyFn] = {}
+
+
+def _default_goal(ctx: CompilationContext, goal):
+    """Resolve a policy's goal: an explicit goal value wins; otherwise
+    the context's default deadline is today's MinEnergy behaviour
+    (legacy direct policy calls)."""
+    if goal is not None:
+        return goal
+    if ctx.t_max is None:
+        raise ValueError(
+            "no goal given and the CompilationContext is deadline-free; "
+            "pass goal= (or build the context with a rate/deadline)")
+    return MinEnergy(deadline_s=ctx.t_max)
 
 
 def register_policy(name: str) -> Callable[[PolicyFn], PolicyFn]:
@@ -127,19 +145,38 @@ def policy_names() -> tuple[str, ...]:
 
 def emit_schedule(policy: str, ctx: CompilationContext,
                   problem: ScheduleProblem, result: dict,
-                  stats: dict, *, gating: bool) -> PowerSchedule:
-    """Bind a solver result to the deployable artifact (§3.3 emit)."""
+                  stats: dict, *, gating: bool,
+                  goal=None) -> PowerSchedule:
+    """Bind a solver result to the deployable artifact (§3.3 emit).
+
+    ``goal`` records the compile objective and its binding constraint
+    on the artifact.  Under a :class:`~repro.core.goals.MinLatency`
+    goal the problem is deadline-free (``t_max=0``): the artifact's
+    period is the achieved latency (zero slack, no idle interval) and
+    the energy budget — respected by construction — is the binding
+    constraint, so ``feasible`` is True.
+    """
     volts = [problem.state_voltages(i, s)
              for i, s in enumerate(result["path"])]
     awake = [ctx.plan.awake_banks(i, gating)
              for i in range(problem.n_layers)]
+    t_max = problem.t_max
+    feasible = result["feasible"]
+    goal_desc = None
+    binding = None
+    if goal is not None:
+        goal_desc = goal.describe()
+        binding = goal.binding
+        if isinstance(goal, MinLatency):
+            t_max = result["t_infer"]
+            feasible = True
     return PowerSchedule(
         policy=policy,
         network=ctx.network,
         rails=problem.rails,
         layer_voltages=volts,
         awake_banks=awake,
-        t_max=problem.t_max,
+        t_max=t_max,
         t_infer=result["t_infer"],
         e_total=result["e_total"],
         e_op=result["e_op"],
@@ -147,22 +184,43 @@ def emit_schedule(policy: str, ctx: CompilationContext,
         e_idle=result["e_idle"],
         z_active_idle=result["z"],
         n_rail_switches=result["n_rail_switches"],
-        feasible=result["feasible"],
+        feasible=feasible,
         solver_stats=stats,
+        goal=goal_desc,
+        binding_constraint=binding,
     )
 
 
 # ------------------------------------------------------- fixed policies
 
 def _solve_fixed(policy: str, ctx: CompilationContext,
-                 cfg: OrchestratorConfig, *,
-                 gating: bool) -> PowerSchedule | None:
+                 cfg: OrchestratorConfig, *, gating: bool,
+                 goal=None) -> PowerSchedule | None:
     """V_max-everywhere; with gating, weightless layers also expose an
     RRAM-gated state — the per-layer minimum-energy one IS the gating
-    behaviour (single rail ⇒ no inter-layer coupling to optimize)."""
+    behaviour (single rail ⇒ no inter-layer coupling to optimize).
+
+    Under a MinLatency goal the single meaningful schedule is the same
+    one (V_max is already the fastest point); it either fits the energy
+    budget or the policy is infeasible.
+    """
+    goal = _default_goal(ctx, goal)
     tic = time.perf_counter()
+    if isinstance(goal, MinLatency):
+        problem = ctx.problem_for((ctx.acc.v_max,), gating=gating,
+                                  allow_sleep=gating, via_master=False,
+                                  t_max=0.0)
+        path = [int(np.argmin(problem.op_arrays(i)[1]))
+                for i in range(problem.n_layers)]
+        result = problem.evaluate(path)
+        if result["e_op"] + result["e_trans"] > goal.energy_budget_j:
+            return None
+        return emit_schedule(policy, ctx, problem, result,
+                             {"wall_time_s": time.perf_counter() - tic},
+                             gating=gating, goal=goal)
     problem = ctx.problem_for((ctx.acc.v_max,), gating=gating,
-                              allow_sleep=gating, via_master=False)
+                              allow_sleep=gating, via_master=False,
+                              t_max=goal.deadline)
     path = [int(np.argmin(problem.op_arrays(i)[1]))
             for i in range(problem.n_layers)]
     result = problem.evaluate(path)
@@ -170,48 +228,57 @@ def _solve_fixed(policy: str, ctx: CompilationContext,
         return None
     return emit_schedule(policy, ctx, problem, result,
                          {"wall_time_s": time.perf_counter() - tic},
-                         gating=gating)
+                         gating=gating, goal=goal)
 
 
 @register_policy("baseline")
-def solve_baseline(ctx: CompilationContext,
-                   cfg: OrchestratorConfig) -> PowerSchedule | None:
-    return _solve_fixed("baseline", ctx, cfg, gating=False)
+def solve_baseline(ctx: CompilationContext, cfg: OrchestratorConfig,
+                   goal=None) -> PowerSchedule | None:
+    return _solve_fixed("baseline", ctx, cfg, gating=False, goal=goal)
 
 
 @register_policy("gating")
-def solve_gating_policy(ctx: CompilationContext,
-                        cfg: OrchestratorConfig) -> PowerSchedule | None:
-    return _solve_fixed("gating", ctx, cfg, gating=True)
+def solve_gating_policy(ctx: CompilationContext, cfg: OrchestratorConfig,
+                        goal=None) -> PowerSchedule | None:
+    return _solve_fixed("gating", ctx, cfg, gating=True, goal=goal)
 
 
 # ------------------------------------------------------ greedy policies
 
 def _solve_greedy_policy(policy: str, ctx: CompilationContext,
-                         cfg: OrchestratorConfig, *,
-                         gating: bool) -> PowerSchedule | None:
+                         cfg: OrchestratorConfig, *, gating: bool,
+                         goal=None) -> PowerSchedule | None:
+    goal = _default_goal(ctx, goal)
+    if not isinstance(goal, MinEnergy):
+        raise ValueError(
+            f"policy {policy!r} supports only MinEnergy goals (the "
+            f"marginal-utility ascent is deadline-driven); got "
+            f"{type(goal).__name__} — use a pfdnn-family, fixed, or "
+            f"ilp policy for budget goals")
     tic = time.perf_counter()
     rails = evenly_spaced_rails(ctx.levels, cfg.n_max_rails)
     problem = ctx.problem_for(rails, gating=gating, allow_sleep=gating,
-                              via_master=False)
+                              via_master=False, t_max=goal.deadline)
     result = solve_greedy(problem)
     if result is None:
         return None
     return emit_schedule(policy, ctx, problem, result,
                          {"wall_time_s": time.perf_counter() - tic},
-                         gating=gating)
+                         gating=gating, goal=goal)
 
 
 @register_policy("greedy")
-def solve_greedy_nom(ctx: CompilationContext,
-                     cfg: OrchestratorConfig) -> PowerSchedule | None:
-    return _solve_greedy_policy("greedy", ctx, cfg, gating=False)
+def solve_greedy_nom(ctx: CompilationContext, cfg: OrchestratorConfig,
+                     goal=None) -> PowerSchedule | None:
+    return _solve_greedy_policy("greedy", ctx, cfg, gating=False,
+                                goal=goal)
 
 
 @register_policy("greedy_gating")
-def solve_greedy_gating(ctx: CompilationContext,
-                        cfg: OrchestratorConfig) -> PowerSchedule | None:
-    return _solve_greedy_policy("greedy_gating", ctx, cfg, gating=True)
+def solve_greedy_gating(ctx: CompilationContext, cfg: OrchestratorConfig,
+                        goal=None) -> PowerSchedule | None:
+    return _solve_greedy_policy("greedy_gating", ctx, cfg, gating=True,
+                                goal=goal)
 
 
 # ------------------------------------------------------- pfdnn sweep
@@ -259,7 +326,8 @@ class _PfdnnStackedTask(StackedLambdaTask):
                  problem: ScheduleProblem, cfg: OrchestratorConfig,
                  agg: dict, problems: dict,
                  lam_hint: float | None = None,
-                 lane_key=None, sig_prefix: tuple = (), caches=None):
+                 lane_key=None, sig_prefix: tuple = (), caches=None,
+                 goal=None, prune_cache=None, prune_key=None):
         self._orig = problem
         self._cfg = cfg
         self._agg = agg
@@ -269,21 +337,31 @@ class _PfdnnStackedTask(StackedLambdaTask):
         self._moves: int | None = None
         target = problem
         if cfg.prune:
-            target, pinfo = prune_problem(problem)
+            target, pinfo = prune_problem(problem, cache=prune_cache,
+                                          cache_key=prune_key)
             self._index_maps = pinfo.pop("index_maps")
         super().__init__(
             idx, rails, target, k_candidates=cfg.k_candidates,
             bisect_rel_tol=cfg.bisect_rel_tol if cfg.warm_start else 0.0,
             lam_hint=lam_hint, lane_key=lane_key, sig_prefix=sig_prefix,
-            caches=caches)
+            caches=caches, goal=goal)
         self.stats.backend = get_backend(cfg.backend).name
 
     def _post_machine(self):
         candidates = self.candidates()
         self._best = candidates[0] if candidates else None
-        if self._best is None or not (self._cfg.refine and candidates):
+        if self._best is None or not self._cfg.refine:
             return None
+        if self._budget is not None:
+            # dual goal: time-objective refinement within the budget
+            return self._budget_refine_machine(self._best)
         return self._refine_machine(candidates)
+
+    def _budget_refine_machine(self, start: dict):
+        best, moves = yield from budget_refine_rounds(
+            self.problem, start, self._budget, self._cfg.max_moves)
+        self._best = best
+        self._moves = moves
 
     def _refine_machine(self, candidates: list[dict]):
         results, moves = yield from refine_rounds(
@@ -334,30 +412,54 @@ class StackedSweepJob:
 
     def __init__(self, policy: str, ctx: CompilationContext,
                  cfg: OrchestratorConfig, *, prune: bool = True,
-                 caches=None):
+                 caches=None, goal=None, subsets=None):
         self.policy = policy
         self.ctx = ctx
         self.cfg = cfg
+        self.goal = goal = _default_goal(ctx, goal)
         self._tic = time.perf_counter()
         cfg_local = dataclasses.replace(cfg, prune=(cfg.prune and prune))
         self.problems: dict[tuple, ScheduleProblem] = {}
         self.agg = {"dp_calls": 0, "dp_lambdas": 0,
                     "candidates_evaluated": 0, "lambda_iterations": 0,
                     "refinement_moves": 0}
-        subsets = all_rail_subsets(ctx.levels, cfg.n_max_rails)
-        bound_fn = (lambda rails: ctx.min_e_op_bound(rails, gating=True)) \
-            if cfg.warm_start else None
+        if subsets is None:
+            subsets = all_rail_subsets(ctx.levels, cfg.n_max_rails)
+        # goal-aware sweep semantics: the primal (deadline) sweep keeps
+        # its historical incumbent/ceiling cuts; the dual (budget)
+        # sweep swaps in the MinLatency objective with the energy-
+        # infeasibility and latency-incumbent bounds
+        budget = goal.energy_budget_j \
+            if isinstance(goal, MinLatency) else None
+        if budget is not None:
+            t_max = 0.0
+            bound_fn = None
+            objective = MinLatencySelection(
+                budget,
+                e_bound_fn=lambda rails: ctx.min_e_op_bound(
+                    rails, gating=True),
+                t_bound_fn=(lambda rails: ctx.min_t_op_bound(
+                    rails, gating=True)) if cfg.warm_start else None)
+        else:
+            t_max = goal.deadline
+            bound_fn = (lambda rails: ctx.min_e_op_bound(
+                rails, gating=True)) if cfg.warm_start else None
+            objective = None
         # lane content is fully determined by (network content, rails,
-        # gating/sleep flags, pruning); bucket stores partition by the
-        # accelerator's level set so same-accelerator networks stack
+        # gating/sleep flags, pruning) — NOT the deadline or goal, so
+        # frontier points and budget compiles reuse resident lanes;
+        # bucket stores partition by the accelerator's level set so
+        # same-accelerator networks stack
         lane_base = (ctx.content_key, True, True, bool(cfg_local.prune))
         sig_prefix = (ctx.levels,)
+        prune_cache = ctx.store if cfg_local.prune else None
 
         def make_task(idx: int, rails: tuple[float, ...],
                       hint: dict | None = None) -> _PfdnnStackedTask:
             problem = ctx.problem_for(rails, gating=True,
                                       allow_sleep=True,
-                                      materialize_states=False)
+                                      materialize_states=False,
+                                      t_max=t_max)
             lam_hint = (hint or {}).get("lam_hint") \
                 if cfg.warm_start else None
             return _PfdnnStackedTask(idx, rails, problem, cfg_local,
@@ -365,9 +467,13 @@ class StackedSweepJob:
                                      lam_hint=lam_hint,
                                      lane_key=lane_base + (rails,),
                                      sig_prefix=sig_prefix,
-                                     caches=caches)
+                                     caches=caches, goal=goal,
+                                     prune_cache=prune_cache,
+                                     prune_key=(ctx.content_key, True,
+                                                rails))
 
         self.sweep = StackedSweep(subsets, make_task, bound_fn=bound_fn,
+                                  objective=objective,
                                   max_live=stack_max_live(cfg),
                                   name=ctx.network)
 
@@ -396,7 +502,7 @@ class StackedSweepJob:
         sel_stats["wall_time_s"] = time.perf_counter() - self._tic
         return emit_schedule(self.policy, self.ctx,
                              self.problems[best_rails], best, sel_stats,
-                             gating=True)
+                             gating=True, goal=self.goal)
 
 
 # pfdnn-family policies whose rail sweep the round scheduler can stack
@@ -406,26 +512,60 @@ _STACKABLE_SWEEPS = {"pfdnn": True, "pfdnn_nopp": False}
 
 
 def stacked_compile_job(ctx: CompilationContext, cfg: OrchestratorConfig,
-                        *, caches=None) -> StackedSweepJob | None:
+                        *, caches=None, goal=None
+                        ) -> StackedSweepJob | None:
     """Build the :class:`StackedSweepJob` for ``cfg`` when its policy
     and solver options route to the subset-stacked engine, else None
     (legacy scalar bisection, explicit thread fan-out, stacking
     disabled, or a non-sweep policy).  The fleet service uses this to
-    co-schedule many networks' sweeps in one round scheduler."""
-    workers = sweep_workers(cfg)
-    if not (cfg.stack_subsets and cfg.batch_lambda
-            and (workers is None or workers <= 1)):
-        return None
+    co-schedule many networks' sweeps — of any mix of MinEnergy and
+    MinLatency goals, and all points of a ParetoFront — in one round
+    scheduler.  Budget (MinLatency) goals are built on the stacked
+    machine, so they always qualify."""
+    goal = _default_goal(ctx, goal)
     prune = _STACKABLE_SWEEPS.get(cfg.policy)
     if prune is None:
         return None
+    if not isinstance(goal, MinLatency):
+        workers = sweep_workers(cfg)
+        if not (cfg.stack_subsets and cfg.batch_lambda
+                and (workers is None or workers <= 1)):
+            return None
     return StackedSweepJob(cfg.policy, ctx, cfg, prune=prune,
-                           caches=caches)
+                           caches=caches, goal=goal)
+
+
+def _solve_budget_sweep(policy: str, ctx: CompilationContext,
+                        cfg: OrchestratorConfig, *, even: bool,
+                        prune: bool, goal) -> PowerSchedule | None:
+    """The dual rail sweep (fastest schedule within the energy budget):
+    always routed through the subset-stacked engine — the budget
+    machine (:func:`repro.core.lambda_dp.budget_rounds`) is built on
+    it, so legacy sweep knobs (``stack_subsets=False``,
+    ``batch_lambda=False``, ``sweep_workers``) do not apply."""
+    if even:
+        subsets = [evenly_spaced_rails(ctx.levels, k)
+                   for k in range(1, cfg.n_max_rails + 1)]
+    else:
+        subsets = None
+    caches = ctx.store.stack_caches if ctx.store is not None else None
+    job = StackedSweepJob(
+        policy, ctx, cfg if cfg.policy == policy
+        else dataclasses.replace(cfg, policy=policy),
+        prune=prune, caches=caches, goal=goal, subsets=subsets)
+    fleet = run_stacked_sweeps([job.sweep], backend=cfg.backend,
+                               caches=caches)
+    return job.emit(fleet)
 
 
 def _solve_sweep(policy: str, ctx: CompilationContext,
                  cfg: OrchestratorConfig, *, even: bool,
-                 prune: bool) -> PowerSchedule | None:
+                 prune: bool, goal=None) -> PowerSchedule | None:
+    goal = _default_goal(ctx, goal)
+    if isinstance(goal, MinLatency):
+        return _solve_budget_sweep(policy, ctx, cfg, even=even,
+                                   prune=prune, goal=goal)
+    t_max = goal.deadline
     tic = time.perf_counter()
     # the stacked engine IS the batched multi-λ machine, so an explicit
     # batch_lambda=False (legacy scalar bisection) must route to the
@@ -434,7 +574,8 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
         caches = ctx.store.stack_caches if ctx.store is not None else None
         job = stacked_compile_job(
             ctx, cfg if cfg.policy == policy
-            else dataclasses.replace(cfg, policy=policy), caches=caches)
+            else dataclasses.replace(cfg, policy=policy), caches=caches,
+            goal=goal)
         if job is not None:
             # subset-stacked engine: whole same-bucket buckets of live
             # subsets advance one λ-search round per stacked backend call
@@ -455,7 +596,7 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
         # Swept problems are array-backed (no per-state Python lists)
         problem = ctx.problem_for(rails, gating=True, allow_sleep=True,
                                   via_master=not even,
-                                  materialize_states=even)
+                                  materialize_states=even, t_max=t_max)
         lam_hint = (hint or {}).get("lam_hint") if cfg.warm_start else None
         best, stats = _solve_pfdnn_on_rails(problem, cfg_local,
                                             lam_hint=lam_hint)
@@ -492,7 +633,7 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
     sel_stats["backend"] = get_backend(cfg.backend).name
     sel_stats["wall_time_s"] = time.perf_counter() - tic
     return emit_schedule(policy, ctx, problems[best_rails], best,
-                         sel_stats, gating=True)
+                         sel_stats, gating=True, goal=goal)
 
 
 def sweep_workers(cfg: OrchestratorConfig) -> int | None:
@@ -519,40 +660,54 @@ def stack_max_live(cfg: OrchestratorConfig) -> int | None:
 
 
 @register_policy("pfdnn")
-def solve_pfdnn(ctx: CompilationContext,
-                cfg: OrchestratorConfig) -> PowerSchedule | None:
-    return _solve_sweep("pfdnn", ctx, cfg, even=False, prune=True)
+def solve_pfdnn(ctx: CompilationContext, cfg: OrchestratorConfig,
+                goal=None) -> PowerSchedule | None:
+    return _solve_sweep("pfdnn", ctx, cfg, even=False, prune=True,
+                        goal=goal)
 
 
 @register_policy("pfdnn_even")
-def solve_pfdnn_even(ctx: CompilationContext,
-                     cfg: OrchestratorConfig) -> PowerSchedule | None:
-    return _solve_sweep("pfdnn_even", ctx, cfg, even=True, prune=True)
+def solve_pfdnn_even(ctx: CompilationContext, cfg: OrchestratorConfig,
+                     goal=None) -> PowerSchedule | None:
+    return _solve_sweep("pfdnn_even", ctx, cfg, even=True, prune=True,
+                        goal=goal)
 
 
 @register_policy("pfdnn_nopp")
-def solve_pfdnn_nopp(ctx: CompilationContext,
-                     cfg: OrchestratorConfig) -> PowerSchedule | None:
-    return _solve_sweep("pfdnn_nopp", ctx, cfg, even=False, prune=False)
+def solve_pfdnn_nopp(ctx: CompilationContext, cfg: OrchestratorConfig,
+                     goal=None) -> PowerSchedule | None:
+    return _solve_sweep("pfdnn_nopp", ctx, cfg, even=False, prune=False,
+                        goal=goal)
 
 
 # --------------------------------------------------------- ILP oracle
 
 @register_policy("ilp")
-def solve_ilp_policy(ctx: CompilationContext,
-                     cfg: OrchestratorConfig) -> PowerSchedule | None:
+def solve_ilp_policy(ctx: CompilationContext, cfg: OrchestratorConfig,
+                     goal=None) -> PowerSchedule | None:
     """Exact oracle on the PF-DNN-selected rails (reference solver,
     §4.3).  Shares the context's master tables with the inner pfdnn
-    sweep instead of recompiling from scratch."""
+    sweep instead of recompiling from scratch.  Under a MinLatency
+    goal the oracle is the dual ILP (min time s.t. energy ≤ budget) on
+    the rails the dual pfdnn sweep selected."""
+    goal = _default_goal(ctx, goal)
     tic = time.perf_counter()
-    pf = solve_pfdnn(ctx, dataclasses.replace(cfg, policy="pfdnn"))
+    pf = solve_pfdnn(ctx, dataclasses.replace(cfg, policy="pfdnn"),
+                     goal=goal)
     if pf is None:
         return None
-    problem = ctx.problem_for(pf.rails, gating=True, allow_sleep=True)
-    result = solve_ilp(problem, time_limit=cfg.ilp_time_limit)
+    if isinstance(goal, MinLatency):
+        problem = ctx.problem_for(pf.rails, gating=True,
+                                  allow_sleep=True, t_max=0.0)
+        result = solve_ilp_min_latency(problem, goal.energy_budget_j,
+                                       time_limit=cfg.ilp_time_limit)
+    else:
+        problem = ctx.problem_for(pf.rails, gating=True,
+                                  allow_sleep=True, t_max=goal.deadline)
+        result = solve_ilp(problem, time_limit=cfg.ilp_time_limit)
     if not result.get("feasible"):
         return None
     return emit_schedule("ilp", ctx, problem, result,
                          {"wall_time_s": time.perf_counter() - tic,
                           "ilp_wall_time_s": result.get("wall_time_s")},
-                         gating=True)
+                         gating=True, goal=goal)

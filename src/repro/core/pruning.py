@@ -33,8 +33,34 @@ def _worst_case_transition(problem: ScheduleProblem) -> tuple[float, float]:
     return t_bound, e_bound
 
 
-def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
-    """Return a pruned copy of the problem + stats + index maps."""
+def prune_problem(problem: ScheduleProblem, *, cache=None,
+                  cache_key=None) -> tuple[ScheduleProblem, dict]:
+    """Return a pruned copy of the problem + stats + index maps.
+
+    ``cache``/``cache_key`` plug a content-addressed store of the
+    per-layer keep-index maps (the fleet service's
+    :class:`~repro.service.ArtifactStore`, or any object with
+    ``pruning(key)`` / ``put_pruning(key, maps)``): the domination
+    computation — the [L, S, S] scoring below, ~9 % of a warm solve —
+    depends only on (network content, accelerator + transition model,
+    gating, rails), never on the deadline or goal, so repeats across
+    rates, goals, and frontier points rebuild the pruned *view* from
+    the cached maps without re-scoring.  Callers key by
+    ``(content_key, gating, rails)``.
+    """
+    if cache is not None and cache_key is not None:
+        maps = cache.pruning(cache_key)
+        if maps is not None:
+            return _apply_keep(problem, [list(m) for m in maps])
+    index_maps = _compute_keep(problem)
+    if cache is not None and cache_key is not None:
+        cache.put_pruning(cache_key,
+                          tuple(tuple(m) for m in index_maps))
+    return _apply_keep(problem, index_maps)
+
+
+def _compute_keep(problem: ScheduleProblem) -> list[list[int]]:
+    """Score local domination and return the per-layer keep indices."""
     t_margin, e_margin = _worst_case_transition(problem)
     t_margin *= 2.0
     e_margin *= 2.0
@@ -79,23 +105,28 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
         del mutual
     dominated = dom.any(axis=1)                  # [L, a]
 
-    # array-backed parents stay array-backed: the pruned view only ever
-    # needs the sliced arrays below, so no StateCost lists are built
-    new_layers: list[list[StateCost]] | None = \
-        None if problem.layer_states is None else []
     index_maps: list[list[int]] = []
-    removed_total = 0
     for li in range(L):
         n = int(sizes[li])
         keep = np.nonzero(~dominated[li, :n])[0]
         keep_idx = [int(i) for i in keep]
         if not keep_idx:                  # never empty a layer
             keep_idx = [int(np.argmin(e[li, :n]))]
-        if new_layers is not None:
-            states = problem.layer_states[li]
-            new_layers.append([states[i] for i in keep_idx])
         index_maps.append(keep_idx)
-        removed_total += n - len(keep_idx)
+    return index_maps
+
+
+def _apply_keep(problem: ScheduleProblem,
+                index_maps: list[list[int]]
+                ) -> tuple[ScheduleProblem, dict]:
+    """Build the pruned view of ``problem`` from per-layer keep indices
+    (freshly computed or cache-recalled — identical either way)."""
+    # array-backed parents stay array-backed: the pruned view only ever
+    # needs the sliced arrays below, so no StateCost lists are built
+    new_layers: list[list[StateCost]] | None = None
+    if problem.layer_states is not None:
+        new_layers = [[problem.layer_states[li][i] for i in keep_idx]
+                      for li, keep_idx in enumerate(index_maps)]
 
     pruned = ScheduleProblem(
         layer_states=new_layers,
@@ -129,7 +160,7 @@ def prune_problem(problem: ScheduleProblem) -> tuple[ScheduleProblem, dict]:
     info = {
         "states_before": problem.n_states(),
         "states_after": pruned.n_states(),
-        "removed": removed_total,
+        "removed": problem.n_states() - pruned.n_states(),
         "edges_before": problem.n_edges(),
         "edges_after": pruned.n_edges(),
         "index_maps": index_maps,

@@ -259,6 +259,111 @@ def _select_rails_parallel(
     return best, best_subset, stats
 
 
+# ------------------------------------------- goal-aware sweep semantics
+
+class MinEnergySelection:
+    """The primal (deadline) sweep semantics — exactly the historical
+    :func:`select_rails` behaviour, factored into a value:
+
+      - incumbent = lexicographic ``(e_total, enumeration order)``
+        minimum over solved subsets;
+      - infeasibility ceiling: a deadline-infeasible subset's max rail
+        caps every later subset with ≤ that much voltage headroom;
+      - ``bound_fn`` (a sound lower bound on any schedule's ``e_total``
+        under the subset) cuts subsets that provably cannot beat the
+        incumbent, with the sequential tie rule (a bound *tie* only
+        cuts when the incumbent enumerates earlier).
+    """
+
+    binding = "deadline"
+    initial_incumbent = np.inf
+
+    def __init__(self, bound_fn: Callable[[tuple[float, ...]], float]
+                 | None = None):
+        self.bound_fn = bound_fn
+
+    def init_state(self, state: dict) -> None:
+        pass
+
+    def score(self, result: dict):
+        return result["e_total"]
+
+    def admit_skip(self, idx: int, subset: tuple[float, ...],
+                   state: dict) -> str | None:
+        if max(subset) <= state["ceiling"]:
+            return "subsets_skipped"
+        if self.bound_fn is not None and np.isfinite(state["incumbent"]):
+            bound = self.bound_fn(subset)
+            if state["incumbent"] < bound or (
+                    state["incumbent"] == bound
+                    and state["incumbent_idx"] < idx):
+                return "subsets_cut"
+        return None
+
+    def note_infeasible(self, rails: tuple[float, ...],
+                        state: dict) -> None:
+        state["ceiling"] = max(state["ceiling"], max(rails))
+
+
+class MinLatencySelection:
+    """The dual (energy-budget) sweep semantics: select the fastest
+    within-budget schedule, ties broken toward lower energy then
+    enumeration order.
+
+    Goal-aware generalizations of the primal cuts:
+
+      - **infeasibility cut** (the ceiling's dual): a subset whose
+        energy lower bound (``e_bound_fn``, Σ min E_op) already exceeds
+        the budget can never fit it — skipped without solving; and a
+        solved subset found over budget proves every *sub*-subset of it
+        over budget too (fewer rails ⇒ fewer states ⇒ min energy no
+        lower), mirroring "less voltage headroom ⇒ still too slow";
+      - **incumbent cut**: a subset whose latency lower bound
+        (``t_bound_fn``, Σ min t_op) strictly exceeds the incumbent's
+        latency cannot win even on tie-breaks.
+
+    Both cuts are sound (true lower bounds, strict comparisons), so the
+    selection equals the cut-free enumeration's lexicographic
+    ``((t_infer, e_total), order)`` minimum.
+    """
+
+    binding = "energy_budget"
+    initial_incumbent = (np.inf, np.inf)
+
+    def __init__(self, budget: float,
+                 e_bound_fn: Callable[[tuple[float, ...]], float]
+                 | None = None,
+                 t_bound_fn: Callable[[tuple[float, ...]], float]
+                 | None = None):
+        self.budget = budget
+        self.e_bound_fn = e_bound_fn
+        self.t_bound_fn = t_bound_fn
+
+    def init_state(self, state: dict) -> None:
+        state["over_budget"] = []        # solved-infeasible rail sets
+
+    def score(self, result: dict):
+        return (result["t_infer"], result["e_total"])
+
+    def admit_skip(self, idx: int, subset: tuple[float, ...],
+                   state: dict) -> str | None:
+        sset = set(subset)
+        if any(over >= sset for over in state["over_budget"]):
+            return "subsets_skipped"
+        if self.e_bound_fn is not None and \
+                self.e_bound_fn(subset) > self.budget:
+            return "subsets_skipped"
+        inc_t = state["incumbent"][0]
+        if self.t_bound_fn is not None and np.isfinite(inc_t) and \
+                self.t_bound_fn(subset) > inc_t:
+            return "subsets_cut"
+        return None
+
+    def note_infeasible(self, rails: tuple[float, ...],
+                        state: dict) -> None:
+        state["over_budget"].append(set(rails))
+
+
 # ------------------------------------------------ subset-stacked sweep
 
 _DEFAULT_MAX_LIVE = 16
@@ -295,10 +400,15 @@ class StackedSweep:
                  bound_fn: Callable[[tuple[float, ...]], float] | None
                  = None,
                  max_live: int | None = None,
-                 name: str = "net"):
+                 name: str = "net",
+                 objective=None):
         self.make_task = make_task
-        self.bound_fn = bound_fn
         self.name = name
+        # sweep semantics (incumbent comparisons + admission cuts) are a
+        # pluggable objective; the default is the primal MinEnergy
+        # behaviour with ``bound_fn`` as its incumbent-cut bound
+        self.objective = objective if objective is not None \
+            else MinEnergySelection(bound_fn)
         self.subset_list = list(subsets)
         # same enumeration order as select_rails: high-voltage subsets
         # first, so the infeasibility ceiling is established early
@@ -308,8 +418,10 @@ class StackedSweep:
         self.max_live = max(1, int(max_live))
         self.pending = deque(enumerate(self.subset_list))
         self.active: list = []
-        self.state = {"ceiling": -np.inf, "incumbent": np.inf,
+        self.state = {"ceiling": -np.inf,
+                      "incumbent": self.objective.initial_incumbent,
                       "incumbent_idx": -1, "lam_hint": None}
+        self.objective.init_state(self.state)
         self.results: dict[int, dict] = {}
         self.stats = {"subsets_total": 0, "subsets_solved": 0,
                       "subsets_skipped": 0, "subsets_cut": 0,
@@ -328,17 +440,10 @@ class StackedSweep:
                 break                       # cold bootstrap wave is full
             idx, subset = self.pending.popleft()
             stats["subsets_total"] += 1
-            if max(subset) <= state["ceiling"]:
-                stats["subsets_skipped"] += 1
+            reason = self.objective.admit_skip(idx, subset, state)
+            if reason is not None:
+                stats[reason] += 1
                 continue
-            if self.bound_fn is not None and \
-                    np.isfinite(state["incumbent"]):
-                bound = self.bound_fn(subset)
-                if state["incumbent"] < bound or (
-                        state["incumbent"] == bound
-                        and state["incumbent_idx"] < idx):
-                    stats["subsets_cut"] += 1
-                    continue
             task = self.make_task(idx, subset,
                                   {"lam_hint": state["lam_hint"]})
             task.start()
@@ -351,24 +456,28 @@ class StackedSweep:
         stats["subsets_solved"] += 1
         result = task.finalize()
         if result is None:
-            state["ceiling"] = max(state["ceiling"], max(task.rails))
+            self.objective.note_infeasible(task.rails, state)
             return
         self.results[task.idx] = result
         if result.get("lambda_star"):
             state["lam_hint"] = result["lambda_star"]
-        e = result["e_total"]
-        if (e, task.idx) < (state["incumbent"], state["incumbent_idx"]):
-            state["incumbent"] = e
+        score = self.objective.score(result)
+        if (score, task.idx) < (state["incumbent"],
+                                state["incumbent_idx"]):
+            state["incumbent"] = score
             state["incumbent_idx"] = task.idx
 
     def selection(self) -> tuple[dict | None, tuple[float, ...] | None]:
-        """Lexicographic ``(e_total, enumeration order)`` minimum over
-        all solved subsets — exactly the sequential sweep's pick."""
+        """Lexicographic ``(objective score, enumeration order)``
+        minimum over all solved subsets — exactly the sequential
+        sweep's pick (score = ``e_total`` for the default MinEnergy
+        objective, ``(t_infer, e_total)`` for the budget dual)."""
         best: dict | None = None
         best_subset: tuple[float, ...] | None = None
+        score = self.objective.score
         for idx in sorted(self.results):
             result = self.results[idx]
-            if best is None or result["e_total"] < best["e_total"]:
+            if best is None or score(result) < score(best):
                 best = result
                 best_subset = self.subset_list[idx]
         return best, best_subset
@@ -623,18 +732,24 @@ def select_rails_stacked(
     return best, best_subset, stats
 
 
-def _accepts_hint(solve_fn: Callable) -> bool:
-    """True when ``solve_fn`` explicitly declares a ``hint`` parameter
-    (or accepts **kwargs).  The hint is always passed by keyword, so a
-    solver with an unrelated second positional (``def solve(subset,
-    retries=3)``) is never handed the hint dict by accident."""
+def accepts_param(fn: Callable, name: str) -> bool:
+    """True when ``fn`` explicitly declares a keyword-passable ``name``
+    parameter (or accepts **kwargs).  Optional protocol arguments
+    (``hint`` here, ``goal`` in the orchestrator) are always passed by
+    keyword, so a function with an unrelated second positional
+    (``def solve(subset, retries=3)``) is never handed one by
+    accident."""
     import inspect
 
     try:
-        sig = inspect.signature(solve_fn)
+        sig = inspect.signature(fn)
     except (TypeError, ValueError):
         return False
-    if "hint" in sig.parameters:
-        p = sig.parameters["hint"]
+    if name in sig.parameters:
+        p = sig.parameters[name]
         return p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
     return any(p.kind == p.VAR_KEYWORD for p in sig.parameters.values())
+
+
+def _accepts_hint(solve_fn: Callable) -> bool:
+    return accepts_param(solve_fn, "hint")

@@ -163,6 +163,55 @@ def refine_rounds(problem: ScheduleProblem,
     return results, [int(m) for m in moves]
 
 
+def budget_refine_rounds(problem: ScheduleProblem, start: dict,
+                         budget: float, max_moves: int = 8):
+    """Dual-goal refinement: greedy single-layer replacements that
+    reduce ``(t_infer, e_total)`` lexicographically while keeping the
+    inference energy within ``budget``.
+
+    Yields ``eval_batch`` :class:`~repro.core.lambda_dp.WorkRequest`
+    rounds (all replacements of the incumbent path, evaluated in one
+    shot) and returns ``(best_row, moves)``.  The move objective is
+    time, not energy, so the primal's analytic move scorer
+    (:func:`move_scores`) does not apply — each round is one batched
+    path evaluation instead.  Driven sequentially
+    (:func:`~repro.core.lambda_dp.solve_budget_dp`-style) or by the
+    subset-stacked scheduler, with identical results.
+    """
+    from repro.core.lambda_dp import WorkRequest
+
+    best = start
+    moves = 0
+    sizes = problem.sizes
+    while moves < max_moves:
+        path = best["path"]
+        variants = []
+        for i, n in enumerate(sizes):
+            for s in range(n):
+                if s != path[i]:
+                    v = list(path)
+                    v[i] = s
+                    variants.append(v)
+        if not variants:
+            break
+        ev = yield WorkRequest(
+            "eval_batch", paths=np.asarray(variants, dtype=np.int64))
+        e_infer = ev["e_op"] + ev["e_trans"]
+        within = e_infer <= budget
+        if not within.any():
+            break
+        t = np.where(within, ev["t_infer"], np.inf)
+        j = int(np.lexsort((ev["e_total"], t))[0])
+        cand = ScheduleProblem.result_row(ev, j)
+        if (cand["t_infer"], cand["e_total"]) < (best["t_infer"],
+                                                 best["e_total"]):
+            best = cand
+            moves += 1
+        else:
+            break
+    return best, moves
+
+
 def refine_paths(problem: ScheduleProblem,
                  paths: Sequence[Sequence[int]],
                  max_moves: int = 8) -> tuple[list[dict], list[int]]:

@@ -42,6 +42,12 @@ class PowerSchedule:
     feasible: bool
     solver_stats: dict[str, Any] = dataclasses.field(default_factory=dict)
     domains: tuple[str, ...] = DOMAINS
+    # compile-goal provenance (goal API): the objective this artifact
+    # was compiled for (``describe()`` dict of the goal value) and its
+    # binding constraint ("deadline" | "energy_budget").  None on
+    # artifacts emitted before the goal API / by direct policy calls.
+    goal: dict[str, Any] | None = None
+    binding_constraint: str | None = None
 
     @property
     def energy_uj(self) -> float:
@@ -92,4 +98,6 @@ class PowerSchedule:
             f"switches={self.n_rail_switches}  "
             f"z={'active-idle' if self.z_active_idle else 'deep-sleep'}",
         ]
+        if self.binding_constraint is not None:
+            lines[0] += f"  binding={self.binding_constraint}"
         return "\n".join(lines)

@@ -10,10 +10,19 @@ compiles, cross-network bucket stacking, persistent schedule cache.
     rail sweeps in one round scheduler.
 """
 
+from repro.core.goals import (           # noqa: F401  (service-level API)
+    InfeasibleGoal,
+    MinEnergy,
+    MinLatency,
+    ParetoFront,
+    ParetoFrontier,
+)
 from repro.service.compile_service import (
     CompileRequest,
     CompileService,
 )
 from repro.service.store import ArtifactStore
 
-__all__ = ["ArtifactStore", "CompileService", "CompileRequest"]
+__all__ = ["ArtifactStore", "CompileService", "CompileRequest",
+           "MinEnergy", "MinLatency", "ParetoFront", "ParetoFrontier",
+           "InfeasibleGoal"]

@@ -2,24 +2,28 @@
 
 The paper compiles one schedule per deployment (§3.3); a deployment
 service compiles *many* networks for one accelerator under heavy
-traffic.  :class:`CompileService` wraps the staged compiler with the
+traffic — and, with the goal API, under a *mix of objectives*.
+:class:`CompileService` wraps the staged compiler with the
 process-wide :class:`~repro.service.store.ArtifactStore`:
 
   - ``compile(...)`` answers repeat requests from the persistent
-    schedule cache (keyed by network content hash × rate × semantic
-    config) and warm-starts cold compiles from the store's
-    characterization / master-table / transition / lane-store caches;
+    schedule cache (keyed by network content hash × compile goal ×
+    semantic config) and warm-starts cold compiles from the store's
+    characterization / master-table / transition / pruning /
+    lane-store caches;
   - ``compile_many([...])`` additionally co-schedules the rail-subset
     sweeps of every request in ONE round scheduler
     (:func:`~repro.core.rails.run_stacked_sweeps`): rail subsets from
-    different networks that share a padded bucket are stacked into the
-    same lane axis and advanced in one backend call per round.
+    different networks — and different *goals*: deadline (MinEnergy)
+    and budget (MinLatency) sweeps, plus every point of a ParetoFront
+    — that share a padded bucket are stacked into the same lane axis
+    and advanced in one backend call per round.
 
 Warm or cold, stacked or solo, the emitted schedules are identical to
-``compile_power_schedule`` run from scratch: every shared artifact is
-content-addressed and immutable, per-lane stacked kernel results are
-bit-identical to solo calls, and each network's sweep reads only its
-own cuts and hints (see :mod:`repro.core.rails`).
+``compile_power_schedule`` / ``repro.core.compile`` run from scratch:
+every shared artifact is content-addressed and immutable, per-lane
+stacked kernel results are bit-identical to solo calls, and each
+sweep reads only its own cuts and hints (see :mod:`repro.core.rails`).
 """
 
 from __future__ import annotations
@@ -27,8 +31,18 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from repro.core import orchestrator as _orchestrator
 from repro.core.backend import get_backend
 from repro.core.context import CompilationContext
+from repro.core.goals import (
+    Goal,
+    InfeasibleGoal,
+    MinEnergy,
+    ParetoFront,
+    ParetoFrontier,
+    ParetoPoint,
+    as_goal,
+)
 from repro.core.orchestrator import compile_power_schedule
 from repro.core.policies import OrchestratorConfig, stacked_compile_job
 from repro.core.rails import run_stacked_sweeps
@@ -58,18 +72,40 @@ def _cfg_key(cfg: OrchestratorConfig) -> str:
 
 @dataclasses.dataclass
 class CompileRequest:
-    """One deployment point of a ``compile_many`` batch."""
+    """One deployment point of a ``compile_many`` batch.
+
+    ``goal`` makes the objective explicit (results come back as the
+    goal API returns them: schedules, structured
+    :class:`InfeasibleGoal`, or a :class:`ParetoFrontier`).  With
+    ``goal=None`` the request is the legacy form — MinEnergy at
+    ``target_rate_hz``, ``None`` for infeasible.
+    """
 
     specs: Sequence[LayerSpec]
-    target_rate_hz: float
+    target_rate_hz: float | None = None
     cfg: OrchestratorConfig | None = None
     network: str = "net"
+    goal: Goal | None = None
+
+    def resolve_goal(self) -> Goal:
+        if self.goal is not None:
+            if self.target_rate_hz is not None:
+                raise ValueError(
+                    "CompileRequest got both target_rate_hz and goal= "
+                    "— they may conflict; give exactly one (use "
+                    "MinEnergy(rate_hz=...) for the legacy form)")
+            return as_goal(self.goal)
+        if self.target_rate_hz is None:
+            raise ValueError(
+                "CompileRequest needs target_rate_hz or goal=")
+        return MinEnergy(rate_hz=self.target_rate_hz)
 
 
 class CompileService:
     """Compile deployment power schedules against one accelerator,
     amortizing all content-addressable work across requests (and, with
-    ``compile_many``, across networks inside one round scheduler).
+    ``compile_many``, across networks — and goals — inside one round
+    scheduler).
 
     One service instance (or at least one shared :class:`ArtifactStore`)
     per accelerator per process is the intended deployment shape; the
@@ -86,56 +122,108 @@ class CompileService:
 
     # -- single compile ------------------------------------------------
     def context_for(self, specs: Sequence[LayerSpec],
-                    target_rate_hz: float, *,
+                    target_rate_hz: float | None = None, *,
                     cfg: OrchestratorConfig | None = None,
                     network: str = "net") -> CompilationContext:
-        """A store-backed context for one deployment point (reusable
-        across policies via ``compile_power_schedule(..., ctx=...)``)."""
+        """A store-backed context for one network (reusable across
+        policies, goals, and deadlines via ``compile(..., ctx=...)``)."""
         cfg = cfg or OrchestratorConfig()
         return CompilationContext(
             specs, target_rate_hz, acc=self.acc, network=network,
             e_switch_nom=cfg.e_switch_nom, store=self.store)
 
-    def _schedule_key(self, ctx: CompilationContext, rate: float,
+    def _schedule_key(self, ctx: CompilationContext, goal: Goal,
                       cfg: OrchestratorConfig) -> tuple:
-        return (ctx.content_key, repr(float(rate)), _cfg_key(cfg))
+        return (ctx.content_key, goal.key(), _cfg_key(cfg))
 
-    def _cached(self, key: tuple,
-                network: str) -> PowerSchedule | None | str:
-        """Schedule-cache lookup: a schedule, the infeasible sentinel,
-        or None on miss.  The cached artifact is content-keyed, so only
-        the cosmetic network label is rebound to the request's."""
+    def _cached(self, key: tuple, network: str, *,
+                legacy: bool = True
+                ) -> PowerSchedule | InfeasibleGoal | None | str:
+        """Schedule-cache lookup: a schedule, an infeasible sentinel
+        (legacy string or structured :class:`InfeasibleGoal`), or None
+        on miss.  The cached artifact is content-keyed, so only the
+        cosmetic network label is rebound to the request's.
+
+        A goal-API caller (``legacy=False``) treats the *legacy*
+        string sentinel as a miss: it carries no reason/bound, so the
+        point is recompiled once into a structured
+        :class:`InfeasibleGoal` rather than fabricating one.
+        """
         if not self.use_schedule_cache:
             return None
         hit = self.store.schedule(key)
-        if isinstance(hit, PowerSchedule) and hit.network != network:
+        if hit == _INFEASIBLE and not legacy:
+            return None
+        if isinstance(hit, (PowerSchedule, InfeasibleGoal)) \
+                and hit.network != network:
             hit = dataclasses.replace(hit, network=network)
         return hit
 
     def compile(self, specs: Sequence[LayerSpec],
-                target_rate_hz: float, *,
+                target_rate_hz: float | None = None, *,
                 cfg: OrchestratorConfig | None = None,
-                network: str = "net") -> PowerSchedule | None:
+                network: str = "net", goal: Goal | None = None
+                ) -> PowerSchedule | InfeasibleGoal | ParetoFrontier \
+            | None:
         """Compile one deployment point through the store (schedule
-        cache first, then a warm-started cold compile)."""
+        cache first, then a warm-started cold compile).
+
+        With an explicit ``goal`` the result follows the goal API
+        (schedule / :class:`InfeasibleGoal` / :class:`ParetoFrontier`);
+        the legacy rate-only form keeps returning ``None`` for an
+        infeasible deadline.  ParetoFront goals cache *per point* under
+        the equivalent MinEnergy keys, so frontier and point traffic
+        share cache entries.
+        """
+        legacy = goal is None
+        if goal is not None and target_rate_hz is not None:
+            raise ValueError(
+                "compile() got both target_rate_hz and goal= — they "
+                "may conflict; give exactly one (use "
+                "MinEnergy(rate_hz=...) for the legacy form)")
         cfg = cfg or OrchestratorConfig()
-        ctx = self.context_for(specs, target_rate_hz, cfg=cfg,
-                               network=network)
-        key = self._schedule_key(ctx, target_rate_hz, cfg)
-        hit = self._cached(key, network)
+        resolved = goal if goal is not None \
+            else CompileRequest(specs, target_rate_hz).resolve_goal()
+        resolved = as_goal(resolved)
+        if isinstance(resolved, ParetoFront):
+            # the batched driver IS the frontier implementation (one
+            # unit per point, per-point MinEnergy cache keys, in-batch
+            # dedup of repeated deadlines)
+            return self.compile_many([CompileRequest(
+                specs, cfg=cfg, network=network, goal=resolved)])[0]
+        ctx = self.context_for(specs, cfg=cfg, network=network)
+        if isinstance(resolved, MinEnergy):
+            # legacy custom policies read the deadline off the context;
+            # the context is otherwise deadline-free (fresh per call)
+            ctx.t_max = resolved.deadline
+        key = self._schedule_key(ctx, resolved, cfg)
+        hit = self._cached(key, network, legacy=legacy)
         if hit is not None:
-            return None if hit == _INFEASIBLE else hit
-        sched = compile_power_schedule(
-            specs, target_rate_hz, cfg=cfg, acc=self.acc,
-            network=network, ctx=ctx)
+            return self._emit(hit, legacy)
+        sched = _orchestrator.compile(
+            specs, resolved, cfg=cfg, acc=self.acc, network=network,
+            ctx=ctx)
         if self.use_schedule_cache:
             self.store.put_schedule(key, sched)
-        return sched
+        return self._emit(sched, legacy)
+
+    @staticmethod
+    def _emit(result, legacy: bool):
+        """Translate a cache/compile result for the caller: legacy
+        (rate-only) calls keep ``None`` for infeasible (whether the
+        entry is the legacy string sentinel or a structured
+        InfeasibleGoal); goal calls get the structured value (goal
+        lookups never see the string sentinel — ``_cached`` treats it
+        as a miss)."""
+        if result == _INFEASIBLE:
+            return None
+        if legacy and isinstance(result, InfeasibleGoal):
+            return None
+        return result
 
     # -- batched compile ----------------------------------------------
     def compile_many(self, requests: Sequence[CompileRequest], *,
-                     stack_networks: bool = True
-                     ) -> list[PowerSchedule | None]:
+                     stack_networks: bool = True) -> list:
         """Compile a batch of deployment points, sharing work three
         ways: the schedule cache answers repeats (within the batch and
         across calls), the artifact store warm-starts every context,
@@ -143,64 +231,117 @@ class CompileService:
         in ONE round scheduler, so same-bucket subsets of different
         networks advance in single backend calls.
 
-        Results are positionally aligned with ``requests`` and
-        identical to per-request ``compile`` calls (which are in turn
-        identical to cold ``compile_power_schedule`` runs).
+        Requests may mix goals freely: MinEnergy and MinLatency sweeps
+        co-schedule in the same fleet (their tasks group purely by
+        padded bucket and batch shape), and each ParetoFront request
+        contributes one sweep per point.  Results are positionally
+        aligned with ``requests`` and identical to per-request
+        ``compile`` calls (which are in turn identical to cold
+        goal-API compiles).
         """
         results: list = [None] * len(requests)
-        key_of: dict[int, tuple] = {}
-        first_of_key: dict[tuple, int] = {}
-        fleets: dict[str, list] = {}       # backend name -> (i, job)
+        # one solve unit per (request, frontier point); units carry the
+        # slot to write: (request index, point index | None)
+        pending_units: list[dict] = []
+        frontier_points: dict[int, list] = {}
+        ctxs: dict[int, CompilationContext] = {}
         for i, req in enumerate(requests):
             cfg = req.cfg or OrchestratorConfig()
-            ctx = self.context_for(req.specs, req.target_rate_hz,
-                                   cfg=cfg, network=req.network)
-            key = self._schedule_key(ctx, req.target_rate_hz, cfg)
-            key_of[i] = key
-            hit = self._cached(key, req.network)
+            goal = req.resolve_goal()
+            ctx = self.context_for(req.specs, cfg=cfg,
+                                   network=req.network)
+            ctxs[i] = ctx
+            if isinstance(goal, ParetoFront):
+                deadlines = goal.resolve_deadlines(
+                    ctx.min_t_op_bound(ctx.levels))
+                frontier_points[i] = [None] * len(deadlines)
+                for j, deadline in enumerate(deadlines):
+                    pending_units.append(
+                        {"slot": (i, j), "req": req, "cfg": cfg,
+                         "ctx": ctx, "goal": MinEnergy(
+                             deadline_s=deadline),
+                         "deadline": deadline, "legacy": False})
+            else:
+                if isinstance(goal, MinEnergy):
+                    # fresh per-request context; legacy custom policies
+                    # read the deadline off it
+                    ctx.t_max = goal.deadline
+                pending_units.append(
+                    {"slot": (i, None), "req": req, "cfg": cfg,
+                     "ctx": ctx, "goal": goal,
+                     "legacy": req.goal is None})
+
+        first_of_key: dict[tuple, dict] = {}
+        dups: list[tuple[dict, dict]] = []
+        fleets: dict[str, list] = {}       # backend name -> unit list
+
+        def write(unit: dict, value) -> None:
+            i, j = unit["slot"]
+            if j is None:
+                results[i] = self._emit(value, unit["legacy"])
+            else:
+                frontier_points[i][j] = ParetoPoint(
+                    unit["deadline"], self._emit(value, False))
+
+        for unit in pending_units:
+            cfg, ctx, goal = unit["cfg"], unit["ctx"], unit["goal"]
+            key = self._schedule_key(ctx, goal, cfg)
+            unit["key"] = key
+            hit = self._cached(key, unit["req"].network,
+                               legacy=unit["legacy"])
             if hit is not None:
-                results[i] = None if hit == _INFEASIBLE else hit
+                write(unit, hit)
                 continue
             if key in first_of_key:        # in-batch duplicate: solve once
-                results[i] = first_of_key[key]
+                dups.append((unit, first_of_key[key]))
                 continue
-            first_of_key[key] = i
+            first_of_key[key] = unit
             job = stacked_compile_job(
-                ctx, cfg, caches=self.store.stack_caches) \
+                ctx, cfg, caches=self.store.stack_caches, goal=goal) \
                 if stack_networks else None
             if job is None:
                 # non-stackable policy/config: plain warm compile
-                sched = compile_power_schedule(
-                    req.specs, req.target_rate_hz, cfg=cfg,
-                    acc=self.acc, network=req.network, ctx=ctx)
+                value = _orchestrator.compile(
+                    unit["req"].specs, goal, cfg=cfg, acc=self.acc,
+                    network=unit["req"].network, ctx=ctx)
                 if self.use_schedule_cache:
-                    self.store.put_schedule(key, sched)
-                results[i] = sched
+                    self.store.put_schedule(key, value)
+                unit["value"] = value
+                write(unit, value)
             else:
+                unit["job"] = job
                 fleets.setdefault(get_backend(cfg.backend).name,
-                                  []).append((i, req, cfg, job))
+                                  []).append(unit)
         # one round scheduler per backend: every live rail subset of
-        # every network advances one λ-search round per stacked call
-        for backend, jobs in fleets.items():
-            for _, _, _, job in jobs:
-                job.start_clock()      # exclude other fleets' solves
+        # every network — whatever its goal — advances one λ-search
+        # round per stacked call
+        for backend, units in fleets.items():
+            for unit in units:
+                unit["job"].start_clock()  # exclude other fleets' solves
             fleet = run_stacked_sweeps(
-                [job.sweep for _, _, _, job in jobs], backend=backend,
+                [unit["job"].sweep for unit in units], backend=backend,
                 caches=self.store.stack_caches)
-            for i, req, cfg, job in jobs:
-                sched = job.emit(fleet)
+            for unit in units:
+                sched = unit["job"].emit(fleet)
+                value = sched if sched is not None \
+                    else _orchestrator.infeasible_result(unit["goal"],
+                                                         unit["ctx"])
                 if self.use_schedule_cache:
-                    self.store.put_schedule(key_of[i], sched)
-                results[i] = sched
-        # resolve in-batch duplicates (marked with the first index)
-        for i, val in enumerate(results):
-            if isinstance(val, int):
-                dup = results[val]
-                if isinstance(dup, PowerSchedule) \
-                        and dup.network != requests[i].network:
-                    dup = dataclasses.replace(
-                        dup, network=requests[i].network)
-                results[i] = dup
+                    self.store.put_schedule(unit["key"], value)
+                unit["value"] = value
+                write(unit, value)
+        # resolve in-batch duplicates (shared solve, rebound label)
+        for unit, first in dups:
+            value = first["value"]
+            if isinstance(value, (PowerSchedule, InfeasibleGoal)) \
+                    and value.network != unit["req"].network:
+                value = dataclasses.replace(
+                    value, network=unit["req"].network)
+            write(unit, value)
+        # assemble frontiers
+        for i, pts in frontier_points.items():
+            results[i] = ParetoFrontier(network=requests[i].network,
+                                        points=pts)
         return results
 
     # -- maintenance ---------------------------------------------------

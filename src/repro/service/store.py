@@ -18,9 +18,15 @@ content-addressable and therefore shareable process-wide:
     lane keys, so later compilations of the same subsets skip both
     ``build_padded`` and the admission copy, and rail subsets of
     *different* networks sharing a bucket stack into one lane axis;
-  - **compiled schedules** — keyed by (network content hash, rate,
-    semantic config), serialized through ``PowerSchedule.to_json`` so a
-    cache hit returns a fresh deserialized artifact.
+  - **structure-pruning keep maps** — keyed by (network content,
+    gating, rails); the domination scoring is deadline/goal-independent
+    (~9 % of a warm solve), so every rate, budget, and frontier point
+    of a network shares one entry;
+  - **compiled schedules** — keyed by (network content hash, compile
+    goal, semantic config), serialized through
+    ``PowerSchedule.to_json`` so a cache hit returns a fresh
+    deserialized artifact; provably-impossible goals cache their
+    structured ``InfeasibleGoal`` (reason + bound) the same way.
 
 The backend jit caches are already process-wide (``get_backend``
 memoizes backend instances, and jitted programs key on padded shapes);
@@ -48,6 +54,7 @@ import numpy as np
 
 from repro.core.backend import StackCaches, get_backend
 from repro.core.context import _digest
+from repro.core.goals import InfeasibleGoal
 from repro.core.problem import _pairwise_transition
 from repro.core.schedule import PowerSchedule
 from repro.hw.edge40nm import Edge40nmAccelerator
@@ -58,6 +65,32 @@ from repro.perfmodel.layer_costs import LayerSpec, characterize_network
 # infeasible sweep is as expensive as a feasible one, so repeats of an
 # impossible (network, rate) must hit the cache too
 _INFEASIBLE = "__infeasible__"
+# structured variant: the goal API caches the InfeasibleGoal (reason +
+# bounds) so repeats get the diagnosis, not just the verdict
+_INFEASIBLE_GOAL_PREFIX = "__infeasible_goal__:"
+
+
+def _migrate_schedule_key(key: tuple) -> tuple:
+    """Normalize a snapshot schedule key to the goal-keyed format.
+
+    Pre-goal snapshots keyed schedules by ``repr(float(rate))``; the
+    goal API keys the same point by ``MinEnergy(rate_hz=rate).key()``
+    — i.e. ``min_energy|{1/rate!r}``.  The deadline is computed with
+    the exact float division the goal value performs, so a migrated
+    entry hits precisely the lookups the old one served.  Goal-format
+    segments (they all carry a ``|``) pass through untouched.
+    """
+    if len(key) != 3 or "|" in key[1]:
+        return key
+    try:
+        rate = float(key[1])
+    except ValueError:
+        return key
+    if rate <= 0.0:
+        return key
+    from repro.core.goals import MinEnergy
+
+    return (key[0], MinEnergy(rate_hz=rate).key(), key[2])
 
 
 class ArtifactStore:
@@ -72,14 +105,18 @@ class ArtifactStore:
         self._masters: dict = {}
         # (tm_key, volts_a bytes, volts_b bytes) -> (T, E, switch)
         self._transitions: dict = {}
-        # (content_key, rate_key, cfg_key) -> PowerSchedule JSON text
+        # (content_key, goal_key, cfg_key) -> PowerSchedule JSON text
         self._schedules: dict = {}
+        # (content_key, gating, rails) -> per-layer keep-index maps
+        # (structure pruning is deadline/goal-independent, so one entry
+        # serves every rate, budget, and frontier point of a network)
+        self._prunings: dict = {}
         # persistent subset lane stores + round member-stack cache
         self.stack_caches = StackCaches()
         self.hits = {"characterization": 0, "master": 0,
-                     "transition": 0, "schedule": 0}
+                     "transition": 0, "schedule": 0, "pruning": 0}
         self.misses = {"characterization": 0, "master": 0,
-                       "transition": 0, "schedule": 0}
+                       "transition": 0, "schedule": 0, "pruning": 0}
 
     # -- characterization ---------------------------------------------
     def characterization(self, specs: Sequence[LayerSpec],
@@ -136,11 +173,33 @@ class ArtifactStore:
             self._transitions.setdefault(key, val)
             return self._transitions[key]
 
+    # -- structure-pruning keep maps ----------------------------------
+    def pruning(self, key: tuple) -> tuple | None:
+        """Cached per-layer keep-index maps for ``key = (content_key,
+        gating, rails)``, or None on miss.  The domination scoring
+        (:func:`repro.core.pruning.prune_problem`) is ~9 % of a warm
+        solve and depends on neither deadline nor goal — a hit rebuilds
+        the pruned view by slicing alone."""
+        maps = self._prunings.get(key)
+        with self._lock:
+            if maps is None:
+                self.misses["pruning"] += 1
+            else:
+                self.hits["pruning"] += 1
+        return maps
+
+    def put_pruning(self, key: tuple, maps: tuple) -> None:
+        with self._lock:
+            self._prunings.setdefault(key, maps)
+
     # -- compiled schedules -------------------------------------------
-    def schedule(self, key: tuple) -> PowerSchedule | None | str:
+    def schedule(self, key: tuple) -> PowerSchedule | None | str | \
+            "InfeasibleGoal":
         """Cached schedule for ``key``: a fresh deserialized
         :class:`PowerSchedule`, the :data:`_INFEASIBLE` sentinel when
-        the point was compiled and found infeasible, or None on miss."""
+        the point was compiled and found infeasible (legacy form), a
+        structured :class:`~repro.core.goals.InfeasibleGoal` when the
+        goal API recorded the reason, or None on miss."""
         text = self._schedules.get(key)
         with self._lock:
             if text is None:
@@ -151,13 +210,25 @@ class ArtifactStore:
             return None
         if text == _INFEASIBLE:
             return _INFEASIBLE
+        if text.startswith(_INFEASIBLE_GOAL_PREFIX):
+            return InfeasibleGoal.from_json(
+                text[len(_INFEASIBLE_GOAL_PREFIX):])
         return PowerSchedule.from_json(text)
 
     def put_schedule(self, key: tuple,
-                     sched: PowerSchedule | None) -> None:
+                     sched: "PowerSchedule | InfeasibleGoal | None"
+                     ) -> None:
+        """Cache a compiled point: a schedule, a structured
+        :class:`InfeasibleGoal` (cached with its reason, like the
+        legacy sentinel), or None (legacy infeasible)."""
+        if sched is None:
+            text = _INFEASIBLE
+        elif isinstance(sched, InfeasibleGoal):
+            text = _INFEASIBLE_GOAL_PREFIX + sched.to_json()
+        else:
+            text = sched.to_json()
         with self._lock:
-            self._schedules[key] = _INFEASIBLE if sched is None \
-                else sched.to_json()
+            self._schedules[key] = text
 
     # -- bookkeeping ---------------------------------------------------
     def backend(self, name: str | None = None):
@@ -173,6 +244,7 @@ class ArtifactStore:
                 "masters": len(self._masters),
                 "transitions": len(self._transitions),
                 "schedules": len(self._schedules),
+                "prunings": len(self._prunings),
                 "resident_lanes": self.stack_caches.n_lanes(),
                 "hits": dict(self.hits),
                 "misses": dict(self.misses),
@@ -191,6 +263,7 @@ class ArtifactStore:
                 self._characterization.clear()
                 self._masters.clear()
                 self._transitions.clear()
+                self._prunings.clear()
 
     def trim_stacks(self, max_lanes: int) -> bool:
         """Reset the subset lane stores once they exceed ``max_lanes``
@@ -203,15 +276,18 @@ class ArtifactStore:
 
     # -- disk persistence ---------------------------------------------
     def save(self, path) -> None:
-        """Persist transition matrices, master tables, and the schedule
-        cache to ``path`` as one ``.npz`` (arrays + JSON manifest)."""
+        """Persist transition matrices, master tables, pruning keep
+        maps, and the schedule cache to ``path`` as one ``.npz``
+        (arrays + JSON manifest)."""
         with self._lock:
             transitions = dict(self._transitions)
             masters = dict(self._masters)
             schedules = dict(self._schedules)
+            prunings = dict(self._prunings)
         arrays: dict[str, np.ndarray] = {}
         manifest: dict = {"version": 1, "transitions": [],
-                          "masters": [], "schedules": []}
+                          "masters": [], "schedules": [],
+                          "prunings": []}
         for i, ((tmk, ka, kb), (t, e, sw)) in \
                 enumerate(transitions.items()):
             manifest["transitions"].append(
@@ -231,6 +307,12 @@ class ArtifactStore:
         manifest["schedules"] = [
             {"key": list(k), "json": text}
             for k, text in schedules.items()]
+        # pruning keep maps are small int lists — JSON floats (the rail
+        # values) round-trip exactly, so keys survive the manifest
+        manifest["prunings"] = [
+            {"content": ck, "gating": bool(g), "rails": list(rails),
+             "maps": [list(m) for m in maps]}
+            for (ck, g, rails), maps in prunings.items()]
         arrays["manifest"] = np.frombuffer(
             json.dumps(manifest).encode(), dtype=np.uint8)
         # crash-safe: stream into a sibling temp file, then atomically
@@ -277,6 +359,12 @@ class ArtifactStore:
                     self._masters.setdefault(
                         (ent["key"], ent["gating"]), rec)
                 for ent in manifest["schedules"]:
-                    self._schedules.setdefault(tuple(ent["key"]),
-                                               ent["json"])
+                    self._schedules.setdefault(
+                        _migrate_schedule_key(tuple(ent["key"])),
+                        ent["json"])
+                for ent in manifest.get("prunings", []):
+                    key = (ent["content"], ent["gating"],
+                           tuple(ent["rails"]))
+                    self._prunings.setdefault(
+                        key, tuple(tuple(m) for m in ent["maps"]))
         return self

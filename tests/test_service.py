@@ -300,8 +300,14 @@ def test_compile_with_mismatched_ctx_raises():
     specs = edge_network("squeezenet1.1")
     rate = max_rate("squeezenet1.1") * 0.9
     ctx = CompilationContext(specs, rate, network="sqz")
-    with pytest.raises(ValueError, match="deadline"):
-        compile_power_schedule(specs, rate * 0.5, ctx=ctx)
+    # the goal API decoupled the context from a single deadline: one
+    # context now serves every rate of its network, and compiling at a
+    # different rate through it matches a fresh compile exactly
+    cfg = OrchestratorConfig(policy="pfdnn", n_max_rails=2)
+    via_ctx = compile_power_schedule(specs, rate * 0.5, cfg=cfg, ctx=ctx)
+    fresh = compile_power_schedule(specs, rate * 0.5, cfg=cfg,
+                                   network="sqz")
+    _assert_same_schedule(via_ctx, fresh)
     with pytest.raises(ValueError, match="different network"):
         compile_power_schedule(edge_network("mobilenetv3-small"), rate,
                                ctx=ctx)
