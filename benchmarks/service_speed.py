@@ -27,8 +27,15 @@ schedules must equal the independent compiles.
 
 Usage:
     PYTHONPATH=src python benchmarks/service_speed.py \
-        [--out BENCH_service.json] [--smoke] [--backend numpy|jax] \
+        [--out BENCH_service.json] [--smoke] \
+        [--backend numpy|jax|jax-pallas|jax-pallas-interpret] \
         [--reps N]
+
+On the jax backends the ``cold_many_stacked`` / ``warm_solve`` rows
+also record ``io_delta`` — the device-lane transfer counters over the
+variant's last rep: warm solves on a populated store re-use the
+device-resident lanes, so their ``h2d_lane_uploads`` delta is 0 while
+``kernel_dispatches`` keeps counting.
 
 ``--smoke`` runs a two-request fleet (n_max_rails=2) as a CI guard:
 schedules must be feasible and identical across all variants; no
@@ -103,15 +110,23 @@ def same_schedules(a, b) -> bool:
 
 
 def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
+    from repro.core import get_backend
+
     results: dict = {"fleet": [f"{n}|{f}|r{k}" for n, f, k in fleet],
                      "policy": POLICY, "reps": reps}
+    io = getattr(get_backend(backend), "io_stats", None)
 
     def best_of(fn, n=reps):
         walls, out = [], None
         for _ in range(n):
+            mark = dict(io) if io is not None else None
             out, wall = timed(fn)
             walls.append(wall)
-        return out, min(walls), walls
+        # device-lane transfer counters over the LAST rep (see module
+        # docstring); empty on host-only backends
+        delta = {k: io[k] - mark[k] for k in io} \
+            if io is not None else None
+        return out, min(walls), walls, delta
 
     def cold_sequential():
         reqs = build_requests(fleet, backend)
@@ -119,7 +134,7 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
             r.specs, r.target_rate_hz, cfg=r.cfg, network=r.network)
             for r in reqs]
 
-    ref, wall, walls = best_of(cold_sequential)
+    ref, wall, walls, _ = best_of(cold_sequential)
     results["cold_sequential"] = {"wall_s": wall, "wall_all_s": walls}
 
     def cold_many(stack: bool):
@@ -129,15 +144,16 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
                                     stack_networks=stack)
         return inner
 
-    out_u, wall, walls = best_of(cold_many(False))
+    out_u, wall, walls, _ = best_of(cold_many(False))
     results["cold_many_unstacked"] = {"wall_s": wall,
                                       "wall_all_s": walls,
                                       "identical": same_schedules(out_u,
                                                                   ref)}
-    out_s, wall, walls = best_of(cold_many(True))
+    out_s, wall, walls, io_s = best_of(cold_many(True))
     results["cold_many_stacked"] = {"wall_s": wall, "wall_all_s": walls,
                                     "identical": same_schedules(out_s,
-                                                                ref)}
+                                                                ref),
+                                    "io_delta": io_s}
 
     # one persistent service: populate, then measure the warm regimes
     svc = CompileService()
@@ -147,16 +163,17 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
         svc.store.clear(schedules=True, stacks=False, tables=False)
         return svc.compile_many(build_requests(fleet, backend))
 
-    out_w, wall, walls = best_of(warm_solve)
+    out_w, wall, walls, io_w = best_of(warm_solve)
     results["warm_solve"] = {"wall_s": wall, "wall_all_s": walls,
-                             "identical": same_schedules(out_w, ref)}
+                             "identical": same_schedules(out_w, ref),
+                             "io_delta": io_w}
 
     svc.compile_many(build_requests(fleet, backend))   # refill the cache
 
     def warm_cached():
         return svc.compile_many(build_requests(fleet, backend))
 
-    out_c, wall, walls = best_of(warm_cached)
+    out_c, wall, walls, _ = best_of(warm_cached)
     results["warm_cached"] = {"wall_s": wall, "wall_all_s": walls,
                               "identical": same_schedules(out_c, ref)}
     results["store_stats"] = svc.store.stats()
@@ -181,8 +198,8 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
                                        network=PARETO_NETWORK)
                 for d in deadlines]
 
-    front, wall_f, walls_f = best_of(frontier_compile)
-    solo, wall_s, walls_s = best_of(independent_points)
+    front, wall_f, walls_f, _ = best_of(frontier_compile)
+    solo, wall_s, walls_s, _ = best_of(independent_points)
     results["pareto_frontier"] = {
         "n_points": len(deadlines),
         "wall_s": wall_f, "wall_all_s": walls_f,
@@ -222,9 +239,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="two-request fleet; assert identical feasible "
                          "schedules across all variants and exit")
-    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+    ap.add_argument("--backend", default=None,
+                    choices=("numpy", "jax", "jax-pallas",
+                             "jax-pallas-interpret"),
                     help="solver array backend (default: $PFDNN_BACKEND "
-                         "or numpy)")
+                         "or numpy); jax-pallas* run the fused Pallas "
+                         "DP kernels and record io_delta columns")
     ap.add_argument("--reps", type=int, default=3,
                     help="best-of-N walls per variant")
     args = ap.parse_args()

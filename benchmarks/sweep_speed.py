@@ -7,7 +7,8 @@ PRs have a perf trajectory.
 Usage:
     PYTHONPATH=src python benchmarks/sweep_speed.py \
         [--out BENCH_sweep.json] [--record-baseline] [--smoke] \
-        [--backend numpy|jax] [--workers N]
+        [--backend numpy|jax|jax-pallas|jax-pallas-interpret] \
+        [--workers N] [--profile [DIR]]
 
 ``--record-baseline`` writes ``benchmarks/baseline_sweep.json`` instead
 (run once against the implementation you want to compare against).  When
@@ -28,7 +29,18 @@ subset-stacked engine.
 The full run's ``comparison`` block carries per-config speedups and
 ``dp_calls``/``dp_lambdas`` deltas vs baseline and previous PR, plus a
 ``smoke_backends`` block with warm (post-jit) per-backend walls on the
-smoke config.
+smoke config (including the Pallas backends when jax is available).
+
+Device columns (jax backends only, ``null`` under numpy): each result
+row records the backend transfer counters for its LAST rep —
+``h2d_lane_uploads`` / ``h2d_lane_bytes`` are host→device operand
+uploads (one per newly admitted rail-subset lane; warm rounds add
+zero) and ``kernel_dispatches`` counts device lane-kernel launches,
+so bytes-per-dispatch ≈ 0 is the device-resident steady state.
+
+``--profile DIR`` captures a jax profiler trace of one warm sweep
+compile (jit caches pre-warmed by an untraced run) for TensorBoard /
+Perfetto; DIR defaults to ``benchmarks/trace``.
 """
 
 from __future__ import annotations
@@ -65,17 +77,25 @@ def run_sweeps(*, smoke: bool = False, backend: str | None = None,
     n_rails = 2 if smoke else N_MAX_RAILS
     if smoke:
         reps = 1
+    from repro.core import get_backend
+
+    io = getattr(get_backend(backend), "io_stats", None)
     for network, frac in configs:
         rate = max_rate(network) * frac
         for policy in policies:
             key = f"{network}|{frac}|{policy}"
             walls = []
             for _ in range(reps):
+                mark = dict(io) if io is not None else None
                 s, wall = timed(schedule_for, network, rate, policy,
                                 n_max_rails=n_rails, backend=backend,
                                 sweep_workers=workers,
                                 stack_subsets=stack)
                 walls.append(wall)
+            # device columns: transfer/dispatch deltas of the LAST rep
+            # (see module docstring) — None on host-only backends
+            io_row = {k: io[k] - mark[k] for k in io} \
+                if io is not None else {}
             wall = min(walls)             # best-of-reps: noise guard
             stats = s.solver_stats if s is not None else {}
             out[key] = {
@@ -95,6 +115,9 @@ def run_sweeps(*, smoke: bool = False, backend: str | None = None,
                 "workers": stats.get("workers", 1),
                 "stacked_rounds": stats.get("stacked_rounds"),
                 "stacked_calls": stats.get("stacked_calls"),
+                "h2d_lane_uploads": io_row.get("h2d_lane_uploads"),
+                "h2d_lane_bytes": io_row.get("h2d_lane_bytes"),
+                "kernel_dispatches": io_row.get("kernel_dispatches"),
             }
             print(f"{key}: {wall:.2f}s  "
                   f"E={out[key]['e_total']}  rails={out[key]['rails']}  "
@@ -136,28 +159,67 @@ def compare(results: dict[str, dict], reference: dict[str, dict],
     return comparison
 
 
+def bench_backends() -> list[str]:
+    """Backends the bench can exercise here: the registry's names plus
+    the Pallas interpret mode whenever jax is importable (device mode
+    needs an accelerator, so it stays opt-in via ``--backend``)."""
+    from repro.core.backend import available_backends
+
+    names = list(available_backends())
+    if "jax" in names:
+        names.append("jax-pallas-interpret")
+    return names
+
+
 def smoke_backend_compare(reps: int = 3) -> dict[str, dict]:
     """Warm per-backend walls on the smoke config (first compile per
     backend is discarded — it pays one-time jit compilation).  Records
-    the 'jax no longer slower than numpy' claim of the stacked sweep."""
-    from repro.core.backend import available_backends
+    the 'jax no longer slower than numpy' claim of the stacked sweep,
+    with the device transfer columns per backend, and asserts every
+    backend reproduces the numpy schedule bit-for-bit (the stacked
+    kernel parity guard)."""
+    from repro.core import get_backend
 
     (network, frac), = SMOKE_CONFIGS
     rate = max_rate(network) * frac
     out: dict[str, dict] = {}
-    for backend in available_backends():
+    for backend in bench_backends():
         schedule_for(network, rate, "pfdnn", n_max_rails=2,
                      backend=backend)                        # warm-up
+        io = getattr(get_backend(backend), "io_stats", None)
         walls = []
         for _ in range(reps):
+            mark = dict(io) if io is not None else None
             s, wall = timed(schedule_for, network, rate, "pfdnn",
                             n_max_rails=2, backend=backend)
 
             walls.append(wall)
         out[backend] = {"wall_s": min(walls), "wall_all_s": walls,
                         "e_total": s.e_total, "rails": list(s.rails)}
+        if io is not None:
+            out[backend].update(
+                {k: io[k] - mark[k] for k in io})
+        ref = out["numpy"]
+        assert (s.e_total == ref["e_total"]
+                and list(s.rails) == ref["rails"]), \
+            f"{backend} smoke schedule diverged from numpy"
         print(f"smoke[{backend}]: {min(walls):.3f}s warm (best of {reps})")
     return out
+
+
+def profile_trace(backend: str | None, outdir: str) -> None:
+    """One warm sweep compile under ``jax.profiler.trace`` (an untraced
+    run first pays the jit compiles, so the trace shows the steady
+    state: lane kernels and D2H result collection, no tracing)."""
+    import jax
+
+    (network, frac), = SMOKE_CONFIGS
+    rate = max_rate(network) * frac
+    schedule_for(network, rate, "pfdnn", n_max_rails=2, backend=backend)
+    with jax.profiler.trace(outdir):
+        schedule_for(network, rate, "pfdnn", n_max_rails=2,
+                     backend=backend)
+    print(f"jax trace written to {outdir}")
 
 
 def main() -> None:
@@ -168,15 +230,31 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="one small config; assert the sweep emits a "
                          "feasible schedule and exit (CI guard)")
-    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+    ap.add_argument("--backend", default=None,
+                    choices=("numpy", "jax", "jax-pallas",
+                             "jax-pallas-interpret"),
                     help="solver array backend (default: $PFDNN_BACKEND "
-                         "or numpy)")
+                         "or numpy); the jax-pallas* names run the "
+                         "fused Pallas DP kernels (device columns "
+                         "h2d_lane_uploads/h2d_lane_bytes/"
+                         "kernel_dispatches are recorded per row)")
     ap.add_argument("--workers", type=int, default=None,
                     help="rail-sweep thread fan-out (default: "
                          "$PFDNN_WORKERS or serial)")
     ap.add_argument("--no-stack", action="store_true",
                     help="legacy per-subset sweep (stack_subsets=False)")
+    ap.add_argument("--profile", metavar="DIR", nargs="?",
+                    const=str(HERE / "trace"), default=None,
+                    help="write a jax profiler trace of one warm sweep "
+                         "compile to DIR (default benchmarks/trace) "
+                         "and exit; requires a jax backend")
     args = ap.parse_args()
+
+    if args.profile is not None:
+        if args.backend == "numpy":
+            ap.error("--profile requires a jax backend")
+        profile_trace(args.backend or "jax", args.profile)
+        return
 
     results = run_sweeps(smoke=args.smoke, backend=args.backend,
                          workers=args.workers, stack=not args.no_stack)
@@ -184,6 +262,15 @@ def main() -> None:
         row = next(iter(results.values()))
         assert row["e_total"] is not None and row["rails"], \
             "smoke sweep produced no schedule"
+        if (row["backend"] or "numpy") != "numpy":
+            # stacked-kernel parity guard: the jitted/Pallas smoke must
+            # reproduce the host sweep bit-for-bit
+            (network, frac), = SMOKE_CONFIGS
+            ref = schedule_for(network, max_rate(network) * frac,
+                               "pfdnn", n_max_rails=2, backend="numpy")
+            assert (row["e_total"] == ref.e_total
+                    and row["rails"] == list(ref.rails)), \
+                "smoke sweep diverged from the numpy backend"
         print("smoke sweep OK")
         return
     if args.record_baseline:

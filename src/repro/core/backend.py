@@ -37,6 +37,29 @@ Backend selection: ``get_backend(None)`` honours the ``PFDNN_BACKEND``
 environment variable (``numpy`` | ``jax``), defaulting to numpy, so the
 jax path stays strictly opt-in.
 
+``PFDNN_PALLAS`` layers the fused Pallas kernels of
+``repro.kernels.dp_sweep`` on top of the jax backend:  ``interpret``
+runs them in interpret mode (CPU-safe — the tier-1 correctness mode),
+``1`` / ``device`` compiles them for the accelerator.  The same modes
+are reachable as explicit backend names ``jax-pallas-interpret`` /
+``jax-pallas`` and per-compile via ``OrchestratorConfig.pallas``.
+Kernel results are bit-identical to the scan path in every mode (the
+tests pin this across all goldens).
+
+The jax backend is also **device-resident**: every :class:`BucketStack`
+gets a device mirror of its lane tensors, synced incrementally — each
+lane is uploaded ONCE when first seen, capacity growth copies on
+device, and the lane-indexed kernel entry points (``dp_multi_lanes``,
+``kbest_multi_lanes``, ``path_costs_lanes``) gather their operands from
+the mirror, so warm sweep rounds perform zero host→device operand
+transfers and only argmin indices / cost scalars come back.  The lanes
+API returns :class:`PendingResult` handles on request (``defer=True``)
+so the round scheduler can dispatch every group of a round before
+blocking on any result (jax async dispatch overlaps the rest);
+host→device traffic and dispatch counts are tallied in
+``JaxBackend.io_stats`` for the benches and the transfer-counting
+tests.
+
 Padding convention (:class:`PaddedArrays`): op costs are padded with 0
 and carry a ``valid`` mask; kernels mask *after* applying the λ weights
 (``inf`` only ever enters post-weighting), so negative idle-priced μ
@@ -60,6 +83,26 @@ import numpy as np
 
 _ENV_VAR = "PFDNN_BACKEND"
 _DEFAULT = "numpy"
+
+_PALLAS_VAR = "PFDNN_PALLAS"
+_PALLAS_MODES = {
+    "": None, "0": None, "off": None, "none": None, "false": None,
+    "interpret": "interpret",
+    "1": "device", "on": "device", "device": "device", "true": "device",
+}
+# explicit backend names for the two Pallas modes (equivalent to
+# name="jax" plus the matching PFDNN_PALLAS value)
+_PALLAS_NAMES = {"jax-pallas": "device",
+                 "jax-pallas-interpret": "interpret"}
+
+
+def _pallas_mode_from_env() -> str | None:
+    raw = os.environ.get(_PALLAS_VAR, "").strip().lower()
+    if raw not in _PALLAS_MODES:
+        raise ValueError(
+            f"{_PALLAS_VAR}={raw!r}: expected one of '', '0', 'off', "
+            "'none', 'false', 'interpret', '1', 'on', 'device', 'true'")
+    return _PALLAS_MODES[raw]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -301,6 +344,15 @@ class BucketStack:
         self._cap = 8
         self.slot: dict = {}
         self._lock = threading.Lock()
+        # monotonic lane-padding floor for the jitted stacked kernels:
+        # remembering the bucket's high-water mark means recompiles
+        # happen only on genuine growth, never when a fleet's live lane
+        # count shrinks and then regrows across rounds
+        self.lane_pad = 1
+        # backend-owned per-bucket scratch (device lane mirrors, host
+        # member-gather memos) — dies with the stack, so clearing or
+        # trimming the caches frees device buffers too
+        self.scratch: dict = {}
         L, S = n_layers, s_pad
         self._t_op = np.zeros((self._cap, L, S))
         self._e_op = np.zeros((self._cap, L, S))
@@ -358,6 +410,16 @@ class BucketStack:
                 valid=self._valid[b], t_trans=self._t_trans[b],
                 e_trans=self._e_trans[b], switch=self._switch[b],
                 sizes=tuple(int(s) for s in self._sizes[b]))
+
+    def lane_pad_for(self, n: int) -> int:
+        """Lane-padding bucket for an ``n``-lane call against this
+        store: ``lane_bucket(n)``, rounded up to the store's historical
+        maximum so kernel shapes only ever grow (see ``__init__``)."""
+        with self._lock:
+            b = lane_bucket(n)
+            if b > self.lane_pad:
+                self.lane_pad = b
+            return self.lane_pad
 
     def view(self) -> StackedArrays:
         # lock-free fast path: _view is only ever replaced whole (add
@@ -443,6 +505,53 @@ class StackCaches:
             self.member_stacks.clear()
 
 
+class PendingResult:
+    """Handle to an in-flight backend result.  The device computation
+    was already enqueued when the handle was constructed (jax dispatch
+    is asynchronous); :meth:`get` materializes — and memoizes — the
+    host value, and THAT is the blocking round barrier.  A scheduler
+    holding several handles has dispatched a whole round before it
+    collects the first result, overlapping Python round bookkeeping
+    with device execution."""
+
+    __slots__ = ("_fn", "_value", "_done")
+
+    def __init__(self, fn):
+        self._fn = fn
+        self._done = False
+        self._value = None
+
+    @classmethod
+    def ready(cls, value) -> "PendingResult":
+        """An already-materialized result (host fallbacks)."""
+        p = cls(None)
+        p._done = True
+        p._value = value
+        return p
+
+    def get(self):
+        if not self._done:
+            self._value = self._fn()
+            self._done = True
+            self._fn = None
+        return self._value
+
+
+class _LaneMirror:
+    """Device twin of a :class:`BucketStack`'s lane tensors (built and
+    synced by :meth:`JaxBackend._mirror`; lives in the stack's scratch
+    dict so it is dropped together with the host lanes)."""
+
+    __slots__ = ("arrays", "cap", "n")
+
+    def __init__(self):
+        # (t_op, e_op, valid, t_trans, e_trans, switch) device arrays
+        # at the mirrored capacity; rows [0, n) are resident lanes
+        self.arrays: tuple | None = None
+        self.cap = 0
+        self.n = 0
+
+
 # ----------------------------------------------------------- numpy
 
 class NumpyBackend:
@@ -450,6 +559,8 @@ class NumpyBackend:
 
     name = "numpy"
     jitted = False
+    # no device mirror — the round scheduler restacks members on host
+    device_lanes = False
 
     def dp_multi(self, padded: PaddedArrays, w_e: np.ndarray,
                  w_t: np.ndarray) -> np.ndarray:
@@ -741,14 +852,33 @@ def _kbest_stacked_numpy(stacked: StackedArrays, mus: np.ndarray,
 
 class JaxBackend:
     """jax.numpy + jit backend: the same kernels as ``lax.scan``
-    programs, compiled once per (L, S bucket, K) shape."""
+    programs, compiled once per (L, S bucket, K) shape.
+
+    ``pallas`` routes the stacked kernels through the fused Pallas
+    programs of ``repro.kernels.dp_sweep`` instead of the scan path:
+    ``"interpret"`` runs them in interpret mode (CPU-safe, bit-identical
+    — the tier-1 correctness mode), ``"device"`` compiles them for the
+    accelerator.  Non-stacked entry points keep their existing routing
+    either way — the sweep engine only ever issues stacked calls on its
+    hot path, and interpret-mode execution of the cold scalar probes
+    would dominate the CPU suite for no coverage gain.
+    """
 
     name = "jax"
     jitted = True
+    # exposes the device-resident lane entry points (dp_multi_lanes &
+    # co) that the round scheduler prefers over host member restacking
+    device_lanes = True
 
-    def __init__(self) -> None:
+    def __init__(self, pallas: str | None = None) -> None:
         import jax  # noqa: F401 — fail loudly at construction
 
+        if pallas not in (None, "interpret", "device"):
+            raise ValueError(
+                f"pallas={pallas!r}: expected None, 'interpret' or "
+                "'device'")
+        self.pallas_mode = pallas
+        self._interpret = pallas == "interpret"
         self._jax = jax
         self._dp = jax.jit(self._dp_impl)
         self._dp_stacked = jax.jit(jax.vmap(self._dp_impl))
@@ -757,6 +887,14 @@ class JaxBackend:
         # k is a static shape parameter of the k-best scan — one
         # compiled program per (k, stacked?) requested
         self._kbest_jits: dict[tuple[int, bool], object] = {}
+        # jitted lane-gather programs of the device-resident path,
+        # keyed (kind, k)
+        self._lanes_jits: dict[tuple[str, int], object] = {}
+        # host→device traffic and dispatch accounting for the
+        # device-lane path (benches and transfer-counting tests read
+        # this; increments are stats-only, so no lock)
+        self.io_stats = {"h2d_lane_uploads": 0, "h2d_lane_bytes": 0,
+                         "kernel_dispatches": 0}
         # On CPU hosts the jitted programs only pay for themselves on
         # reduction-heavy work: gather-bound path evaluation and tiny
         # DP slabs are dominated by dispatch + host↔device copies, so
@@ -765,6 +903,13 @@ class JaxBackend:
         # accelerator everything stays on device.
         self._host = NumpyBackend()
         self._cpu = jax.default_backend() == "cpu"
+        # same-shape lane-block rebuilds donate the old device buffer
+        # on real accelerators (donation on CPU is a no-op jax warns
+        # about, so it is skipped there)
+        self._set_block = jax.jit(
+            lambda arr, blk, b: jax.lax.dynamic_update_slice_in_dim(
+                arr, blk, b, 0),
+            donate_argnums=() if self._cpu else (0,))
 
     # backtracking and the DP share one compiled program; float64 is
     # scoped to the call so the repo's float32 jax code is unaffected.
@@ -944,7 +1089,11 @@ class JaxBackend:
     @staticmethod
     def _pad_lanes(stacked: StackedArrays) -> tuple[StackedArrays, int]:
         B = stacked.n_lanes
-        Bp = lane_bucket(B)
+        # honour the owning BucketStack's monotonic padding floor when
+        # the round scheduler provided one (stamped at stack creation),
+        # so shrink-then-regrow round widths reuse one compilation
+        Bp = max(lane_bucket(B),
+                 stacked.dev_cache.get("lane_pad_hint", 1))
         if Bp == B:
             return stacked, B
         if "lanes_pad" in stacked.dev_cache:    # memoized per instance
@@ -964,17 +1113,38 @@ class JaxBackend:
         return padded, B
 
     @staticmethod
-    def _pad_rows(arr: np.ndarray) -> tuple[np.ndarray, int]:
+    def _pad_rows(arr: np.ndarray, floor: int = 1
+                  ) -> tuple[np.ndarray, int]:
+        # ``floor`` pins a minimum bucket so every small row batch in
+        # a sweep shares one compiled gather program (the gather over
+        # pad rows is cheap; the recompiles it avoids are not)
         P = arr.shape[0]
-        Pp = lane_bucket(P)
+        Pp = max(lane_bucket(P), floor)
         if Pp == P:
             return arr, P
         idx = np.minimum(np.arange(Pp), P - 1)
         return arr[idx], P
 
+    @staticmethod
+    def _pad_cols(arrs: list[np.ndarray]) -> tuple[list[np.ndarray],
+                                                   int]:
+        """Pad the λ/μ column axis of per-lane weight rows to a
+        power-of-two bucket, repeating column 0.  Each column is an
+        independent DP problem, so the pad columns are computed and
+        sliced off without touching the real ones — and every round
+        width in a bucket reuses one compiled program instead of
+        retracing per distinct λ-batch size."""
+        K = arrs[0].shape[1]
+        Kp = lane_bucket(K)
+        if Kp == K:
+            return arrs, K
+        idx = np.minimum(np.arange(Kp), K - 1)
+        return [a[:, idx] for a in arrs], K
+
     def dp_multi_stacked(self, stacked: StackedArrays, w_e: np.ndarray,
                          w_t: np.ndarray) -> np.ndarray:
-        if self._cpu and np.size(w_e) * stacked.t_op[0].size * \
+        if self.pallas_mode is None and self._cpu and \
+                np.size(w_e) * stacked.t_op[0].size * \
                 stacked.s_pad < self._JIT_MIN_WORK:
             return self._host.dp_multi_stacked(stacked, w_e, w_t)
         jnp = self._jax.numpy
@@ -985,11 +1155,18 @@ class JaxBackend:
             pad = stacked.n_lanes - B
             w = np.concatenate([w, np.repeat(w[:1], pad, axis=0)])
             t = np.concatenate([t, np.repeat(t[:1], pad, axis=0)])
+        (w, t), K = self._pad_cols([w, t])
         dev = self._dev(stacked, self._DP_NAMES)
         with self._x64():
-            paths = self._dp_stacked(
-                *dev, jnp.asarray(w), jnp.asarray(t))
-            return np.asarray(paths, dtype=np.int64)[:B]
+            if self.pallas_mode is not None:
+                from repro.kernels.dp_sweep import dp_multi_stacked_pallas
+                paths = dp_multi_stacked_pallas(
+                    *dev, jnp.asarray(w), jnp.asarray(t),
+                    interpret=self._interpret)
+            else:
+                paths = self._dp_stacked(
+                    *dev, jnp.asarray(w), jnp.asarray(t))
+            return np.asarray(paths, dtype=np.int64)[:B, :K]
 
     def kbest_multi(self, padded: PaddedArrays, mus: np.ndarray,
                     k: int) -> tuple[np.ndarray, np.ndarray]:
@@ -1007,7 +1184,8 @@ class JaxBackend:
     def kbest_multi_stacked(self, stacked: StackedArrays,
                             mus: np.ndarray, k: int
                             ) -> tuple[np.ndarray, np.ndarray]:
-        if self._cpu and np.size(mus) * k * stacked.t_op[0].size * \
+        if self.pallas_mode is None and self._cpu and \
+                np.size(mus) * k * stacked.t_op[0].size * \
                 stacked.s_pad < self._KBEST_JIT_MIN_WORK:
             return self._host.kbest_multi_stacked(stacked, mus, k)
         jnp = self._jax.numpy
@@ -1016,12 +1194,20 @@ class JaxBackend:
         if stacked.n_lanes != B:
             m = np.concatenate(
                 [m, np.repeat(m[:1], stacked.n_lanes - B, axis=0)])
+        (m,), K = self._pad_cols([m])
         dev = self._dev(stacked, self._DP_NAMES)
         with self._x64():
-            paths, counts = self._kbest_fn(k, stacked=True)(
-                *dev, jnp.asarray(m))
-            return (np.asarray(paths, dtype=np.int64)[:B],
-                    np.asarray(counts, dtype=np.int64)[:B])
+            if self.pallas_mode is not None:
+                from repro.kernels.dp_sweep import (
+                    kbest_multi_stacked_pallas)
+                paths, counts = kbest_multi_stacked_pallas(
+                    *dev, jnp.asarray(m), k=k,
+                    interpret=self._interpret)
+            else:
+                paths, counts = self._kbest_fn(k, stacked=True)(
+                    *dev, jnp.asarray(m))
+            return (np.asarray(paths, dtype=np.int64)[:B, :K],
+                    np.asarray(counts, dtype=np.int64)[:B, :K])
 
     def _costs_stacked_impl(self, t_op, e_op, t_trans, e_trans, switch,
                             lanes, paths):
@@ -1045,6 +1231,29 @@ class JaxBackend:
     def path_costs_stacked(self, stacked: StackedArrays,
                            lanes: np.ndarray, paths: np.ndarray
                            ) -> dict[str, np.ndarray]:
+        if self.pallas_mode is not None and stacked.n_layers > 1:
+            # Pallas gather kernel returns PER-LAYER components; the
+            # sums happen here on the host with np.sum so they are
+            # bit-identical to the numpy backend's pairwise summation.
+            # (L == 1 has no transition components to gather — it falls
+            # through to the equivalent non-kernel paths below.)
+            jnp = self._jax.numpy
+            stacked, _ = self._pad_lanes(stacked)
+            lanes_p, P = self._pad_rows(
+                np.asarray(lanes, dtype=np.int64), floor=64)
+            paths_p, _ = self._pad_rows(
+                np.asarray(paths, dtype=np.int64), floor=64)
+            dev = self._dev(stacked, self._COST_NAMES)
+            from repro.kernels.dp_sweep import path_components_pallas
+            with self._x64():
+                comps = path_components_pallas(
+                    jnp.asarray(lanes_p), jnp.asarray(paths_p), *dev,
+                    interpret=self._interpret)
+            t, e, tt, et, sw = (np.asarray(c)[:P] for c in comps)
+            return {"t_op": t.sum(axis=1), "e_op": e.sum(axis=1),
+                    "t_trans": tt.sum(axis=1),
+                    "e_trans": et.sum(axis=1),
+                    "n_switch": sw.sum(axis=1).astype(np.int64)}
         if self._cpu:       # gather-bound: jit cannot win on a CPU host
             return self._host.path_costs_stacked(stacked, lanes, paths)
         jnp = self._jax.numpy
@@ -1062,6 +1271,272 @@ class JaxBackend:
                 "t_trans": np.asarray(t_trans)[:P],
                 "e_trans": np.asarray(e_trans)[:P],
                 "n_switch": np.asarray(n_switch, dtype=np.int64)[:P]}
+
+    # -- device-resident lane path ------------------------------------
+    # The round scheduler registers every live task's padded tensors as
+    # lanes of a per-bucket BucketStack; these entry points read the
+    # operands from the stack's device mirror instead of a per-round
+    # host member stack, so warm rounds upload nothing — only the small
+    # weight/μ rows go down and only index/scalar results come back.
+
+    _LANE_NAMES = ("_t_op", "_e_op", "_valid", "_t_trans", "_e_trans",
+                   "_switch")
+
+    # Device mirrors are allocated at this capacity floor even while
+    # the host store is still small: mirror shape is part of every
+    # lane-program jit key, so a mirror that tracked the host's 8 →
+    # 16 → 32 → 64 doubling would retrace the whole program family at
+    # each step.  64 lanes of padded operands is a few MB — cheap
+    # against four rounds of XLA recompilation.
+    _MIRROR_MIN_CAP = 64
+
+    def _mirror(self, store: BucketStack) -> _LaneMirror:
+        """Device mirror of a lane store, synced incrementally: each
+        lane's tensors are uploaded ONCE when first admitted (counted
+        in ``io_stats``), capacity growth re-allocates and copies on
+        device — no host round trip — and warm syncs are a pure
+        bookkeeping check.  The mirror lives in the store's scratch
+        dict, so dropping the stack (``ArtifactStore.clear`` /
+        ``trim_stacks``) frees the device buffers with it."""
+        key = ("jax_lanes",)
+        with store._lock:
+            m = store.scratch.get(key)
+            if m is None:
+                m = store.scratch[key] = _LaneMirror()
+            cap = max(self._MIRROR_MIN_CAP, store._cap)
+            if m.n == store.n and m.cap == cap:
+                return m
+            jnp = self._jax.numpy
+            host = [getattr(store, nm) for nm in self._LANE_NAMES]
+            with self._x64():
+                if m.cap != cap:
+                    old = m.arrays or (None,) * len(host)
+                    grown = []
+                    for arr, h in zip(old, host):
+                        new = jnp.zeros((cap,) + h.shape[1:],
+                                        dtype=h.dtype)
+                        if arr is not None and m.n:
+                            new = new.at[:m.n].set(arr[:m.n])
+                        grown.append(new)
+                    m.arrays = tuple(grown)
+                    m.cap = cap
+                if store.n > m.n:
+                    # all newly admitted lanes go up as ONE block per
+                    # tensor (6 dispatches total, not 6 per lane) —
+                    # counters still track per-lane admission
+                    m.arrays = tuple(
+                        self._set_block(arr, jnp.asarray(h[m.n:store.n]),
+                                        m.n)
+                        for arr, h in zip(m.arrays, host))
+                    self.io_stats["h2d_lane_uploads"] += store.n - m.n
+                    self.io_stats["h2d_lane_bytes"] += sum(
+                        h[m.n:store.n].nbytes for h in host)
+                m.n = store.n
+            return m
+
+    def _host_member_stack(self, store: BucketStack,
+                           lanes: Sequence[int]) -> StackedArrays:
+        """Host gather of a lane group into a :class:`StackedArrays` —
+        the CPU fallback of the lanes API for slabs too small to pay
+        for a jitted dispatch.  Memoized per membership (bounded FIFO):
+        round groups repeat while their tasks live, so warm rounds
+        reuse the gather exactly like the old member-stack cache."""
+        key = ("hostmember", tuple(lanes))
+        with store._lock:
+            hit = store.scratch.get(key)
+            if hit is not None:
+                return hit
+            idx = np.asarray(lanes, dtype=np.int64)
+            stack = StackedArrays(
+                t_op=store._t_op[idx], e_op=store._e_op[idx],
+                valid=store._valid[idx],
+                t_trans=store._t_trans[idx],
+                e_trans=store._e_trans[idx],
+                # DP / k-best never read the switch tensor — skip the
+                # [B, L-1, S, S] int64 gather (stack_padded idiom)
+                switch=np.broadcast_to(
+                    np.zeros((), dtype=np.int64),
+                    (len(lanes),) + store._switch.shape[1:]),
+                max_sizes=tuple(int(x)
+                                for x in store._sizes[idx].max(axis=0)))
+            memo = [k for k in store.scratch if k[0] == "hostmember"]
+            if len(memo) >= 32:
+                del store.scratch[memo[0]]
+            store.scratch[key] = stack
+            return stack
+
+    def _lanes_fn(self, kind: str, k: int = 0):
+        """Jitted lane-gather program per (kind, k): the mirror arrays
+        go in whole and the lane gather happens ON DEVICE, so the only
+        host→device traffic per call is the index/weight rows."""
+        key = (kind, k)
+        fn = self._lanes_jits.get(key)
+        if fn is not None:
+            return fn
+        jax = self._jax
+        pallas = self.pallas_mode is not None
+        interp = self._interpret
+        if kind == "dp":
+            if pallas:
+                from repro.kernels.dp_sweep import dp_multi_stacked_pallas
+
+                def impl(t_op, e_op, valid, tt, et, idx, w_e, w_t):
+                    return dp_multi_stacked_pallas(
+                        t_op[idx], e_op[idx], valid[idx], tt[idx],
+                        et[idx], w_e, w_t, interpret=interp)
+            else:
+                def impl(t_op, e_op, valid, tt, et, idx, w_e, w_t):
+                    return jax.vmap(self._dp_impl)(
+                        t_op[idx], e_op[idx], valid[idx], tt[idx],
+                        et[idx], w_e, w_t)
+        elif kind == "kbest":
+            if pallas:
+                from repro.kernels.dp_sweep import (
+                    kbest_multi_stacked_pallas)
+
+                def impl(t_op, e_op, valid, tt, et, idx, mus):
+                    return kbest_multi_stacked_pallas(
+                        t_op[idx], e_op[idx], valid[idx], tt[idx],
+                        et[idx], mus, k=k, interpret=interp)
+            else:
+                def impl(t_op, e_op, valid, tt, et, idx, mus):
+                    return jax.vmap(
+                        lambda *a: self._kbest_impl(*a, k=k))(
+                        t_op[idx], e_op[idx], valid[idx], tt[idx],
+                        et[idx], mus)
+        elif kind == "costs":
+            if pallas:
+                from repro.kernels.dp_sweep import path_components_pallas
+
+                def impl(t_op, e_op, tt, et, sw, lanes, paths):
+                    return path_components_pallas(
+                        lanes, paths, t_op, e_op, tt, et, sw,
+                        interpret=interp)
+            else:
+                # lane indices address the mirror directly — the
+                # existing stacked gather program needs no idx step
+                impl = self._costs_stacked_impl
+        else:
+            raise ValueError(f"unknown lanes kernel {kind!r}")
+        fn = jax.jit(impl)
+        return self._lanes_jits.setdefault(key, fn)
+
+    def _pad_lane_group(self, store: BucketStack, lanes: Sequence[int],
+                        rows: list[np.ndarray]
+                        ) -> tuple[np.ndarray, list[np.ndarray], int]:
+        """Pad a lane group (and its per-lane weight rows) to the
+        store's monotonic lane bucket, repeating lane 0 / row 0 — the
+        results of pad lanes are computed and discarded."""
+        B = len(lanes)
+        Bp = store.lane_pad_for(B)
+        idx = np.asarray(list(lanes) + [lanes[0]] * (Bp - B),
+                         dtype=np.int64)
+        if Bp != B:
+            rows = [np.concatenate(
+                [r, np.repeat(r[:1], Bp - B, axis=0)]) for r in rows]
+        return idx, rows, B
+
+    def dp_multi_lanes(self, store: BucketStack, lanes: Sequence[int],
+                       w_e: np.ndarray, w_t: np.ndarray, *,
+                       defer: bool = False):
+        """Stacked multi-λ DP over resident lanes of ``store``; lane
+        ``b`` is bit-identical to ``dp_multi_stacked`` on the member
+        stack of ``lanes``.  With ``defer=True`` returns a
+        :class:`PendingResult` (the kernel is dispatched now, the host
+        transfer happens at ``get()``)."""
+        w_e = np.asarray(w_e, dtype=float)
+        w_t = np.asarray(w_t, dtype=float)
+        L, S = store._t_op.shape[1], store._t_op.shape[2]
+        if self.pallas_mode is None and self._cpu and \
+                w_e.size * L * S * S < self._JIT_MIN_WORK:
+            out = self._host.dp_multi_stacked(
+                self._host_member_stack(store, lanes), w_e, w_t)
+            return PendingResult.ready(out) if defer else out
+        m = self._mirror(store)
+        idx, (w, t), B = self._pad_lane_group(store, lanes, [w_e, w_t])
+        (w, t), K = self._pad_cols([w, t])
+        jnp = self._jax.numpy
+        fn = self._lanes_fn("dp")
+        with self._x64():
+            dev = fn(*m.arrays[:5], jnp.asarray(idx),
+                     jnp.asarray(w), jnp.asarray(t))
+        self.io_stats["kernel_dispatches"] += 1
+        pend = PendingResult(
+            lambda: np.asarray(dev, dtype=np.int64)[:B, :K])
+        return pend if defer else pend.get()
+
+    def kbest_multi_lanes(self, store: BucketStack,
+                          lanes: Sequence[int], mus: np.ndarray,
+                          k: int, *, defer: bool = False):
+        """Stacked multi-μ k-best frontier over resident lanes (see
+        :meth:`dp_multi_lanes` for the defer contract)."""
+        mus = np.asarray(mus, dtype=float)
+        L, S = store._t_op.shape[1], store._t_op.shape[2]
+        if self.pallas_mode is None and self._cpu and \
+                mus.size * k * L * S * S < self._KBEST_JIT_MIN_WORK:
+            out = self._host.kbest_multi_stacked(
+                self._host_member_stack(store, lanes), mus, k)
+            return PendingResult.ready(out) if defer else out
+        m = self._mirror(store)
+        idx, (mr,), B = self._pad_lane_group(store, lanes, [mus])
+        (mr,), K = self._pad_cols([mr])
+        jnp = self._jax.numpy
+        fn = self._lanes_fn("kbest", k)
+        with self._x64():
+            dev_p, dev_c = fn(*m.arrays[:5], jnp.asarray(idx),
+                              jnp.asarray(mr))
+        self.io_stats["kernel_dispatches"] += 1
+        pend = PendingResult(lambda: (
+            np.asarray(dev_p, dtype=np.int64)[:B, :K],
+            np.asarray(dev_c, dtype=np.int64)[:B, :K]))
+        return pend if defer else pend.get()
+
+    def path_costs_lanes(self, store: BucketStack, lanes: np.ndarray,
+                         paths: np.ndarray, *, defer: bool = False):
+        """Summed cost components of paths on resident lanes (see
+        :meth:`dp_multi_lanes` for the defer contract).  Lane indices
+        are global stack slots, exactly as in ``path_costs_stacked`` on
+        ``store.view()``."""
+        lanes = np.asarray(lanes, dtype=np.int64)
+        paths = np.asarray(paths, dtype=np.int64)
+        L = store._t_op.shape[1]
+        if L == 1 or (self.pallas_mode is None and self._cpu):
+            # gather-bound on a CPU host; and L == 1 has no transition
+            # components for a kernel to gather
+            out = self._host.path_costs_stacked(store.view(), lanes,
+                                                paths)
+            return PendingResult.ready(out) if defer else out
+        m = self._mirror(store)
+        lanes_p, P = self._pad_rows(lanes, floor=64)
+        paths_p, _ = self._pad_rows(paths, floor=64)
+        cost_arrs = (m.arrays[0], m.arrays[1], m.arrays[3],
+                     m.arrays[4], m.arrays[5])
+        jnp = self._jax.numpy
+        fn = self._lanes_fn("costs")
+        with self._x64():
+            dev = fn(*cost_arrs, jnp.asarray(lanes_p),
+                     jnp.asarray(paths_p))
+        self.io_stats["kernel_dispatches"] += 1
+        if self.pallas_mode is not None:
+            def collect():
+                # host-side np.sum over the gathered components — the
+                # exact summation of the numpy backend
+                t, e, tt, et, sw = (np.asarray(c)[:P] for c in dev)
+                return {"t_op": t.sum(axis=1), "e_op": e.sum(axis=1),
+                        "t_trans": tt.sum(axis=1),
+                        "e_trans": et.sum(axis=1),
+                        "n_switch": sw.sum(axis=1).astype(np.int64)}
+        else:
+            def collect():
+                t, e, tt, et, sw = dev
+                return {"t_op": np.asarray(t)[:P],
+                        "e_op": np.asarray(e)[:P],
+                        "t_trans": np.asarray(tt)[:P],
+                        "e_trans": np.asarray(et)[:P],
+                        "n_switch": np.asarray(sw,
+                                               dtype=np.int64)[:P]}
+        pend = PendingResult(collect)
+        return pend if defer else pend.get()
 
 
 # -------------------------------------------------------- registry
@@ -1082,24 +1557,37 @@ def available_backends() -> tuple[str, ...]:
 
 def get_backend(name: str | None = None):
     """Resolve a backend by name (``None`` → ``$PFDNN_BACKEND`` or
-    numpy).  Instances are cached so jit caches persist across solves."""
+    numpy).  Instances are cached so jit caches persist across solves.
+
+    ``jax-pallas`` / ``jax-pallas-interpret`` name the jax backend with
+    the matching Pallas mode; plain ``jax`` consults ``$PFDNN_PALLAS``,
+    so the env var flips the whole process without touching configs.
+    Either spelling of a mode resolves to the same cached instance.
+    """
     if name is None:
         name = os.environ.get(_ENV_VAR, _DEFAULT).strip().lower() \
             or _DEFAULT
     if isinstance(name, (NumpyBackend, JaxBackend)):
         return name
-    if name not in _INSTANCES:
+    pallas = None
+    if name in _PALLAS_NAMES:
+        pallas = _PALLAS_NAMES[name]
+    elif name == "jax":
+        pallas = _pallas_mode_from_env()
+    key = name if pallas is None else f"jax+pallas-{pallas}"
+    if key not in _INSTANCES:
         if name == "numpy":
-            _INSTANCES[name] = NumpyBackend()
-        elif name == "jax":
+            _INSTANCES[key] = NumpyBackend()
+        elif name == "jax" or name in _PALLAS_NAMES:
             try:
-                _INSTANCES[name] = JaxBackend()
+                _INSTANCES[key] = JaxBackend(pallas=pallas)
             except ImportError as exc:
                 raise RuntimeError(
-                    "PFDNN backend 'jax' requested but jax is not "
+                    f"PFDNN backend {name!r} requested but jax is not "
                     "installed; install jax or use the numpy backend"
                 ) from exc
         else:
             raise ValueError(
-                f"unknown backend {name!r}; one of ('numpy', 'jax')")
-    return _INSTANCES[name]
+                f"unknown backend {name!r}; one of ('numpy', 'jax', "
+                "'jax-pallas', 'jax-pallas-interpret')")
+    return _INSTANCES[key]

@@ -215,6 +215,7 @@ def _compile_frontier(ctx: CompilationContext, goal: ParetoFront,
             results[deadline] = None           # placeholder: in a job
             jobs.append((deadline, sub, job))
     if jobs:
+        _wire_incumbent_seeds(jobs)
         fleet = run_stacked_sweeps([job.sweep for _, _, job in jobs],
                                    backend=cfg.backend, caches=caches)
         for deadline, sub, job in jobs:
@@ -224,6 +225,40 @@ def _compile_frontier(ctx: CompilationContext, goal: ParetoFront,
     return ParetoFrontier(
         network=ctx.network,
         points=[ParetoPoint(d, results[d]) for d in deadlines])
+
+
+def _wire_incumbent_seeds(jobs: list) -> None:
+    """Share per-point incumbents across adjacent frontier deadlines.
+
+    ``jobs`` is deadline-ascending (tightest first).  A subset solved
+    at a tighter deadline stays feasible at any looser one — same path,
+    same op/transition energy, only the idle slack grows — so its
+    schedule re-priced at the looser deadline,
+
+        ê  =  (e_op + e_trans) + idle.energy(d_loose − t_infer),
+
+    is an *achievable* energy there (the idle model never depends on
+    the deadline; the op order above matches ``finish_costs`` exactly).
+    Seeding ê as the looser sweep's incumbent strengthens its
+    warm-start bound cuts before (or while) that subset solves itself.
+    Selection stays identical to independent per-point compiles:
+    achievable seeds can only *cut* subsets the exact solve would also
+    have rejected, and ``StackedSweep.selection`` reads solved results
+    only (see :meth:`~repro.core.rails.StackedSweep.seed_incumbent`).
+    Because the sweeps run co-scheduled in one round loop, tight-point
+    results land while loose points are still admitting — the seeds
+    arrive in time to cut real work."""
+    for (_, _, tight_job), (d_loose, _, loose_job) in zip(jobs,
+                                                          jobs[1:]):
+        def seed(rails, result, tight_job=tight_job,
+                 loose_job=loose_job, d_loose=d_loose):
+            problem = tight_job.problems.get(tuple(rails))
+            if problem is None or not result.get("feasible", True):
+                return
+            e_hat = (result["e_op"] + result["e_trans"]) \
+                + problem.idle.energy(d_loose - result["t_infer"])
+            loose_job.sweep.seed_incumbent(e_hat, tuple(rails))
+        tight_job.sweep.on_result = seed
 
 
 def _accepts_goal(policy) -> bool:

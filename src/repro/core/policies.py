@@ -83,8 +83,15 @@ class OrchestratorConfig:
     # backend evaluator, so energies can drift by an ulp).
     batch_lambda: bool = True
     # array backend for the DP/evaluator kernels: None → $PFDNN_BACKEND
-    # or numpy; "jax" runs them as jitted lax.scan programs.
+    # or numpy; "jax" runs them as jitted lax.scan programs (plus the
+    # explicit "jax-pallas" / "jax-pallas-interpret" mode names).
     backend: str | None = None
+    # Pallas kernel mode for the jax backend: None → $PFDNN_PALLAS (or
+    # off); "interpret" runs the fused dp_sweep kernels in interpret
+    # mode (CPU-safe, bit-identical — the tier-1 correctness mode),
+    # "device" compiles them for the accelerator.  Ignored for the
+    # numpy backend; rewritten into the backend name in __post_init__.
+    pallas: str | None = None
     # rail-sweep fan-out: worker threads for select_rails (None →
     # $PFDNN_WORKERS or serial).  The parallel sweep selects the same
     # rails as the serial one (see repro.core.rails.select_rails).
@@ -101,6 +108,20 @@ class OrchestratorConfig:
     # or 16): larger stacks amortize dispatch better, smaller ones make
     # the incumbent/ceiling cuts bite earlier.
     stack_max_live: int | None = None
+
+    def __post_init__(self):
+        if self.pallas is not None:
+            if self.pallas not in ("interpret", "device"):
+                raise ValueError(
+                    f"pallas={self.pallas!r}: expected None, "
+                    "'interpret' or 'device'")
+            if self.backend in (None, "jax"):
+                self.backend = "jax-pallas" if self.pallas == "device" \
+                    else "jax-pallas-interpret"
+            elif self.backend == "numpy":
+                raise ValueError(
+                    "pallas= requires the jax backend; backend='numpy' "
+                    "cannot run Pallas kernels")
 
 
 PolicyFn = Callable[..., PowerSchedule | None]

@@ -15,7 +15,7 @@ from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
-from repro.core.backend import StackCaches, get_backend
+from repro.core.backend import PendingResult, StackCaches, get_backend
 from repro.core.refinement import move_scores
 
 
@@ -413,6 +413,13 @@ class StackedSweep:
         # same enumeration order as select_rails: high-voltage subsets
         # first, so the infeasibility ceiling is established early
         self.subset_list.sort(key=lambda s: -max(s))
+        self._subset_index = {tuple(s): i
+                              for i, s in enumerate(self.subset_list)}
+        # optional observer called with (rails, result) as feasible
+        # subsets finish — the frontier compiler uses it to re-price a
+        # tighter deadline's results into incumbent seeds for the next
+        # looser point (see seed_incumbent)
+        self.on_result = None
         if max_live is None:
             max_live = _DEFAULT_MAX_LIVE
         self.max_live = max(1, int(max_live))
@@ -466,6 +473,32 @@ class StackedSweep:
                                 state["incumbent_idx"]):
             state["incumbent"] = score
             state["incumbent_idx"] = task.idx
+        if self.on_result is not None:
+            self.on_result(task.rails, result)
+
+    def seed_incumbent(self, score: float,
+                       rails: tuple[float, ...]) -> None:
+        """Merge an externally-derived *achievable* score for ``rails``
+        into the incumbent, with exactly :meth:`finish`'s lexicographic
+        ``(score, enumeration index)`` order.
+
+        The caller guarantees ``score`` is attainable by this sweep's
+        own solve of ``rails`` (the frontier compiler re-prices a
+        tighter deadline's schedule, which stays feasible at any looser
+        deadline).  An achievable score can only strengthen the
+        admission bound cuts — it never beats the subset's own exact
+        result in :meth:`selection` (which reads solved results only),
+        and the lex tie order makes a seed at exactly its own lower
+        bound unable to cut its own subset.  Unknown rails (already
+        filtered subsets) are ignored."""
+        idx = self._subset_index.get(tuple(rails))
+        if idx is None:
+            return
+        state = self.state
+        if (score, idx) < (state["incumbent"],
+                           state["incumbent_idx"]):
+            state["incumbent"] = score
+            state["incumbent_idx"] = idx
 
     def selection(self) -> tuple[dict | None, tuple[float, ...] | None]:
         """Lexicographic ``(objective score, enumeration order)``
@@ -545,8 +578,21 @@ def run_stacked_sweeps(
     reuse resident lane content (content-keyed, see
     :class:`~repro.core.backend.BucketStack`).  Returns the fleet-level
     stats dict (rounds, stacked calls, lane-store hits).
+
+    Backends exposing the device-resident lane API
+    (``device_lanes = True``, i.e. the jax backend) are driven through
+    it: kernel groups are keyed by bucket *signature* (all members of a
+    group must share one lane store) and the operands come from the
+    store's device mirror — no per-round member restacking, zero warm
+    host→device operand uploads.  Dispatch is **asynchronous**: every
+    group of a phase is dispatched (``defer=True``) before any result
+    is collected, so Python-side round bookkeeping overlaps device
+    execution; the ``PendingResult.get()`` calls below are the round
+    barriers.  Host-only backends take the same code path with
+    already-materialized handles.
     """
     bk = get_backend(backend)
+    lanes_api = getattr(bk, "device_lanes", False)
     if caches is None:
         caches = StackCaches()
     fleet = {"stacked_rounds": 0, "stacked_calls": 0,
@@ -570,7 +616,14 @@ def run_stacked_sweeps(
         # reduction kernels never read them (cost gathers go through
         # the persistent BucketStack views instead)
         key = (tasks[0].bucket,) + tuple(t.uid for t in tasks)
-        return caches.member_stack(key, [t.padded for t in tasks])
+        stack = caches.member_stack(key, [t.padded for t in tasks])
+        # stamp the owning store's monotonic lane-padding floor so the
+        # jitted stacked kernels only ever recompile on genuine growth
+        # (never when the live lane count shrinks and regrows)
+        stack.dev_cache.setdefault(
+            "lane_pad_hint",
+            tasks[0].lane_store.lane_pad_for(len(tasks)))
+        return stack
 
     try:
         admit_all()
@@ -586,10 +639,15 @@ def run_stacked_sweeps(
             groups: dict[tuple, list] = {}
             for task in active:
                 req = task.request
+                # device-lane backends read operands from the per-store
+                # mirror, so groups must share one lane store — key by
+                # bucket signature (it embeds the (L, S) bucket); host
+                # backends keep the wider shape-only grouping
+                bucket = task.bucket_sig if lanes_api else task.bucket
                 if req.kind == "dp":
-                    key = ("dp", task.bucket, len(req.w_e))
+                    key = ("dp", bucket, len(req.w_e))
                 elif req.kind == "kbest":
-                    key = ("kbest", task.bucket, len(req.mus), req.k)
+                    key = ("kbest", bucket, len(req.mus), req.k)
                 elif req.kind == "moves":
                     # move scoring folds in the deadline/idle math, so the
                     # group additionally keys on (t_max, idle); the lanes
@@ -600,23 +658,36 @@ def run_stacked_sweeps(
                     continue
                 groups.setdefault(key, []).append(task)
             raw: dict[int, object] = {}
+            # dispatch EVERY group before collecting any result: on an
+            # async-dispatch backend the device works through the whole
+            # round while Python stages the remaining groups
+            inflight: list[tuple[tuple, list, PendingResult]] = []
             for key, tasks in groups.items():
                 fleet["stacked_calls"] += 1
                 if key[0] == "dp":
-                    stack = stack_for(tasks)
                     w_e = np.stack([t.request.w_e for t in tasks])
                     w_t = np.stack([t.request.w_t for t in tasks])
-                    paths = bk.dp_multi_stacked(stack, w_e, w_t)
-                    for b, t in enumerate(tasks):
-                        raw[t.uid] = paths[b]
+                    if lanes_api:
+                        pend = bk.dp_multi_lanes(
+                            tasks[0].lane_store,
+                            [t.lane for t in tasks], w_e, w_t,
+                            defer=True)
+                    else:
+                        pend = PendingResult.ready(
+                            bk.dp_multi_stacked(stack_for(tasks),
+                                                w_e, w_t))
                 elif key[0] == "kbest":
-                    stack = stack_for(tasks)
                     mus = np.stack([np.asarray(t.request.mus, dtype=float)
                                     for t in tasks])
-                    paths, counts = bk.kbest_multi_stacked(stack, mus,
-                                                           key[3])
-                    for b, t in enumerate(tasks):
-                        raw[t.uid] = (paths[b], counts[b])
+                    if lanes_api:
+                        pend = bk.kbest_multi_lanes(
+                            tasks[0].lane_store,
+                            [t.lane for t in tasks], mus, key[3],
+                            defer=True)
+                    else:
+                        pend = PendingResult.ready(
+                            bk.kbest_multi_stacked(stack_for(tasks),
+                                                   mus, key[3]))
                 else:                                 # refinement moves
                     counts = [len(t.request.paths) for t in tasks]
                     bs = tasks[0].lane_store
@@ -626,10 +697,24 @@ def run_stacked_sweeps(
                     pa = np.concatenate([t.request.paths for t in tasks])
                     t_inf = np.concatenate([t.request.aux[0] for t in tasks])
                     e_idl = np.concatenate([t.request.aux[1] for t in tasks])
-                    mv_layer, mv_state, mv_gain = move_scores(
-                        bs.view(), lanes, pa, t_inf, e_idl, key[2], key[3])
+                    pend = PendingResult.ready(move_scores(
+                        bs.view(), lanes, pa, t_inf, e_idl,
+                        key[2], key[3]))
+                inflight.append((key, tasks, pend))
+            for key, tasks, pend in inflight:       # round barrier
+                if key[0] == "dp":
+                    paths = pend.get()
+                    for b, t in enumerate(tasks):
+                        raw[t.uid] = paths[b]
+                elif key[0] == "kbest":
+                    paths, counts = pend.get()
+                    for b, t in enumerate(tasks):
+                        raw[t.uid] = (paths[b], counts[b])
+                else:
+                    mv_layer, mv_state, mv_gain = pend.get()
                     off = 0
-                    for t, n in zip(tasks, counts):
+                    for t in tasks:
+                        n = len(t.request.paths)
                         raw[t.uid] = (mv_layer[off:off + n],
                                       mv_state[off:off + n],
                                       mv_gain[off:off + n])
@@ -649,6 +734,9 @@ def run_stacked_sweeps(
                         fin = (t.problem.t_max, t.problem.idle)
                         by_bucket.setdefault(t.bucket_sig, {}) \
                             .setdefault(fin, []).append(t)
+                # dispatch every bucket's gather, then collect — same
+                # async overlap as the kernel phase
+                evals: list[tuple[dict, np.ndarray, PendingResult]] = []
                 for sig, fin_groups in by_bucket.items():
                     need = [t for sub in fin_groups.values() for t in sub]
                     bs = need[0].lane_store
@@ -657,7 +745,16 @@ def run_stacked_sweeps(
                                  dtype=np.int64) for t in need])
                     paths = np.concatenate([fresh[t.uid] for t in need])
                     fleet["stacked_calls"] += 1
-                    costs = bk.path_costs_stacked(bs.view(), lanes, paths)
+                    if lanes_api:
+                        pend = bk.path_costs_lanes(bs, lanes, paths,
+                                                   defer=True)
+                    else:
+                        pend = PendingResult.ready(
+                            bk.path_costs_stacked(bs.view(), lanes,
+                                                  paths))
+                    evals.append((fin_groups, paths, pend))
+                for fin_groups, paths, pend in evals:   # round barrier
+                    costs = pend.get()
                     # the deadline/idle finishing math is shared per
                     # (t_max, idle) subgroup — one vectorized pass each,
                     # row-identical to per-task evaluation

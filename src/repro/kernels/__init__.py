@@ -9,8 +9,18 @@ Each kernel ships with a pure-jnp oracle in ref.py and a jit'd public
 wrapper in ops.py; correctness is swept over shapes/dtypes in
 tests/test_kernels.py with interpret=True (CPU) — the BlockSpec tiling
 targets TPU VMEM/MXU alignment (multiples of 128 on minor dims).
+
+dp_sweep.py holds the solver-side kernels: the fused argmin-gather
+DP / k-best / path-gather programs behind the jax backend's Pallas
+mode (see repro.core.backend), pinned bit-identical to the numpy
+kernels in tests/test_pallas_sweep.py.
 """
 
+from repro.kernels.dp_sweep import (
+    dp_multi_stacked_pallas,
+    kbest_multi_stacked_pallas,
+    path_components_pallas,
+)
 from repro.kernels.ops import (
     attention_bshd,
     decode_bshd,
@@ -19,4 +29,5 @@ from repro.kernels.ops import (
 )
 
 __all__ = ["attention_bshd", "decode_bshd", "int8_linear",
-           "quantize_int8"]
+           "quantize_int8", "dp_multi_stacked_pallas",
+           "kbest_multi_stacked_pallas", "path_components_pallas"]

@@ -33,6 +33,14 @@ memoizes backend instances, and jitted programs key on padded shapes);
 :meth:`ArtifactStore.backend` exposes them so the store is the single
 handle a service owns.
 
+Device residency rides on the same ownership: the jax backend keeps a
+device mirror of every lane store inside ``BucketStack.scratch`` (one
+upload per lane, warm rounds transfer nothing — see
+``JaxBackend._mirror``), so ``clear(stacks=True)`` / ``trim_stacks``
+free the device buffers together with the host lanes, and
+:meth:`stats` reports the backend's transfer counters alongside the
+lane counts.
+
 All caches hold immutable values; mutating operations take the store
 lock, and value recomputation races at worst duplicate work (identical
 content), never tear a read — safe for concurrent ``compile_many``.
@@ -239,7 +247,7 @@ class ArtifactStore:
 
     def stats(self) -> dict:
         with self._lock:
-            return {
+            out = {
                 "characterizations": len(self._characterization),
                 "masters": len(self._masters),
                 "transitions": len(self._transitions),
@@ -249,6 +257,13 @@ class ArtifactStore:
                 "hits": dict(self.hits),
                 "misses": dict(self.misses),
             }
+        # device-lane transfer counters of the default backend (only
+        # the jax backend keeps them) — h2d uploads/bytes should stay
+        # flat across warm rounds when lanes are device-resident
+        io = getattr(get_backend(), "io_stats", None)
+        if io is not None:
+            out["backend_io"] = dict(io)
+        return out
 
     def clear(self, *, schedules: bool = True, stacks: bool = True,
               tables: bool = True) -> None:
