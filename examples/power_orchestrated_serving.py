@@ -21,12 +21,19 @@ from repro.models.edge_cnn import edge_network
 from repro.models.transformer import init_params
 from repro.perfmodel import characterize_network, plan_banks
 from repro.serve import (
+    AdaptiveScheduler,
     CompileRequest,
     CompileService,
     EngineConfig,
+    FaultConfig,
+    FaultInjector,
     PeriodicScheduler,
     PowerRuntime,
     ServingEngine,
+    StaticSchedulePolicy,
+    TrafficConfig,
+    TrafficSimulator,
+    serve_trace,
 )
 
 # ---- LM serving side: continuous batching over a reduced qwen2 ----
@@ -71,3 +78,37 @@ print(f"[power] store after the fleet compile: "
       f"{service.store.stats()['resident_lanes']} resident lanes")
 print("\nPF-DNN matches greedy+gating at low rates (abundant slack) and "
       "wins at high rates — paper §6.1.")
+
+# ---- online serving under bursty traffic + injected faults ----
+# One compile_many fleet call precompiles the whole contingency set
+# (frontier snap points, deadline-tightened variants, the aggressive
+# max-performance point); the adaptive plane then snaps between those
+# precompiled points as the arrival rate drifts — never a blocking
+# compile on the serving path.
+sq_specs = edge_network("squeezenet1.1")
+sq_costs = characterize_network(sq_specs, EDGE40NM_DEFAULT)
+sq_plan = plan_banks(sq_costs, EDGE40NM_DEFAULT)
+UTIL = 0.85                      # provisioning headroom, both sides
+bundle = service.compile_contingencies(
+    sq_specs, 60.0 / UTIL, tighten_frac=0.92, network="squeezenet1.1")
+static_sched = bundle.points[bundle.base_deadline_s]
+
+times = TrafficSimulator(TrafficConfig(
+    60.0, scenario="bursty", seed=3, jitter_sigma=0.05,
+    burst_rate_mult=1.25, lull_rate_mult=0.4)).frame_times(360)
+faults = FaultConfig(seed=7, op_sigma=0.02, trans_sigma=0.1,
+                     p_trans_spike=0.02, p_drop=0.01, p_late=0.01,
+                     late_max_s=0.003)
+
+static = serve_trace(
+    times, StaticSchedulePolicy(static_sched, sq_costs, sq_plan,
+                                EDGE40NM_DEFAULT),
+    injector=FaultInjector(faults, len(sq_costs)))
+plane = AdaptiveScheduler(bundle, sq_costs, sq_plan, EDGE40NM_DEFAULT,
+                          service=service, specs=sq_specs)
+adaptive = serve_trace(times, plane,
+                       injector=FaultInjector(faults, len(sq_costs)))
+print("\n[online] bursty traffic, identical fault trace:")
+print(f"  static   {static.summary()}")
+print(f"  adaptive {adaptive.summary()}")
+print(f"  control events: {adaptive.events.kinds()}")

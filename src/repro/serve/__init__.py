@@ -1,10 +1,39 @@
+from repro.serve.control_plane import (
+    AdaptiveConfig,
+    AdaptiveScheduler,
+    AsyncResolver,
+    ControlEvent,
+    EventLog,
+    MissLedger,
+    RateTracker,
+    ServeReport,
+    StaticSchedulePolicy,
+    serve_trace,
+)
 from repro.serve.engine import EngineConfig, ServingEngine
-from repro.serve.power_runtime import PowerRuntime, simulate_interval
+from repro.serve.faults import FaultConfig, FaultInjector, linear_drift
+from repro.serve.power_runtime import (
+    LedgerMismatch,
+    PowerRuntime,
+    simulate_interval,
+)
 from repro.serve.scheduler import PeriodicScheduler
+from repro.serve.traffic import SCENARIOS, TrafficConfig, TrafficSimulator
 # the compile-side of the serving deployment: schedules served by
 # PowerRuntime are produced by the fleet compile service
-from repro.service import ArtifactStore, CompileRequest, CompileService
+from repro.service import (
+    ArtifactStore,
+    CompileRequest,
+    CompileService,
+    ContingencyBundle,
+)
 
 __all__ = ["ServingEngine", "EngineConfig", "PeriodicScheduler",
-           "PowerRuntime", "simulate_interval",
-           "CompileService", "CompileRequest", "ArtifactStore"]
+           "PowerRuntime", "simulate_interval", "LedgerMismatch",
+           "FaultConfig", "FaultInjector", "linear_drift",
+           "TrafficConfig", "TrafficSimulator", "SCENARIOS",
+           "AdaptiveScheduler", "AdaptiveConfig", "StaticSchedulePolicy",
+           "RateTracker", "MissLedger", "AsyncResolver",
+           "EventLog", "ControlEvent", "ServeReport", "serve_trace",
+           "CompileService", "CompileRequest", "ArtifactStore",
+           "ContingencyBundle"]

@@ -1,17 +1,27 @@
 """Batched serving engine with continuous batching.
 
-Slots model: a fixed decode batch of ``max_batch`` slots; finished
-sequences free their slot and the next queued request is prefetched into
-it (prefill) without disturbing the other slots' KV state.  This is the
-standard continuous-batching design (vLLM-style) restricted to a
-fixed-capacity cache per slot — adequate for the paper's deterministic
-periodic workloads and exercised end-to-end in tests and examples.
+Slots model: a fixed decode batch of ``max_batch`` slots; a finished
+sequence frees its slot and the next queued request is prefilled into
+it *mid-batch* without disturbing the other slots' KV state (the
+standard vLLM-style continuous-batching design restricted to a
+fixed-capacity cache per slot).  Per-slot refill works by prefilling
+the new request as a batch of one and scattering every leaf of its
+decode state into the live batch state at the freed slot's batch index.
+
+Token flow: each live slot holds the logits of its *next* token
+(``_logits``).  A step emits one token per live slot from those logits,
+then advances the whole batch one decode step with the emitted tokens
+as inputs — so a freshly prefilled slot's first token comes from its
+prefill logits and its cache is only ever written with tokens it really
+emitted.  Finished requests retire to ``completed`` (an explicit list —
+consumed by :meth:`run_to_completion`) and stop receiving tokens; their
+slot is refilled on the next step when the queue is non-empty.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +46,34 @@ class Request:
     prompt: np.ndarray            # [S] int32
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # set when run_to_completion exhausted max_steps with this request
+    # still in flight: generation is incomplete but not lost
+    truncated: bool = False
+
+
+def _scatter_slot(bleaf, sleaf, slot: int, max_batch: int):
+    """Write a batch-of-one state leaf into the batch state at ``slot``.
+
+    The batch axis is identified per-leaf as the (unique) axis where
+    the full-batch shape and the single-request shape disagree — every
+    other dimension of a decode-state leaf is batch-independent, so
+    shapes can only differ there.  Leaves with identical shapes carry
+    no batch axis (shared constants) and pass through unchanged.
+    """
+    bleaf = jnp.asarray(bleaf)
+    sleaf = jnp.asarray(sleaf)
+    if bleaf.shape == sleaf.shape:
+        return sleaf if max_batch == 1 else bleaf
+    diff = [i for i, (a, b) in enumerate(zip(bleaf.shape, sleaf.shape))
+            if a != b]
+    if len(diff) != 1 or sleaf.shape[diff[0]] != 1:
+        raise ValueError(
+            f"cannot identify the batch axis of a decode-state leaf: "
+            f"batch shape {bleaf.shape} vs single {sleaf.shape}")
+    ax = diff[0]
+    idx = tuple(slot if i == ax else slice(None)
+                for i in range(bleaf.ndim))
+    return bleaf.at[idx].set(jnp.take(sleaf, 0, axis=ax))
 
 
 class ServingEngine:
@@ -47,7 +85,9 @@ class ServingEngine:
         self.rt = rt or Runtime()
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}     # slot → request
+        self.completed: list[Request] = []       # finished, un-consumed
         self.state: dict | None = None
+        self._logits: np.ndarray | None = None   # [B, V] next-token logits
         self._next_rid = 0
         self._decode = jax.jit(
             lambda p, s, t: decode_step(p, cfg, s, t, self.rt))
@@ -60,6 +100,14 @@ class ServingEngine:
         return rid
 
     # -- internals -----------------------------------------------------
+    def _prefill_inputs(self, toks: np.ndarray) -> dict:
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "audio":
+            batch["encoder_frames"] = jnp.zeros(
+                (toks.shape[0], self.cfg.encoder_seq, self.cfg.d_model),
+                self.cfg.jnp_dtype)
+        return batch
+
     def _prefill_batch(self, requests: list[Request]) -> None:
         """Prefill a fresh batch (uniform right-aligned padding)."""
         ec = self.ecfg
@@ -68,60 +116,98 @@ class ServingEngine:
         toks = np.zeros((b, max_len), np.int32)
         for slot, r in enumerate(requests):
             toks[slot, max_len - len(r.prompt):] = r.prompt
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.family == "audio":
-            batch["encoder_frames"] = jnp.zeros(
-                (b, self.cfg.encoder_seq, self.cfg.d_model),
-                self.cfg.jnp_dtype)
-        logits, state = prefill(self.params, self.cfg, batch, self.rt,
+        logits, state = prefill(self.params, self.cfg,
+                                self._prefill_inputs(toks), self.rt,
                                 cache_len=ec.cache_len)
         self.state = state
         self.active = dict(enumerate(requests))
-        self._last_logits = logits
+        # np.array (copy): per-slot refill writes rows in place
+        self._logits = np.array(logits)
+
+    def _prefill_slot(self, slot: int, r: Request) -> None:
+        """Prefill one request as a batch of one and scatter its decode
+        state into the live batch state at ``slot`` — the other slots'
+        KV caches are untouched."""
+        logits, state1 = prefill(self.params, self.cfg,
+                                 self._prefill_inputs(r.prompt[None, :]),
+                                 self.rt, cache_len=self.ecfg.cache_len)
+        self.state = jax.tree.map(
+            lambda bleaf, sleaf: _scatter_slot(
+                bleaf, sleaf, slot, self.ecfg.max_batch),
+            self.state, state1)
+        self.active[slot] = r
+        self._logits[slot] = np.asarray(logits)[0]
+
+    def _retire_finished(self) -> None:
+        for slot, r in list(self.active.items()):
+            if r.done:
+                self.completed.append(r)
+                del self.active[slot]
+        if not self.active:
+            # batch fully drained → next intake prefills fresh
+            self.state = None
+            self._logits = None
 
     def step(self) -> list[tuple[int, int]]:
         """One engine step; returns [(rid, token)] emitted this step."""
         ec = self.ecfg
+        # 1) retire finished sequences and refill their slots mid-batch
+        self._retire_finished()
         if self.state is None:
             if not self.queue:
                 return []
             take = self.queue[:ec.max_batch]
             self.queue = self.queue[ec.max_batch:]
             self._prefill_batch(take)
-            logits = self._last_logits
         else:
-            tokens = np.zeros((ec.max_batch,), np.int32)
-            for slot, r in self.active.items():
-                if r.generated:
-                    tokens[slot] = r.generated[-1]
-            logits, self.state = self._decode(
-                self.params, self.state, jnp.asarray(tokens))
-
-        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+            for slot in range(ec.max_batch):
+                if not self.queue:
+                    break
+                if slot not in self.active:
+                    self._prefill_slot(slot, self.queue.pop(0))
+        # 2) emit one token per live slot from its next-token logits
+        next_tokens = np.argmax(self._logits, axis=-1)
         emitted = []
-        for slot, r in list(self.active.items()):
-            if r.done:
-                continue
+        feed = np.zeros((ec.max_batch,), np.int32)
+        for slot, r in self.active.items():
             tok = int(next_tokens[slot]) % self.cfg.vocab_size
             r.generated.append(tok)
             emitted.append((r.rid, tok))
+            feed[slot] = tok
             if (tok == ec.eos_token
                     or len(r.generated) >= ec.max_new_tokens):
                 r.done = True
-        if all(r.done for r in self.active.values()):
-            # batch drained → next batch will prefill fresh
-            self.finished = list(self.active.values())
-            self.active = {}
-            self.state = None
+        # 3) advance the cache one decode step for continuing slots
+        #    (skipped when every live sequence just finished — done
+        #    requests never burn decode work)
+        if any(not r.done for r in self.active.values()):
+            logits, self.state = self._decode(
+                self.params, self.state, jnp.asarray(feed))
+            self._logits = np.array(logits)
         return emitted
 
-    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
-        done: list[Request] = []
+    def run_to_completion(self, max_steps: int = 10_000
+                          ) -> list[Request]:
+        """Serve until queue and batch drain (or ``max_steps``).
+
+        Returns every finished request, consuming ``completed``.  If
+        ``max_steps`` runs out with sequences still in flight, those
+        requests are returned too, flagged ``truncated=True`` (their
+        partial generations intact) instead of being silently dropped;
+        never-started requests remain in ``queue``.
+        """
         for _ in range(max_steps):
             if not self.queue and not self.active:
                 break
             self.step()
-            if not self.active and hasattr(self, "finished"):
-                done.extend(self.finished)
-                del self.finished
+        self._retire_finished()
+        done, self.completed = self.completed, []
+        if self.active:
+            for slot in sorted(self.active):
+                r = self.active[slot]
+                r.truncated = True
+                done.append(r)
+            self.active = {}
+            self.state = None
+            self._logits = None
         return done

@@ -6,13 +6,23 @@ model: it walks the register-write program anchor by anchor, applies
 rail switches / bank gating with their transition costs, accumulates the
 per-layer energy/latency ledger, and enforces the deadline.  Because the
 schedule is static and the workload deterministic (§2.2), this simulated
-execution *is* the deployment semantics — there is no dynamic control
-path to diverge from it.
+execution *is* the deployment semantics in the fault-free case — there
+is no dynamic control path to diverge from it.
+
+Online, the world does diverge: ``execute_interval`` accepts a seeded
+:class:`~repro.serve.faults.IntervalFaults` perturbation (layer-cost
+error, transition-latency overrun, dropped / late frames) and an
+explicit ``deadline_s`` override so the adaptive control plane
+(:mod:`repro.serve.control_plane`) can execute any precompiled schedule
+against the *current* traffic interval rather than the deadline it was
+compiled for.
 
 ``simulate_interval`` is the one-call version used by benchmarks and the
 serving example: it returns the interval ledger and cross-checks the
-executed energy against the compiler's prediction (they must agree to
-float precision — asserted in tests).
+executed ``e_total`` / ``t_infer`` against the compiler's prediction —
+beyond float tolerance it raises a structured :class:`LedgerMismatch`
+(the check is skipped when faults or a deadline override intentionally
+diverge the execution).
 """
 
 from __future__ import annotations
@@ -27,6 +37,7 @@ from repro.hw.dvfs import V_GATED
 from repro.hw.edge40nm import D_COMPUTE, D_FEEDER, D_RRAM, Edge40nmAccelerator
 from repro.perfmodel.gating import BankPlan
 from repro.perfmodel.layer_costs import LayerCost
+from repro.serve.faults import IntervalFaults
 
 
 @dataclasses.dataclass
@@ -54,6 +65,35 @@ class IntervalLedger:
     # domain (gating entries/exits excluded — same semantics as the
     # compiler's ScheduleProblem evaluators)
     n_rail_switches: int = 0
+    # fault-injection provenance: arrival delay charged against this
+    # interval's budget, and whether the frame never arrived at all
+    # (a dropped frame executes nothing and cannot miss its deadline)
+    t_late: float = 0.0
+    dropped: bool = False
+
+
+class LedgerMismatch(RuntimeError):
+    """Executed ledger disagrees with the compiled schedule's prediction
+    beyond float tolerance — the runtime model and the compiler's cost
+    model have diverged (a real deployment would flag a miscompiled or
+    corrupted schedule).  Structured so callers can log/triage:
+    ``field`` is ``"e_total"`` or ``"t_infer"``, with the executed and
+    predicted values and the relative error."""
+
+    def __init__(self, *, network: str, policy: str, field: str,
+                 executed: float, predicted: float, rtol: float):
+        self.network = network
+        self.policy = policy
+        self.field = field
+        self.executed = executed
+        self.predicted = predicted
+        self.rtol = rtol
+        denom = max(abs(predicted), 1e-300)
+        self.rel_err = abs(executed - predicted) / denom
+        super().__init__(
+            f"ledger/schedule mismatch on {field} for "
+            f"{network} [{policy}]: executed {executed!r} vs predicted "
+            f"{predicted!r} (rel err {self.rel_err:.3e} > rtol {rtol:g})")
 
 
 class PowerRuntime:
@@ -70,7 +110,32 @@ class PowerRuntime:
             acc, plan.n_banks, gating=gating,
             allow_sleep=not schedule.z_active_idle or gating)
 
-    def execute_interval(self) -> IntervalLedger:
+    def execute_interval(self, *, faults: IntervalFaults | None = None,
+                         deadline_s: float | None = None
+                         ) -> IntervalLedger:
+        """Execute one inference interval.
+
+        ``faults`` applies a seeded perturbation (see
+        :mod:`repro.serve.faults`): per-layer op time+energy and
+        transition-latency scale factors, an arrival delay charged
+        against the interval budget, or a dropped frame (nothing
+        executes; the whole interval idles).  ``deadline_s`` executes
+        the schedule against an external deadline (the adaptive plane's
+        current traffic interval) instead of the compiled ``t_max`` —
+        the terminal idle/slack accounting follows it.
+        """
+        deadline = self.schedule.t_max if deadline_s is None \
+            else float(deadline_s)
+        late = faults.late_s if faults is not None else 0.0
+        if faults is not None and faults.dropped:
+            # the frame never arrived: no execution, the interval is
+            # one long idle stretch (and trivially meets its deadline)
+            e_idle = self.idle.energy(deadline)
+            return IntervalLedger(
+                layers=[], t_infer=0.0, e_exec=0.0, e_idle=e_idle,
+                e_total=e_idle, deadline=deadline, met_deadline=True,
+                z_active_idle=self.idle.z_choice(deadline),
+                n_rail_switches=0, t_late=0.0, dropped=True)
         acc = self.acc
         tm = acc.transitions()
         dvfs = [acc.dvfs(D_COMPUTE), acc.dvfs(D_FEEDER), acc.dvfs(D_RRAM)]
@@ -91,6 +156,8 @@ class PowerRuntime:
                 if any(a != b and a != V_GATED and b != V_GATED
                        for a, b in zip(prev_v, volts)):
                     n_switches += 1
+                if faults is not None:
+                    t_tr *= float(faults.trans_scale[i])
             # op execution at the selected state
             awake = self.schedule.awake_banks[i]
             times = []
@@ -114,28 +181,61 @@ class PowerRuntime:
                 e_dyn += wakes * (tm.energy(V_GATED, volts[D_RRAM])
                                   / self.plan.n_banks)
             e_op = e_dyn + p_leak * t_op
+            if faults is not None:
+                # cost-model error scales the layer's work: time and
+                # energy move together (more cycles at the same state)
+                s = float(faults.op_scale[i])
+                t_op *= s
+                e_op *= s
             ledger.append(LayerLedger(i, volts, t_op, e_op, t_tr, e_tr,
                                       awake))
             t += t_op + t_tr
             e += e_op + e_tr
             prev_v = volts
 
-        slack = self.schedule.t_max - t
-        e_idle = self.idle.energy(slack)
+        slack = deadline - t - late
+        e_idle = self.idle.energy(max(slack, 0.0))
         return IntervalLedger(
             layers=ledger,
             t_infer=t,
             e_exec=e,
             e_idle=e_idle,
             e_total=e + e_idle,
-            deadline=self.schedule.t_max,
-            met_deadline=t <= self.schedule.t_max + 1e-15,
-            z_active_idle=self.idle.z_choice(slack),
+            deadline=deadline,
+            met_deadline=t + late <= deadline + 1e-15,
+            z_active_idle=self.idle.z_choice(max(slack, 0.0)),
             n_rail_switches=n_switches,
+            t_late=late,
         )
 
 
 def simulate_interval(schedule: PowerSchedule, costs: Sequence[LayerCost],
-                      plan: BankPlan, acc: Edge40nmAccelerator
+                      plan: BankPlan, acc: Edge40nmAccelerator, *,
+                      faults: IntervalFaults | None = None,
+                      deadline_s: float | None = None,
+                      check: bool = True, rtol: float = 1e-6
                       ) -> IntervalLedger:
-    return PowerRuntime(schedule, costs, plan, acc).execute_interval()
+    """Execute one interval and cross-check the executed ledger against
+    the compiled schedule's prediction.
+
+    In the fault-free, native-deadline case the executed ``e_total``
+    and ``t_infer`` must equal the compiler's prediction to float
+    precision — a divergence beyond ``rtol`` raises a structured
+    :class:`LedgerMismatch` rather than silently returning a ledger
+    that contradicts the artifact it came from.  With ``faults`` or a
+    ``deadline_s`` override the execution diverges *by design* and the
+    cross-check is skipped (``check=False`` disables it explicitly).
+    """
+    led = PowerRuntime(schedule, costs, plan, acc).execute_interval(
+        faults=faults, deadline_s=deadline_s)
+    if check and faults is None and deadline_s is None:
+        for field, executed, predicted in (
+                ("t_infer", led.t_infer, schedule.t_infer),
+                ("e_total", led.e_total, schedule.e_total)):
+            if abs(executed - predicted) > rtol * max(abs(predicted),
+                                                      1e-300):
+                raise LedgerMismatch(
+                    network=schedule.network, policy=schedule.policy,
+                    field=field, executed=executed,
+                    predicted=predicted, rtol=rtol)
+    return led

@@ -20,9 +20,11 @@ from repro.core.goals import (           # noqa: F401  (service-level API)
 from repro.service.compile_service import (
     CompileRequest,
     CompileService,
+    ContingencyBundle,
 )
 from repro.service.store import ArtifactStore
 
 __all__ = ["ArtifactStore", "CompileService", "CompileRequest",
+           "ContingencyBundle",
            "MinEnergy", "MinLatency", "ParetoFront", "ParetoFrontier",
            "InfeasibleGoal"]

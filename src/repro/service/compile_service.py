@@ -28,8 +28,12 @@ sweep reads only its own cuts and hints (see :mod:`repro.core.rails`).
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import threading
 from typing import Sequence
+
+import numpy as np
 
 from repro.core import orchestrator as _orchestrator
 from repro.core.backend import get_backend
@@ -38,6 +42,7 @@ from repro.core.goals import (
     Goal,
     InfeasibleGoal,
     MinEnergy,
+    MinLatency,
     ParetoFront,
     ParetoFrontier,
     ParetoPoint,
@@ -101,6 +106,45 @@ class CompileRequest:
         return MinEnergy(rate_hz=self.target_rate_hz)
 
 
+@dataclasses.dataclass
+class ContingencyBundle:
+    """The precompiled operating points of one network's online control
+    plane (see :mod:`repro.serve.control_plane`), produced by ONE
+    ``compile_many`` fleet call so a traffic spike at serve time snaps
+    to a finished schedule instead of waiting on a cold compile.
+
+    ``points`` is the snap table (the energy–latency frontier: compiled
+    deadline → schedule); ``tightened`` maps each of those deadlines to
+    a schedule compiled at ``tighten_frac`` × the deadline (slack
+    headroom that absorbs cost-model error and transition jitter — the
+    degradation ladder's first escalation); ``aggressive`` is the
+    max-performance schedule (fastest deployable point); ``budget`` is
+    the energy-budget-tightened variant (MinLatency: the fastest
+    schedule within a bounded energy envelope).  Points whose goal came
+    back infeasible are recorded in ``infeasible`` rather than silently
+    dropped.
+    """
+
+    network: str
+    base_deadline_s: float
+    tighten_frac: float
+    points: dict[float, PowerSchedule]
+    tightened: dict[float, PowerSchedule]
+    aggressive: PowerSchedule | None = None
+    budget: PowerSchedule | None = None
+    infeasible: list = dataclasses.field(default_factory=list)
+
+    def deadlines(self) -> list[float]:
+        return sorted(self.points)
+
+    def merge_points(self, other: "ContingencyBundle") -> None:
+        """Fold another bundle's snap/tightened points in (the async
+        re-solve path extends coverage without replacing the plan)."""
+        self.points.update(other.points)
+        self.tightened.update(other.tightened)
+        self.infeasible.extend(other.infeasible)
+
+
 class CompileService:
     """Compile deployment power schedules against one accelerator,
     amortizing all content-addressable work across requests (and, with
@@ -119,6 +163,8 @@ class CompileService:
         self.acc = acc
         self.store = store if store is not None else ArtifactStore()
         self.use_schedule_cache = use_schedule_cache
+        self._async_lock = threading.Lock()
+        self._async_pool: concurrent.futures.Executor | None = None
 
     # -- single compile ------------------------------------------------
     def context_for(self, specs: Sequence[LayerSpec],
@@ -343,6 +389,160 @@ class CompileService:
             results[i] = ParetoFrontier(network=requests[i].network,
                                         points=pts)
         return results
+
+    # -- contingency batch (online serving) ---------------------------
+    def compile_contingencies(
+            self, specs: Sequence[LayerSpec], base_rate_hz: float, *,
+            rate_band: tuple[float, float] = (0.4, 3.0),
+            n_points: int = 8, tighten_frac: float = 0.8,
+            budget_frac: float | None = 2.0,
+            aggressive_frac: float = 0.95,
+            cfg: OrchestratorConfig | None = None,
+            network: str = "net") -> ContingencyBundle:
+        """Precompile an online control plane's full contingency set in
+        ONE ``compile_many`` fleet call (all sweeps co-scheduled, every
+        artifact shared through the store):
+
+          - the snap frontier: ``n_points`` deadlines spanning rates
+            ``base_rate_hz × rate_band`` (the base deadline itself is
+            always on the grid, so calm traffic snaps to exactly the
+            schedule a static deployment would run);
+          - the deadline-tightened variants: each grid deadline
+            recompiled at ``tighten_frac`` × deadline (slack headroom —
+            the graceful-degradation ladder's first escalation);
+          - the ``aggressive`` max-performance point: MinEnergy at
+            ``min_time_bound / aggressive_frac`` (the fastest
+            deployable deadline, the ladder's last rung);
+          - the energy-budget-tightened variant: MinLatency at
+            ``budget_frac`` × the network's min-energy lower bound
+            (``budget_frac=None`` skips it — required for policies
+            like the greedy ascents that only solve MinEnergy goals).
+
+        Grid deadlines provably below the min-time bound are never
+        requested; points that still come back infeasible are recorded
+        in ``bundle.infeasible``.
+        """
+        if not (base_rate_hz > 0.0):
+            raise ValueError(
+                f"compile_contingencies needs base_rate_hz > 0, got "
+                f"{base_rate_hz!r}")
+        lo, hi = rate_band
+        if not (0.0 < lo <= 1.0 <= hi):
+            raise ValueError(
+                f"rate_band must satisfy 0 < lo <= 1 <= hi so the base "
+                f"rate is covered, got {rate_band!r}")
+        if not (0.0 < tighten_frac < 1.0):
+            raise ValueError(
+                f"tighten_frac must lie in (0, 1), got {tighten_frac!r}")
+        cfg = cfg or OrchestratorConfig()
+        ctx = self.context_for(specs, cfg=cfg, network=network)
+        min_t = ctx.min_t_op_bound(ctx.levels)
+        min_e = ctx.min_e_op_bound(ctx.levels)
+        aggr_deadline = min_t / aggressive_frac
+        base_deadline = 1.0 / base_rate_hz
+
+        rates = np.geomspace(base_rate_hz * lo, base_rate_hz * hi,
+                             n_points)
+        grid = sorted({float(1.0 / r) for r in rates}
+                      | {base_deadline, aggr_deadline})
+        grid = [d for d in grid if d >= aggr_deadline]
+        tight = {d: tighten_frac * d for d in grid
+                 if tighten_frac * d >= aggr_deadline}
+
+        requests = [CompileRequest(
+            specs, cfg=cfg, network=network,
+            goal=ParetoFront(deadlines=tuple(grid)))]
+        if tight:
+            requests.append(CompileRequest(
+                specs, cfg=cfg, network=network,
+                goal=ParetoFront(
+                    deadlines=tuple(sorted(tight.values())))))
+        requests.append(CompileRequest(
+            specs, cfg=cfg, network=network,
+            goal=MinEnergy(deadline_s=aggr_deadline)))
+        if budget_frac is not None:
+            requests.append(CompileRequest(
+                specs, cfg=cfg, network=network,
+                goal=MinLatency(energy_budget_j=budget_frac * min_e)))
+        results = self.compile_many(requests)
+
+        bundle = ContingencyBundle(
+            network=network, base_deadline_s=base_deadline,
+            tighten_frac=tighten_frac, points={}, tightened={})
+        frontier = results[0]
+        for pt in frontier.points:
+            if pt.feasible:
+                bundle.points[pt.deadline_s] = pt.schedule
+            else:
+                bundle.infeasible.append(("point", pt.deadline_s,
+                                          pt.schedule))
+        if tight:
+            by_tight = {}
+            for pt in results[1].points:
+                if pt.feasible:
+                    by_tight[pt.deadline_s] = pt.schedule
+                else:
+                    bundle.infeasible.append(
+                        ("tightened", pt.deadline_s, pt.schedule))
+            bundle.tightened = {d: by_tight[td]
+                                for d, td in tight.items()
+                                if td in by_tight}
+        aggr = results[2] if tight else results[1]
+        if isinstance(aggr, PowerSchedule):
+            bundle.aggressive = aggr
+        else:
+            bundle.infeasible.append(("aggressive", aggr_deadline, aggr))
+        if budget_frac is not None:
+            budget = results[-1]
+            if isinstance(budget, PowerSchedule):
+                bundle.budget = budget
+            else:
+                bundle.infeasible.append(
+                    ("budget", budget_frac * min_e, budget))
+        return bundle
+
+    # -- async re-solve (online serving) ------------------------------
+    def compile_many_async(self, requests: Sequence[CompileRequest],
+                           **kwargs) -> concurrent.futures.Future:
+        """Submit a ``compile_many`` batch to the service's background
+        compile thread and return its Future — the online control
+        plane's re-solve entry: the serving loop polls the future
+        between intervals and never blocks on a compile.  The store is
+        thread-safe, so background solves share every artifact with
+        foreground ``compile`` calls.
+        """
+        return self._submit_async(self.compile_many, list(requests),
+                                  **kwargs)
+
+    def compile_contingencies_async(self, specs: Sequence[LayerSpec],
+                                    base_rate_hz: float, **kwargs
+                                    ) -> concurrent.futures.Future:
+        """Background :meth:`compile_contingencies` — the adaptive
+        scheduler's sustained-drift re-solve: the returned Future
+        resolves to a fresh :class:`ContingencyBundle` whose points are
+        merged into the live one (``merge_points``) when polled done."""
+        return self._submit_async(self.compile_contingencies, specs,
+                                  base_rate_hz, **kwargs)
+
+    def _submit_async(self, fn, *args, **kwargs
+                      ) -> concurrent.futures.Future:
+        with self._async_lock:
+            if self._async_pool is None:
+                self._async_pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="pfdnn-resolve")
+            pool = self._async_pool
+        return pool.submit(fn, *args, **kwargs)
+
+    def abandon_async_pool(self) -> None:
+        """Detach the background compile pool (watchdog path): a hung or
+        over-slow re-solve keeps its thread, but the next
+        :meth:`compile_many_async` gets a fresh pool instead of queueing
+        behind it.  The abandoned compile finishes (or hangs) in the
+        background; its writes to the thread-safe store stay valid."""
+        with self._async_lock:
+            pool, self._async_pool = self._async_pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     # -- maintenance ---------------------------------------------------
     def save(self, path) -> None:

@@ -169,6 +169,57 @@ def test_engine_greedy_deterministic():
     assert outs[0] == outs[1]
 
 
+def test_engine_mid_batch_slot_refill():
+    """A finished sequence frees its slot and the next queued request
+    is prefilled into it while the other slot's sequence keeps its KV
+    state — per-slot continuous batching, not drain-then-refill."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+
+    def run_once():
+        eng = ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, cache_len=64, max_new_tokens=6, eos_token=-1))
+        eng.submit([5, 6, 7])            # slot 0
+        eng.submit([9, 10, 11, 12])      # slot 1
+        waiting = eng.submit([21, 22])   # queued
+        eng.step()
+        # slot 0's sequence hits its stop condition early
+        eng.active[0].done = True
+        eng.step()
+        # the queued request took slot 0 mid-batch; slot 1 uninterrupted
+        assert eng.active[0].rid == waiting
+        assert eng.active[1].rid == 1 and not eng.active[1].done
+        assert len(eng.completed) == 1 and eng.completed[0].rid == 0
+        done = eng.run_to_completion()
+        return {r.rid: tuple(r.generated) for r in done}
+
+    first, second = run_once(), run_once()
+    assert sorted(first) == [0, 1, 2]
+    assert len(first[1]) == 6 and len(first[2]) == 6
+    assert first == second                # refill path is deterministic
+
+
+def test_engine_max_steps_returns_in_flight_truncated():
+    """Exhausting max_steps must not lose in-flight requests: they come
+    back flagged truncated with their partial generations; never-started
+    requests stay queued."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, cache_len=64, max_new_tokens=50, eos_token=-1))
+    rids = [eng.submit([3 + i, 4 + i]) for i in range(3)]
+    done = eng.run_to_completion(max_steps=2)
+    assert sorted(r.rid for r in done) == rids[:2]
+    assert all(r.truncated and 0 < len(r.generated) < 50 for r in done)
+    assert [r.rid for r in eng.queue] == [rids[2]]
+    assert eng.active == {} and eng.state is None
+    # the engine remains serviceable after a truncation pass
+    finished = eng.run_to_completion()
+    assert [r.rid for r in finished] == [rids[2]]
+    assert not finished[0].truncated
+    assert len(finished[0].generated) == 50
+
+
 # --------------------------------------------------- power runtime
 
 def test_power_runtime_matches_compiler_prediction():

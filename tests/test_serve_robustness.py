@@ -1,0 +1,506 @@
+"""Online serving robustness: fault injection, the adaptive control
+plane (snap / ladder / async re-solve / watchdog), and the serve_trace
+A/B loop."""
+
+import concurrent.futures
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import OrchestratorConfig
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network, plan_banks
+from repro.serve import (
+    AdaptiveConfig,
+    AdaptiveScheduler,
+    AsyncResolver,
+    FaultConfig,
+    FaultInjector,
+    LedgerMismatch,
+    MissLedger,
+    PeriodicScheduler,
+    PowerRuntime,
+    RateTracker,
+    StaticSchedulePolicy,
+    TrafficConfig,
+    TrafficSimulator,
+    linear_drift,
+    serve_trace,
+    simulate_interval,
+)
+from repro.serve.control_plane import (
+    RUNG_AGGRESSIVE,
+    RUNG_POINT,
+    RUNG_TIGHTENED,
+)
+from repro.serve.faults import IntervalFaults
+from repro.service import CompileService
+
+NETWORK = "squeezenet1.1"
+UTIL = 0.85
+BASE_RATE = 60.0
+GREEDY = OrchestratorConfig(policy="greedy_gating")
+
+
+@pytest.fixture(scope="module")
+def net():
+    specs = edge_network(NETWORK)
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    return specs, costs, plan
+
+
+class CountingService(CompileService):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.compile_many_calls = 0
+
+    def compile_many(self, *a, **kw):
+        self.compile_many_calls += 1
+        return super().compile_many(*a, **kw)
+
+
+@pytest.fixture(scope="module")
+def bundle(net):
+    specs, _, _ = net
+    svc = CountingService(ACC)
+    # greedy policies solve only MinEnergy goals → budget_frac=None
+    b = svc.compile_contingencies(
+        specs, BASE_RATE / UTIL, tighten_frac=0.92, budget_frac=None,
+        cfg=GREEDY, network=NETWORK)
+    b._fleet_calls = svc.compile_many_calls
+    return b
+
+
+# ------------------------------------------------------ fault injection
+
+def test_fault_injection_deterministic(net):
+    _, costs, _ = net
+    cfg = FaultConfig(seed=7, op_sigma=0.05, trans_sigma=0.2,
+                      p_trans_spike=0.1, p_drop=0.1, p_late=0.2,
+                      late_max_s=0.01)
+    a = FaultInjector(cfg, len(costs))
+    b = FaultInjector(cfg, len(costs))
+    # order-independence: draw interval 7 first on one injector, last
+    # on the other — interval(i) is pure in (config, i)
+    fa7 = a.interval(7)
+    for i in range(7):
+        fb = b.interval(i)
+        fa = a.interval(i)
+        np.testing.assert_array_equal(fa.op_scale, fb.op_scale)
+        np.testing.assert_array_equal(fa.trans_scale, fb.trans_scale)
+        assert (fa.dropped, fa.late_s) == (fb.dropped, fb.late_s)
+    fb7 = b.interval(7)
+    np.testing.assert_array_equal(fa7.op_scale, fb7.op_scale)
+    assert fa7.late_s == fb7.late_s
+    # different seeds draw different perturbations
+    other = FaultInjector(dataclasses.replace(cfg, seed=8), len(costs))
+    assert not np.array_equal(a.interval(0).op_scale,
+                              other.interval(0).op_scale)
+
+
+def test_fault_bias_composes_with_noise(net):
+    _, costs, _ = net
+    cfg = FaultConfig(seed=7, op_sigma=0.05)
+    plain = FaultInjector(cfg, len(costs))
+    drift = FaultInjector(cfg, len(costs),
+                          op_bias=linear_drift(0.01))
+    np.testing.assert_allclose(drift.interval(50).op_scale,
+                               plain.interval(50).op_scale * 1.5)
+    # ramp-down after the peak (hysteretic-recovery profiles)
+    down = linear_drift(0.1, peak=10)
+    assert down(10) == pytest.approx(2.0)
+    assert down(15) == pytest.approx(1.5)
+    assert down(30) == pytest.approx(1.0)
+
+
+@pytest.fixture(scope="module")
+def sched(net, bundle):
+    return bundle.points[bundle.base_deadline_s]
+
+
+def test_faults_perturb_the_ledger(net, sched):
+    _, costs, plan = net
+    rt = PowerRuntime(sched, costs, plan, ACC)
+    clean = rt.execute_interval()
+    L = len(costs)
+    slow = rt.execute_interval(faults=IntervalFaults(
+        op_scale=np.full(L, 1.3), trans_scale=np.full(L, 2.0)))
+    assert slow.t_infer > clean.t_infer
+    assert slow.e_exec > clean.e_exec
+    # dropped frame: nothing executes, one long idle, cannot miss
+    drop = rt.execute_interval(faults=IntervalFaults(
+        op_scale=np.ones(L), trans_scale=np.ones(L), dropped=True))
+    assert drop.dropped and drop.met_deadline
+    assert drop.t_infer == 0.0 and drop.e_exec == 0.0
+    assert drop.e_total == drop.e_idle > 0.0
+    # a late arrival charges against the interval budget
+    late = rt.execute_interval(faults=IntervalFaults(
+        op_scale=np.ones(L), trans_scale=np.ones(L),
+        late_s=sched.t_max))
+    assert late.t_late == sched.t_max and not late.met_deadline
+
+
+def test_simulate_interval_raises_ledger_mismatch(net, sched):
+    _, costs, plan = net
+    # fault-free on the native deadline: executed == predicted
+    led = simulate_interval(sched, costs, plan, ACC)
+    assert led.met_deadline
+    # corrupt the runtime's cost model: one layer got 50% more cycles
+    bad = list(costs)
+    bad[0] = dataclasses.replace(
+        bad[0], cycles=tuple(c * 1.5 for c in bad[0].cycles))
+    with pytest.raises(LedgerMismatch) as exc:
+        simulate_interval(sched, bad, plan, ACC)
+    err = exc.value
+    assert err.field in ("t_infer", "e_total")
+    assert err.network == sched.network
+    assert err.rel_err > err.rtol
+    assert "mismatch" in str(err)
+    # the check can be disabled, and is skipped under injected faults /
+    # deadline overrides (divergence is then by design)
+    simulate_interval(sched, bad, plan, ACC, check=False)
+    simulate_interval(sched, bad, plan, ACC,
+                      deadline_s=sched.t_max * 2)
+
+
+def test_periodic_scheduler_guards(net, sched):
+    _, costs, plan = net
+    rt = PowerRuntime(sched, costs, plan, ACC)
+    with pytest.raises(ValueError):
+        PeriodicScheduler(rt, 0.0)
+    with pytest.raises(ValueError):
+        PeriodicScheduler(rt, -5.0)
+    run = PeriodicScheduler(rt, BASE_RATE)
+    with pytest.raises(ValueError):
+        run.run(-1)
+    empty = run.run(0)
+    assert empty["intervals"] == 0
+    assert empty["total_energy_j"] == 0.0
+    assert empty["avg_interval_energy_uj"] == 0.0
+    assert empty["avg_power_mw"] == 0.0
+    inj = FaultInjector(FaultConfig(seed=1, p_drop=1.0), len(costs))
+    full = run.run(10, injector=inj)
+    assert full["dropped_frames"] == 10
+    assert full["deadline_misses"] == 0
+
+
+# ------------------------------------------------------ observation
+
+def test_rate_tracker_seeds_from_first_gap():
+    tr = RateTracker(100.0)                  # provisioned prior: 100Hz
+    assert tr.rate == pytest.approx(100.0)   # before any observation
+    tr.observe_gap(1 / 60.0)
+    assert tr.ewma == pytest.approx(60.0)    # no decay-from-prior tail
+    assert tr.rate == pytest.approx(60.0)
+
+
+def test_rate_tracker_burst_gating():
+    tr = RateTracker(60.0, burst_tolerance=0.15)
+    for _ in range(20):
+        tr.observe_gap(1 / 60.0)
+    # sub-tolerance jitter must NOT drive the estimate (that headroom
+    # belongs to util_target)
+    for _ in range(3):
+        tr.observe_gap(1 / 66.0)             # +10% < tolerance
+    assert tr.rate < 66.0 * 0.999
+    # a genuine burst overrides the trend within a couple of gaps
+    tr.observe_gap(1 / 200.0)
+    tr.observe_gap(1 / 200.0)
+    assert tr.rate > 150.0
+
+
+def test_miss_ledger_window_and_clear():
+    ml = MissLedger(window=4)
+    assert ml.miss_rate() == 0.0 and not ml.full
+    for miss in (True, True, False, False):
+        ml.record(miss)
+    assert ml.full and ml.miss_rate() == pytest.approx(0.5)
+    ml.record(False)                          # rolls the oldest miss out
+    assert ml.miss_rate() == pytest.approx(0.25)
+    ml.clear()
+    assert ml.n == 0 and ml.miss_rate() == 0.0
+
+
+# --------------------------------------------------- async resolver
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_async_resolver_done_error_timeout():
+    clock = FakeClock()
+    timeouts = []
+    r = AsyncResolver(10.0, clock=clock,
+                      on_timeout=lambda: timeouts.append(clock.t))
+    assert r.poll() is None and not r.busy
+
+    fut = concurrent.futures.Future()
+    r.watch("a", fut)
+    assert r.busy
+    with pytest.raises(RuntimeError):
+        r.watch("b", concurrent.futures.Future())   # one in flight max
+    fut.set_result(42)
+    assert r.poll() == ("done", "a", 42)
+    assert not r.busy
+
+    fut = concurrent.futures.Future()
+    fut.set_exception(ValueError("boom"))
+    r.watch("b", fut)
+    status, tag, payload = r.poll()
+    assert status == "error" and tag == "b" and "boom" in payload
+
+    hung = concurrent.futures.Future()
+    r.watch("c", hung)
+    clock.t = 5.0
+    assert r.poll() is None                   # within budget: keep waiting
+    clock.t = 11.0
+    status, tag, elapsed = r.poll()
+    assert status == "timeout" and tag == "c" and elapsed == 11.0
+    assert timeouts == [11.0]                 # owner detached the pool
+    assert not r.busy                         # abandoned, not blocked
+
+
+def test_async_resolver_validates_watchdog():
+    with pytest.raises(ValueError):
+        AsyncResolver(0.0)
+
+
+# ------------------------------------------------ contingency bundle
+
+def test_contingency_bundle_one_fleet_call(bundle):
+    assert bundle._fleet_calls == 1           # ONE compile_many batch
+    deadlines = bundle.deadlines()
+    # the exact provisioned deadline is a snap point (calm parity), and
+    # the aggressive point bounds the grid from below
+    base = 1.0 / (BASE_RATE / UTIL)
+    assert any(abs(d - base) < 1e-12 for d in deadlines)
+    assert bundle.aggressive is not None
+    assert deadlines[0] == pytest.approx(bundle.aggressive.t_max)
+    # tightened variants really are compiled at tighten_frac × deadline
+    assert bundle.tightened
+    for d, s in bundle.tightened.items():
+        assert d in bundle.points
+        assert s.t_max == pytest.approx(0.92 * d)
+    assert bundle.budget is None              # budget_frac=None (greedy)
+
+
+def test_contingency_bundle_validation_and_merge(net, bundle):
+    specs, _, _ = net
+    svc = CompileService(ACC)
+    for bad in (dict(base_rate_hz=0.0), dict(rate_band=(0.0, 2.0)),
+                dict(rate_band=(1.5, 2.0)), dict(tighten_frac=1.0)):
+        with pytest.raises(ValueError):
+            svc.compile_contingencies(
+                specs, **{"base_rate_hz": BASE_RATE, **bad},
+                cfg=GREEDY, budget_frac=None)
+    other = svc.compile_contingencies(
+        specs, BASE_RATE * 0.25, n_points=2, budget_frac=None,
+        cfg=GREEDY, network=NETWORK)
+    merged = dataclasses.replace(
+        bundle, points=dict(bundle.points),
+        tightened=dict(bundle.tightened),
+        infeasible=list(bundle.infeasible))
+    before = set(merged.points)
+    merged.merge_points(other)
+    assert set(merged.points) >= before | set(other.points)
+
+
+# ------------------------------------------------- adaptive scheduler
+
+def _drive(plane, gap_s, n, start=0, t0=0.0):
+    """Feed n on-time intervals at a fixed arrival gap."""
+    sched = None
+    for k in range(start, start + n):
+        sched, _ = plane.pick(k, t0 + k * gap_s, gap_s, 0)
+        plane.record(k, miss=False, dropped=False, now=t0 + k * gap_s)
+    return sched
+
+
+def test_adaptive_snaps_under_rate_step(net, bundle):
+    _, costs, plan = net
+    plane = AdaptiveScheduler(bundle, costs, plan, ACC)
+    base = _drive(plane, 1 / BASE_RATE, 30)
+    assert base.t_max == pytest.approx(bundle.base_deadline_s)
+    # rate steps up 25%: the plane tightens within a few intervals,
+    # without any compile (no service attached — precompiled only)
+    burst = _drive(plane, 1 / (BASE_RATE * 1.25), 10, start=30)
+    assert burst.t_max < bundle.base_deadline_s
+    snaps = plane.events.of("snap")
+    assert len(snaps) >= 2
+    assert all(e.detail["precompiled"] for e in snaps)
+    # rate steps back down: the plane relaxes again
+    relaxed = _drive(plane, 1 / (BASE_RATE * 0.5), 30, start=40)
+    assert relaxed.t_max > bundle.base_deadline_s
+    assert plane.events.kinds().get("resolve_start") is None
+
+
+def test_adaptive_ladder_and_hysteretic_recovery(net, bundle):
+    _, costs, plan = net
+    acfg = AdaptiveConfig(window=8, breach_min_samples=4,
+                          breach_miss_rate=0.5, recover_miss_rate=0.05,
+                          dwell_intervals=4)
+    plane = AdaptiveScheduler(bundle, costs, plan, ACC, acfg=acfg)
+    gap = 1 / BASE_RATE
+
+    k = 0
+    def feed(miss, n):
+        nonlocal k
+        for _ in range(n):
+            plane.pick(k, k * gap, gap, 0)
+            plane.record(k, miss=miss, dropped=False, now=k * gap)
+            k += 1
+
+    assert plane.rung == RUNG_POINT
+    feed(miss=True, n=4)                      # dwell + min samples
+    assert plane.rung == RUNG_TIGHTENED       # breach → first rung
+    sched, _ = plane.pick(k, k * gap, gap, 0)
+    assert sched.t_max < bundle.base_deadline_s   # tightened variant
+    feed(miss=True, n=4)
+    assert plane.rung == RUNG_AGGRESSIVE      # still breaching → top rung
+    feed(miss=True, n=20)
+    assert plane.rung == RUNG_AGGRESSIVE      # ladder is bounded
+    # hysteresis: recovery needs a FULL clean window after the dwell —
+    # strictly more evidence than the breach needed
+    feed(miss=False, n=7)
+    assert plane.rung == RUNG_AGGRESSIVE
+    feed(miss=False, n=1)
+    assert plane.rung == RUNG_TIGHTENED
+    feed(miss=False, n=8)
+    assert plane.rung == RUNG_POINT
+    kinds = plane.events.kinds()
+    assert kinds["degrade"] == 2 and kinds["recover"] == 2
+    # dropped frames carry no deadline signal
+    plane.record(k, miss=True, dropped=True, now=k * gap)
+    assert plane.misses.n == 0 or plane.rung == RUNG_POINT
+
+
+class FakeResolveService:
+    """Duck-typed CompileService for the re-solve path: hands back a
+    controllable Future and records the watchdog's pool abandonment."""
+
+    def __init__(self):
+        self.future = concurrent.futures.Future()
+        self.requests = []
+        self.abandoned = 0
+
+    def compile_contingencies_async(self, specs, rate_hz, **kw):
+        self.requests.append((rate_hz, kw))
+        return self.future
+
+    def abandon_async_pool(self):
+        self.abandoned += 1
+
+
+def test_adaptive_resolve_merge_and_watchdog(net, bundle):
+    specs, costs, plan = net
+    clock = FakeClock()
+    acfg = AdaptiveConfig(drift_patience=3, watchdog_s=5.0)
+    svc = FakeResolveService()
+    merged = dataclasses.replace(
+        bundle, points=dict(bundle.points),
+        tightened=dict(bundle.tightened),
+        infeasible=list(bundle.infeasible))
+    plane = AdaptiveScheduler(merged, costs, plan, ACC, service=svc,
+                              specs=specs, acfg=acfg, clock=clock)
+    # sustained drift far beyond the precompiled coverage (rate ~2Hz)
+    slow_gap = 0.5
+    for k in range(4):
+        plane.pick(k, k * slow_gap, slow_gap, 0)
+    assert len(svc.requests) == 1             # re-solve submitted once
+    assert plane.events.of("resolve_start")
+    assert plane.resolver.busy
+
+    # background solve lands: points merge into the live bundle
+    extra = CompileService(ACC).compile_contingencies(
+        specs, 2.0, n_points=2, budget_frac=None, cfg=GREEDY,
+        network=NETWORK)
+    svc.future.set_result(extra)
+    plane.pick(4, 4 * slow_gap, slow_gap, 0)
+    done = plane.events.of("resolve_done")
+    assert done and done[0].detail["new_points"] > 0
+    assert max(plane.bundle.points) > bundle.base_deadline_s
+    assert max(plane._grid) == max(plane.bundle.points)
+
+    # next sustained drift: this solve hangs → watchdog abandons it
+    svc.future = concurrent.futures.Future()
+    for k in range(5, 30):
+        plane.pick(k, k * slow_gap * 40, slow_gap * 40, 0)
+        if len(svc.requests) == 2:
+            break
+    assert len(svc.requests) == 2
+    clock.t += 6.0                            # past the watchdog budget
+    plane.pick(50, 0.0, slow_gap, 0)
+    assert plane.events.of("resolve_timeout")
+    assert svc.abandoned == 1                 # pool detached, not joined
+    assert not plane.resolver.busy            # serving never blocked
+
+
+def test_adaptive_config_validation():
+    with pytest.raises(ValueError):
+        AdaptiveConfig(util_target=0.0)
+    with pytest.raises(ValueError):
+        AdaptiveConfig(util_target=1.2)
+    with pytest.raises(ValueError):
+        AdaptiveConfig(breach_miss_rate=0.2, recover_miss_rate=0.3)
+
+
+# ------------------------------------------------------- serve_trace
+
+def test_serve_trace_calm_parity(net, bundle, sched):
+    _, costs, plan = net
+    times = TrafficSimulator(
+        TrafficConfig(BASE_RATE, scenario="calm")).frame_times(80)
+    static = serve_trace(
+        times, StaticSchedulePolicy(sched, costs, plan, ACC))
+    adaptive = serve_trace(
+        times, AdaptiveScheduler(bundle, costs, plan, ACC))
+    assert static.misses == adaptive.misses == 0
+    assert adaptive.energy_j == pytest.approx(static.energy_j,
+                                              rel=1e-9)
+    assert static.energy_j == pytest.approx(
+        static.e_exec_j + static.e_idle_j)
+    assert static.frames == static.served + static.dropped
+    snaps = adaptive.events.of("snap")
+    assert len(snaps) == 1 and snaps[0].detail["precompiled"]
+
+
+def test_serve_trace_fault_accounting(net, bundle, sched):
+    _, costs, plan = net
+    times = TrafficSimulator(
+        TrafficConfig(BASE_RATE, scenario="calm")).frame_times(40)
+    all_dropped = serve_trace(
+        times, StaticSchedulePolicy(sched, costs, plan, ACC),
+        injector=FaultInjector(FaultConfig(seed=1, p_drop=1.0),
+                               len(costs)))
+    assert all_dropped.served == 0 and all_dropped.dropped == 40
+    assert all_dropped.e_exec_j == 0.0
+    assert all_dropped.miss_rate == 0.0
+    with pytest.raises(ValueError):
+        serve_trace(np.array([0.0]),
+                    StaticSchedulePolicy(sched, costs, plan, ACC))
+
+
+def test_traffic_simulator_seeded_and_validated():
+    cfg = TrafficConfig(BASE_RATE, scenario="bursty", seed=5,
+                        jitter_sigma=0.1)
+    t1 = TrafficSimulator(cfg).frame_times(100)
+    t2 = TrafficSimulator(cfg).frame_times(100)
+    np.testing.assert_array_equal(t1, t2)     # schedule-independent
+    assert len(t1) == 101                     # n frames need n+1 stamps
+    assert np.all(np.diff(t1) > 0)
+    other = TrafficSimulator(
+        dataclasses.replace(cfg, seed=6)).frame_times(100)
+    assert not np.array_equal(t1, other)
+    with pytest.raises(ValueError):
+        TrafficConfig(BASE_RATE, scenario="nope")
+    with pytest.raises(ValueError):
+        TrafficConfig(0.0)
+    with pytest.raises(ValueError):
+        TrafficConfig(BASE_RATE, diurnal_depth=1.5)
