@@ -1,0 +1,45 @@
+"""Host metadata header for every ``BENCH_*.json`` recording.
+
+Wall-clock numbers are only comparable against walls measured on a
+like host — the PR 5 → PR 6 drift (a 2-vCPU runner silently becoming
+1-vCPU) was only caught by hand.  Every benchmark writer stamps
+``results["host"] = host_meta()`` so the next session can tell a real
+regression from a host change at a glance.
+"""
+
+from __future__ import annotations
+
+import os
+import platform
+import time
+
+
+def host_meta(backend: str | None = None) -> dict:
+    """CPU/platform/library versions + the resolved solver backend —
+    everything that moved a recorded wall in past PRs."""
+    import numpy as np
+
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:  # pragma: no cover - jax is baked into the image
+        jax_version = None
+    try:
+        from repro.core.backend import get_backend
+
+        resolved = get_backend(backend).name
+    except Exception:
+        resolved = backend or "unknown"
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "jax": jax_version,
+        "backend": resolved,
+        "env": {k: v for k, v in os.environ.items()
+                if k.startswith("PFDNN_")},
+        "recorded_unix": time.time(),
+    }

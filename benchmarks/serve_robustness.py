@@ -46,6 +46,11 @@ import json
 import pathlib
 import time
 
+try:
+    from benchmarks._host import host_meta
+except ImportError:  # direct script run: benchmarks/ is sys.path[0]
+    from _host import host_meta
+
 from repro.core import OrchestratorConfig
 from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
 from repro.models.edge_cnn import edge_network
@@ -112,15 +117,16 @@ def run_scenarios(n_frames: int, backend: str | None) -> dict:
     specs = edge_network(NETWORK)
     costs = characterize_network(specs, ACC)
     plan = plan_banks(costs, ACC)
-    svc = CompileService(ACC)
     cfg = OrchestratorConfig(policy=POLICY, backend=backend)
 
     # the whole contingency set — frontier grid, tightened variants,
-    # aggressive point, energy-budget point — in ONE fleet call
+    # aggressive point, energy-budget point — in ONE fleet call; the
+    # context manager shuts the async resolve pool down afterwards
     tic = time.perf_counter()
-    bundle = svc.compile_contingencies(
-        specs, BASE_RATE_HZ / UTIL, tighten_frac=TIGHTEN_FRAC,
-        cfg=cfg, network=NETWORK)
+    with CompileService(ACC) as svc:
+        bundle = svc.compile_contingencies(
+            specs, BASE_RATE_HZ / UTIL, tighten_frac=TIGHTEN_FRAC,
+            cfg=cfg, network=NETWORK)
     bundle_wall = time.perf_counter() - tic
     static_sched = bundle.points[bundle.base_deadline_s]
 
@@ -220,6 +226,7 @@ def main() -> None:
               f"({time.perf_counter() - tic:.1f}s)")
         return
     results["backend"] = args.backend or "default"
+    results["host"] = host_meta(args.backend)
     pathlib.Path(args.out).write_text(json.dumps(results, indent=1))
     print(f"wrote {args.out}")
 

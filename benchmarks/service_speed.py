@@ -51,8 +51,10 @@ import time
 
 try:
     from benchmarks.common import max_rate, timed
+    from benchmarks._host import host_meta
 except ImportError:  # direct script run: benchmarks/ is sys.path[0]
     from common import max_rate, timed
+    from _host import host_meta
 
 from repro.core import (
     OrchestratorConfig,
@@ -109,24 +111,41 @@ def same_schedules(a, b) -> bool:
     return True
 
 
+def _counters(store) -> dict:
+    """Per-category hit/miss/disk-hit/evict counters — the cache-efficacy
+    block attached to every bench row."""
+    s = store.stats()
+    return {grp: dict(s[grp])
+            for grp in ("hits", "misses", "disk_hits", "evictions")}
+
+
+def _counter_delta(after: dict, before: dict) -> dict:
+    return {grp: {k: after[grp][k] - before[grp].get(k, 0)
+                  for k in after[grp]} for grp in after}
+
+
 def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
     from repro.core import get_backend
 
     results: dict = {"fleet": [f"{n}|{f}|r{k}" for n, f, k in fleet],
                      "policy": POLICY, "reps": reps}
     io = getattr(get_backend(backend), "io_stats", None)
+    fresh = {}   # the last cold variant's service (fresh store per rep)
 
-    def best_of(fn, n=reps):
+    def best_of(fn, n=reps, store=None):
         walls, out = [], None
         for _ in range(n):
             mark = dict(io) if io is not None else None
+            cmark = _counters(store) if store is not None else None
             out, wall = timed(fn)
             walls.append(wall)
-        # device-lane transfer counters over the LAST rep (see module
-        # docstring); empty on host-only backends
+        # device-lane transfer + store counters over the LAST rep (see
+        # module docstring); io is empty on host-only backends
         delta = {k: io[k] - mark[k] for k in io} \
             if io is not None else None
-        return out, min(walls), walls, delta
+        cdelta = _counter_delta(_counters(store), cmark) \
+            if store is not None else None
+        return out, min(walls), walls, delta, cdelta
 
     def cold_sequential():
         reqs = build_requests(fleet, backend)
@@ -134,26 +153,31 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
             r.specs, r.target_rate_hz, cfg=r.cfg, network=r.network)
             for r in reqs]
 
-    ref, wall, walls, _ = best_of(cold_sequential)
+    ref, wall, walls, _, _ = best_of(cold_sequential)
     results["cold_sequential"] = {"wall_s": wall, "wall_all_s": walls}
 
     def cold_many(stack: bool):
         def inner():
             svc = CompileService()              # fresh store: cold
+            fresh["svc"] = svc
             return svc.compile_many(build_requests(fleet, backend),
                                     stack_networks=stack)
         return inner
 
-    out_u, wall, walls, _ = best_of(cold_many(False))
+    out_u, wall, walls, _, _ = best_of(cold_many(False))
     results["cold_many_unstacked"] = {"wall_s": wall,
                                       "wall_all_s": walls,
                                       "identical": same_schedules(out_u,
-                                                                  ref)}
-    out_s, wall, walls, io_s = best_of(cold_many(True))
+                                                                  ref),
+                                      "store_counters":
+                                      _counters(fresh["svc"].store)}
+    out_s, wall, walls, io_s, _ = best_of(cold_many(True))
     results["cold_many_stacked"] = {"wall_s": wall, "wall_all_s": walls,
                                     "identical": same_schedules(out_s,
                                                                 ref),
-                                    "io_delta": io_s}
+                                    "io_delta": io_s,
+                                    "store_counters":
+                                    _counters(fresh["svc"].store)}
 
     # one persistent service: populate, then measure the warm regimes
     svc = CompileService()
@@ -163,20 +187,22 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
         svc.store.clear(schedules=True, stacks=False, tables=False)
         return svc.compile_many(build_requests(fleet, backend))
 
-    out_w, wall, walls, io_w = best_of(warm_solve)
+    out_w, wall, walls, io_w, c_w = best_of(warm_solve, store=svc.store)
     results["warm_solve"] = {"wall_s": wall, "wall_all_s": walls,
                              "identical": same_schedules(out_w, ref),
-                             "io_delta": io_w}
+                             "io_delta": io_w, "store_counters": c_w}
 
     svc.compile_many(build_requests(fleet, backend))   # refill the cache
 
     def warm_cached():
         return svc.compile_many(build_requests(fleet, backend))
 
-    out_c, wall, walls, _ = best_of(warm_cached)
+    out_c, wall, walls, _, c_c = best_of(warm_cached, store=svc.store)
     results["warm_cached"] = {"wall_s": wall, "wall_all_s": walls,
-                              "identical": same_schedules(out_c, ref)}
+                              "identical": same_schedules(out_c, ref),
+                              "store_counters": c_c}
     results["store_stats"] = svc.store.stats()
+    svc.close()
 
     # -- Pareto frontier: one goal-API compile (stacked sweeps sharing
     # one context + store) vs N independent cold compiles
@@ -198,8 +224,8 @@ def run_fleet(fleet, *, backend: str | None, reps: int) -> dict:
                                        network=PARETO_NETWORK)
                 for d in deadlines]
 
-    front, wall_f, walls_f, _ = best_of(frontier_compile)
-    solo, wall_s, walls_s, _ = best_of(independent_points)
+    front, wall_f, walls_f, _, _ = best_of(frontier_compile)
+    solo, wall_s, walls_s, _, _ = best_of(independent_points)
     results["pareto_frontier"] = {
         "n_points": len(deadlines),
         "wall_s": wall_f, "wall_all_s": walls_f,
@@ -261,6 +287,7 @@ def main() -> None:
         print(f"service smoke OK ({time.perf_counter() - tic:.1f}s)")
         return
     results["backend"] = args.backend or "default"
+    results["host"] = host_meta(args.backend)
     pathlib.Path(args.out).write_text(json.dumps(results, indent=1))
     print(f"wrote {args.out}")
 

@@ -51,8 +51,10 @@ import pathlib
 
 try:
     from benchmarks.common import max_rate, schedule_for, timed
+    from benchmarks._host import host_meta
 except ImportError:  # direct script run: benchmarks/ is sys.path[0]
     from common import max_rate, schedule_for, timed
+    from _host import host_meta
 
 HERE = pathlib.Path(__file__).parent
 BASELINE_PATH = HERE / "baseline_sweep.json"
@@ -305,6 +307,7 @@ def main() -> None:
                 if stat in row:
                     cmp_row[f"{stat}_vs_prev"] = row[stat]
     report["smoke_backends"] = smoke_backend_compare()
+    report["host"] = host_meta(args.backend)
     pathlib.Path(args.out).write_text(json.dumps(report, indent=1))
     print(f"wrote {args.out}")
 

@@ -112,3 +112,7 @@ print("\n[online] bursty traffic, identical fault trace:")
 print(f"  static   {static.summary()}")
 print(f"  adaptive {adaptive.summary()}")
 print(f"  control events: {adaptive.events.kinds()}")
+
+# the adaptive plane holds the service for off-path async recompiles —
+# close() drains that pool once serving is done
+service.close()

@@ -464,6 +464,25 @@ class StackCaches:
         self.buckets: dict[tuple, BucketStack] = {}
         self.member_stacks: dict[tuple, StackedArrays] = {}
         self._lock = threading.Lock()
+        # warm-lane lookup counters (the "lanes" category of
+        # ArtifactStore.stats): a hit means a task reused a resident
+        # lane's padded tensors and skipped build_padded entirely
+        self.lane_hits = 0
+        self.lane_misses = 0
+
+    def warm_padded(self, bucket_sig: tuple, lane_key) -> object | None:
+        """Resident-lane lookup for a task being admitted: the
+        zero-copy :class:`PaddedArrays` of ``lane_key`` in the
+        ``bucket_sig`` store, or None — counted as the store's
+        per-category "lanes" hit/miss either way."""
+        bs = self.buckets.get(bucket_sig)
+        warm = bs.padded(lane_key) if bs is not None else None
+        with self._lock:
+            if warm is None:
+                self.lane_misses += 1
+            else:
+                self.lane_hits += 1
+        return warm
 
     def bucket(self, sig: tuple, n_layers: int, s_pad: int) -> BucketStack:
         bs = self.buckets.get(sig)          # lock-free fast path

@@ -868,11 +868,9 @@ class StackedLambdaTask:
         self.uid: int | None = None      # assigned by run_stacked_sweeps
         if caches is not None and lane_key is not None \
                 and problem._padded is None:
-            bs = caches.buckets.get(self.bucket_sig)
-            if bs is not None:
-                warm = bs.padded(lane_key)
-                if warm is not None:
-                    problem._padded = warm
+            warm = caches.warm_padded(self.bucket_sig, lane_key)
+            if warm is not None:
+                problem._padded = warm
         self.padded = problem.padded_arrays()
         self.bucket = bucket_key(self.padded)
         self.seen: dict[tuple, dict] = {}

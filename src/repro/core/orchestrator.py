@@ -31,6 +31,7 @@ build the context, dispatch.
 
 from __future__ import annotations
 
+import os
 from typing import Sequence
 
 from repro.core.context import CompilationContext
@@ -95,10 +96,15 @@ def compile(
     same network, accelerator, and transition energy — mismatches
     raise ``ValueError``.  ``store`` plugs a process-wide artifact
     store (:class:`repro.service.ArtifactStore`) into a freshly built
-    context.
+    context; a ``str``/``PathLike`` builds a *disk-backed* store over
+    that directory — the content-addressable on-disk tier shared by
+    every process pointed at the same path (see
+    :mod:`repro.service.disk`), so even one-shot ``compile`` calls
+    can warm-start from (and publish to) a compile farm's cache.
     """
     goal = as_goal(goal)
     cfg = cfg or OrchestratorConfig()
+    store = _resolve_store(store)
     if ctx is None:
         ctx = CompilationContext(
             specs, acc=acc,
@@ -134,6 +140,23 @@ def compile_power_schedule(
     result = compile(specs, MinEnergy(rate_hz=target_rate_hz), cfg=cfg,
                      acc=acc, network=network, ctx=ctx, store=store)
     return None if isinstance(result, InfeasibleGoal) else result
+
+
+def _resolve_store(store):
+    """Accept a ready store object or a filesystem path: paths build a
+    disk-backed :class:`~repro.service.ArtifactStore` on the fly (the
+    tier itself is persistent and shared — constructing the wrapper is
+    cheap).  Imported lazily; :mod:`repro.service` depends on this
+    module."""
+    if store is None or hasattr(store, "characterization"):
+        return store
+    if isinstance(store, (str, os.PathLike)):
+        from repro.service.store import ArtifactStore
+
+        return ArtifactStore(disk_path=store)
+    raise TypeError(
+        f"store= must be an ArtifactStore-like object or a directory "
+        f"path, got {type(store).__name__}")
 
 
 def _dispatch(ctx: CompilationContext, cfg: OrchestratorConfig,

@@ -159,12 +159,42 @@ class CompileService:
 
     def __init__(self, acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
                  store: ArtifactStore | None = None, *,
-                 use_schedule_cache: bool = True):
+                 use_schedule_cache: bool = True,
+                 disk_path=None):
+        if store is not None and disk_path is not None:
+            raise ValueError(
+                "give store= or disk_path=, not both — a disk-backed "
+                "store is built from disk_path; an explicit store "
+                "already decided its own backing")
         self.acc = acc
-        self.store = store if store is not None else ArtifactStore()
+        self.store = store if store is not None \
+            else ArtifactStore(disk_path=disk_path)
         self.use_schedule_cache = use_schedule_cache
         self._async_lock = threading.Lock()
         self._async_pool: concurrent.futures.Executor | None = None
+
+    # -- lifecycle -----------------------------------------------------
+    def close(self, *, wait: bool = True) -> None:
+        """Deterministically shut down the service's background resolve
+        pool (cancelling queued compiles; ``wait=False`` detaches
+        without joining — the :meth:`abandon_async_pool` watchdog
+        semantics) and flush any deferred disk publications.  Safe to
+        call repeatedly; the service stays usable afterwards (a new
+        async submit lazily builds a fresh pool).  Benches, farm
+        workers, and examples call this — or use the service as a
+        context manager — so the interpreter never hangs on a
+        non-daemon pool thread at exit."""
+        with self._async_lock:
+            pool, self._async_pool = self._async_pool, None
+        if pool is not None:
+            pool.shutdown(wait=wait, cancel_futures=True)
+        self.store.flush_disk()
+
+    def __enter__(self) -> "CompileService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- single compile ------------------------------------------------
     def context_for(self, specs: Sequence[LayerSpec],
@@ -284,7 +314,18 @@ class CompileService:
         aligned with ``requests`` and identical to per-request
         ``compile`` calls (which are in turn identical to cold
         goal-API compiles).
+
+        On a disk-backed store the whole batch publishes its disk
+        entries once, at the end (``deferred_publication``) — a farm
+        worker's cross-process writes are batched per admitted batch,
+        never interleaved into the solve loop.
         """
+        with self.store.deferred_publication():
+            return self._compile_many(requests,
+                                      stack_networks=stack_networks)
+
+    def _compile_many(self, requests: Sequence[CompileRequest], *,
+                      stack_networks: bool = True) -> list:
         results: list = [None] * len(requests)
         # one solve unit per (request, frontier point); units carry the
         # slot to write: (request index, point index | None)

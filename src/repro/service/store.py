@@ -28,6 +28,20 @@ content-addressable and therefore shareable process-wide:
     deserialized artifact; provably-impossible goals cache their
     structured ``InfeasibleGoal`` (reason + bound) the same way.
 
+With ``disk_path=`` the store gains a second tier: a content-addressable
+on-disk store of per-entry digest-named immutable files
+(:class:`~repro.service.disk.DiskTier` — atomic-rename publication,
+concurrent-writer safe, LRU/size-budget eviction, schema-versioned).
+Lookups go **memory → disk → miss**: warm entries stream in lazily from
+disk instead of loading a whole snapshot, and computed entries publish
+through to disk so *other processes* sharing the directory warm-start
+from them — the compile farm's shared store
+(:mod:`repro.service.farm`).  ``deferred_publication()`` batches the
+disk writes of a ``compile_many`` so publication happens once per
+batch, not once per artifact mid-solve.  Characterization and the
+subset lane stores stay memory-only (both are cheap to rebuild relative
+to their serialized size).
+
 The backend jit caches are already process-wide (``get_backend``
 memoizes backend instances, and jitted programs key on padded shapes);
 :meth:`ArtifactStore.backend` exposes them so the store is the single
@@ -43,15 +57,19 @@ lane counts.
 
 All caches hold immutable values; mutating operations take the store
 lock, and value recomputation races at worst duplicate work (identical
-content), never tear a read — safe for concurrent ``compile_many``.
+content), never tear a read — safe for concurrent ``compile_many``
+within a process and, through the disk tier, across processes.
 
 ``save``/``load`` persist the transition matrices, master tables, and
-the schedule cache to one ``.npz`` file (arrays + a JSON manifest), so
-a service restart warm-starts from disk.
+the schedule cache to one monolithic ``.npz`` file (arrays + a JSON
+manifest, schema 1) so a service restart warm-starts from disk; a
+disk-backed store republishes every loaded entry as per-entry files —
+the schema-1 → schema-2 migration path for pre-existing snapshots.
 """
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import pathlib
@@ -68,6 +86,7 @@ from repro.core.schedule import PowerSchedule
 from repro.hw.edge40nm import Edge40nmAccelerator
 from repro.perfmodel.gating import plan_banks
 from repro.perfmodel.layer_costs import LayerSpec, characterize_network
+from repro.service.disk import DiskTier
 
 # schedule-cache sentinel for "compiled and found infeasible" — an
 # infeasible sweep is as expensive as a feasible one, so repeats of an
@@ -76,6 +95,11 @@ _INFEASIBLE = "__infeasible__"
 # structured variant: the goal API caches the InfeasibleGoal (reason +
 # bounds) so repeats get the diagnosis, not just the verdict
 _INFEASIBLE_GOAL_PREFIX = "__infeasible_goal__:"
+
+#: stat categories (hit/miss/eviction counters); "lanes" counts the
+#: subset lane stores' warm-padded lookups (see StackCaches)
+_CATEGORIES = ("characterization", "master", "transition", "schedule",
+               "pruning", "lanes")
 
 
 def _migrate_schedule_key(key: tuple) -> tuple:
@@ -103,9 +127,12 @@ def _migrate_schedule_key(key: tuple) -> tuple:
 
 class ArtifactStore:
     """Thread-safe, content-addressable cache of every shareable
-    compilation artifact (see module docstring)."""
+    compilation artifact, optionally backed by a shared on-disk tier
+    (see module docstring)."""
 
-    def __init__(self):
+    def __init__(self, disk_path=None, *,
+                 max_disk_bytes: int | None = None,
+                 max_disk_entries: int | None = None):
         self._lock = threading.RLock()
         # specs_acc_key -> (costs, plan)
         self._characterization: dict = {}
@@ -121,10 +148,79 @@ class ArtifactStore:
         self._prunings: dict = {}
         # persistent subset lane stores + round member-stack cache
         self.stack_caches = StackCaches()
-        self.hits = {"characterization": 0, "master": 0,
-                     "transition": 0, "schedule": 0, "pruning": 0}
-        self.misses = {"characterization": 0, "master": 0,
-                       "transition": 0, "schedule": 0, "pruning": 0}
+        self.hits = {c: 0 for c in _CATEGORIES}
+        self.misses = {c: 0 for c in _CATEGORIES}
+        # entries answered by the disk tier (a subset of hits) — the
+        # cross-process sharing signal the farm benchmarks report
+        self.disk_hits = {c: 0 for c in _CATEGORIES}
+        self.evictions = {"lanes": 0}
+        self.disk = DiskTier(disk_path, max_bytes=max_disk_bytes,
+                             max_entries=max_disk_entries) \
+            if disk_path is not None else None
+        # deferred disk publication (see deferred_publication)
+        self._defer_depth = 0
+        self._pending_disk: dict = {}
+
+    # -- deferred (batched) disk publication ---------------------------
+    @contextlib.contextmanager
+    def deferred_publication(self):
+        """Batch disk-tier writes: inside the context, computed entries
+        publish to memory immediately but buffer their disk writes;
+        the buffer flushes (deduplicated, one atomic rename per entry)
+        when the outermost context exits.  ``compile_many`` wraps its
+        solve phase in this so a fleet batch publishes once at the
+        end — reads are unaffected (memory answers them).  No-op
+        without a disk tier."""
+        with self._lock:
+            self._defer_depth += 1
+        try:
+            yield self
+        finally:
+            with self._lock:
+                self._defer_depth -= 1
+                flush = self._defer_depth == 0
+            if flush:
+                self.flush_disk()
+
+    def flush_disk(self) -> int:
+        """Write buffered disk publications now (atomic per entry) and
+        apply the eviction budget.  Returns the number of entries
+        published."""
+        with self._lock:
+            pending, self._pending_disk = self._pending_disk, {}
+        if self.disk is None:
+            return 0
+        for (cat, key), value in pending.items():
+            self._disk_put_now(cat, key, value)
+        self.disk.evict_to_budget()
+        return len(pending)
+
+    def _disk_put(self, cat: str, key: tuple, value) -> None:
+        if self.disk is None:
+            return
+        with self._lock:
+            if self._defer_depth > 0:
+                self._pending_disk[(cat, key)] = value
+                return
+        self._disk_put_now(cat, key, value)
+
+    def _disk_put_now(self, cat: str, key: tuple, value) -> None:
+        if cat == "master":
+            self.disk.put_master(key, value)
+        elif cat == "transition":
+            self.disk.put_transition(key, value)
+        elif cat == "schedule":
+            self.disk.put_schedule(key, value)
+        elif cat == "pruning":
+            self.disk.put_pruning(key, value)
+        else:                               # pragma: no cover
+            raise ValueError(f"unknown disk category {cat!r}")
+
+    def _count(self, cat: str, *, hit: bool, disk: bool = False) -> None:
+        with self._lock:
+            (self.hits if hit else self.misses)[cat] += 1
+            if disk:
+                self.disk_hits[cat] += 1
 
     # -- characterization ---------------------------------------------
     def characterization(self, specs: Sequence[LayerSpec],
@@ -139,8 +235,7 @@ class ArtifactStore:
             key = _digest(repr(tuple(specs)), repr(acc))
         hit = self._characterization.get(key)
         if hit is not None:
-            with self._lock:
-                self.hits["characterization"] += 1
+            self._count("characterization", hit=True)
             return hit
         costs = characterize_network(list(specs), acc)
         plan = plan_banks(costs, acc)
@@ -152,16 +247,21 @@ class ArtifactStore:
     # -- master state tables ------------------------------------------
     def master(self, key: tuple) -> dict | None:
         rec = self._masters.get(key)
-        with self._lock:
-            if rec is None:
-                self.misses["master"] += 1
-            else:
-                self.hits["master"] += 1
+        disk = False
+        if rec is None and self.disk is not None:
+            rec = self.disk.get_master(key)
+            if rec is not None:
+                disk = True
+                with self._lock:
+                    self._masters.setdefault(key, rec)
+                    rec = self._masters[key]
+        self._count("master", hit=rec is not None, disk=disk)
         return rec
 
     def put_master(self, key: tuple, rec: dict) -> None:
         with self._lock:
             self._masters.setdefault(key, rec)
+        self._disk_put("master", key, rec)
 
     # -- transition matrices ------------------------------------------
     def transition(self, tm_key: str, ka: bytes, kb: bytes,
@@ -172,14 +272,22 @@ class ArtifactStore:
         key = (tm_key, ka, kb)
         hit = self._transitions.get(key)
         if hit is not None:
-            with self._lock:
-                self.hits["transition"] += 1
+            self._count("transition", hit=True)
             return hit
+        if self.disk is not None:
+            hit = self.disk.get_transition(key)
+            if hit is not None:
+                self._count("transition", hit=True, disk=True)
+                with self._lock:
+                    self._transitions.setdefault(key, hit)
+                    return self._transitions[key]
         val = _pairwise_transition(tm, va, vb)
         with self._lock:
             self.misses["transition"] += 1
             self._transitions.setdefault(key, val)
-            return self._transitions[key]
+            val = self._transitions[key]
+        self._disk_put("transition", key, val)
+        return val
 
     # -- structure-pruning keep maps ----------------------------------
     def pruning(self, key: tuple) -> tuple | None:
@@ -189,16 +297,21 @@ class ArtifactStore:
         solve and depends on neither deadline nor goal — a hit rebuilds
         the pruned view by slicing alone."""
         maps = self._prunings.get(key)
-        with self._lock:
-            if maps is None:
-                self.misses["pruning"] += 1
-            else:
-                self.hits["pruning"] += 1
+        disk = False
+        if maps is None and self.disk is not None:
+            maps = self.disk.get_pruning(key)
+            if maps is not None:
+                disk = True
+                with self._lock:
+                    self._prunings.setdefault(key, maps)
+                    maps = self._prunings[key]
+        self._count("pruning", hit=maps is not None, disk=disk)
         return maps
 
     def put_pruning(self, key: tuple, maps: tuple) -> None:
         with self._lock:
             self._prunings.setdefault(key, maps)
+        self._disk_put("pruning", key, maps)
 
     # -- compiled schedules -------------------------------------------
     def schedule(self, key: tuple) -> PowerSchedule | None | str | \
@@ -209,11 +322,15 @@ class ArtifactStore:
         structured :class:`~repro.core.goals.InfeasibleGoal` when the
         goal API recorded the reason, or None on miss."""
         text = self._schedules.get(key)
-        with self._lock:
-            if text is None:
-                self.misses["schedule"] += 1
-            else:
-                self.hits["schedule"] += 1
+        disk = False
+        if text is None and self.disk is not None:
+            text = self.disk.get_schedule(key)
+            if text is not None:
+                disk = True
+                with self._lock:
+                    self._schedules.setdefault(key, text)
+                    text = self._schedules[key]
+        self._count("schedule", hit=text is not None, disk=disk)
         if text is None:
             return None
         if text == _INFEASIBLE:
@@ -237,6 +354,7 @@ class ArtifactStore:
             text = sched.to_json()
         with self._lock:
             self._schedules[key] = text
+        self._disk_put("schedule", key, text)
 
     # -- bookkeeping ---------------------------------------------------
     def backend(self, name: str | None = None):
@@ -247,6 +365,10 @@ class ArtifactStore:
 
     def stats(self) -> dict:
         with self._lock:
+            hits = dict(self.hits)
+            misses = dict(self.misses)
+            hits["lanes"] += self.stack_caches.lane_hits
+            misses["lanes"] += self.stack_caches.lane_misses
             out = {
                 "characterizations": len(self._characterization),
                 "masters": len(self._masters),
@@ -254,9 +376,13 @@ class ArtifactStore:
                 "schedules": len(self._schedules),
                 "prunings": len(self._prunings),
                 "resident_lanes": self.stack_caches.n_lanes(),
-                "hits": dict(self.hits),
-                "misses": dict(self.misses),
+                "hits": hits,
+                "misses": misses,
+                "disk_hits": dict(self.disk_hits),
+                "evictions": dict(self.evictions),
             }
+        out["disk"] = self.disk.stats() if self.disk is not None \
+            else None
         # device-lane transfer counters of the default backend (only
         # the jax backend keeps them) — h2d uploads/bytes should stay
         # flat across warm rounds when lanes are device-resident
@@ -267,8 +393,10 @@ class ArtifactStore:
 
     def clear(self, *, schedules: bool = True, stacks: bool = True,
               tables: bool = True) -> None:
-        """Drop cached artifacts (selectively).  ``tables`` covers
-        characterization, master tables, and transition matrices."""
+        """Drop cached *in-memory* artifacts (selectively).  ``tables``
+        covers characterization, master tables, and transition
+        matrices.  The disk tier is untouched — cleared entries stream
+        back in lazily on next use."""
         with self._lock:
             if schedules:
                 self._schedules.clear()
@@ -284,16 +412,21 @@ class ArtifactStore:
         """Reset the subset lane stores once they exceed ``max_lanes``
         resident lanes (correctness-neutral: evicted lanes are simply
         rebuilt on next use).  Returns True when a trim happened."""
-        if self.stack_caches.n_lanes() <= max_lanes:
+        n = self.stack_caches.n_lanes()
+        if n <= max_lanes:
             return False
         self.stack_caches.clear()
+        with self._lock:
+            self.evictions["lanes"] += n
         return True
 
     # -- disk persistence ---------------------------------------------
     def save(self, path) -> None:
         """Persist transition matrices, master tables, pruning keep
-        maps, and the schedule cache to ``path`` as one ``.npz``
-        (arrays + JSON manifest)."""
+        maps, and the schedule cache to ``path`` as one monolithic
+        ``.npz`` (arrays + JSON manifest, schema 1 — the restart
+        snapshot format; the per-entry disk tier is schema 2 and needs
+        no explicit save: every entry already published through)."""
         with self._lock:
             transitions = dict(self._transitions)
             masters = dict(self._masters)
@@ -346,40 +479,51 @@ class ArtifactStore:
     def load(self, path) -> "ArtifactStore":
         """Merge a :meth:`save` snapshot into this store (existing
         entries win — loaded content is by construction identical for
-        equal keys).  Returns ``self`` for chaining."""
+        equal keys).  On a disk-backed store, every loaded entry is
+        also republished to the per-entry tier — the monolithic
+        schema-1 snapshot's migration path into the schema-2 layout
+        (batched: one flush at the end).  Returns ``self`` for
+        chaining."""
         with np.load(path) as data:
             manifest = json.loads(bytes(data["manifest"]).decode())
             if manifest.get("version") != 1:
                 raise ValueError(
                     f"unknown artifact snapshot version "
                     f"{manifest.get('version')!r}")
-            with self._lock:
-                for i, ent in enumerate(manifest["transitions"]):
-                    key = (ent["tm"], bytes.fromhex(ent["a"]),
-                           bytes.fromhex(ent["b"]))
-                    self._transitions.setdefault(
-                        key, (data[f"tr{i}_t"], data[f"tr{i}_e"],
-                              data[f"tr{i}_s"]))
-                for j, ent in enumerate(manifest["masters"]):
-                    volts = [data[f"ma{j}_v{i}"]
-                             for i in range(ent["layers"])]
-                    rec = {
-                        "volts": volts,
-                        "t_op": [data[f"ma{j}_t{i}"]
-                                 for i in range(ent["layers"])],
-                        "e_op": [data[f"ma{j}_e{i}"]
-                                 for i in range(ent["layers"])],
-                        "vkey": [v.tobytes() for v in volts],
-                    }
-                    self._masters.setdefault(
-                        (ent["key"], ent["gating"]), rec)
-                for ent in manifest["schedules"]:
-                    self._schedules.setdefault(
-                        _migrate_schedule_key(tuple(ent["key"])),
-                        ent["json"])
-                for ent in manifest.get("prunings", []):
-                    key = (ent["content"], ent["gating"],
-                           tuple(ent["rails"]))
-                    self._prunings.setdefault(
-                        key, tuple(tuple(m) for m in ent["maps"]))
+            with self.deferred_publication():
+                with self._lock:
+                    for i, ent in enumerate(manifest["transitions"]):
+                        key = (ent["tm"], bytes.fromhex(ent["a"]),
+                               bytes.fromhex(ent["b"]))
+                        self._transitions.setdefault(
+                            key, (data[f"tr{i}_t"], data[f"tr{i}_e"],
+                                  data[f"tr{i}_s"]))
+                        self._disk_put("transition", key,
+                                       self._transitions[key])
+                    for j, ent in enumerate(manifest["masters"]):
+                        volts = [data[f"ma{j}_v{i}"]
+                                 for i in range(ent["layers"])]
+                        rec = {
+                            "volts": volts,
+                            "t_op": [data[f"ma{j}_t{i}"]
+                                     for i in range(ent["layers"])],
+                            "e_op": [data[f"ma{j}_e{i}"]
+                                     for i in range(ent["layers"])],
+                            "vkey": [v.tobytes() for v in volts],
+                        }
+                        key = (ent["key"], ent["gating"])
+                        self._masters.setdefault(key, rec)
+                        self._disk_put("master", key, self._masters[key])
+                    for ent in manifest["schedules"]:
+                        key = _migrate_schedule_key(tuple(ent["key"]))
+                        self._schedules.setdefault(key, ent["json"])
+                        self._disk_put("schedule", key,
+                                       self._schedules[key])
+                    for ent in manifest.get("prunings", []):
+                        key = (ent["content"], ent["gating"],
+                               tuple(ent["rails"]))
+                        self._prunings.setdefault(
+                            key, tuple(tuple(m) for m in ent["maps"]))
+                        self._disk_put("pruning", key,
+                                       self._prunings[key])
         return self
