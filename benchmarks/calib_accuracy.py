@@ -1,0 +1,238 @@
+"""Calibration accuracy: harness determinism, truth recovery, and
+schedule parity (CI smoke + ``BENCH_calib.json`` recording).
+
+Exercises the :mod:`repro.calib` subsystem end to end on seeded
+synthetic measurements — no hardware in the loop, every number
+reproducible:
+
+  1. **Determinism** — two harness runs with the same
+     ``(accelerator, HarnessConfig, measurement source, host)`` must
+     produce bit-identical roofline records (the content-addressed
+     sharing contract: farm workers that compute the same key must be
+     computing the same table).
+  2. **Parity** — the self-measuring harness (``measure=None``) yields
+     ratios of exactly 1.0, and a schedule compiled under its (or any
+     identity) cost model is bit-identical to the static compile while
+     carrying a distinct ``cost_model`` provenance digest.
+  3. **Truth recovery** — with a seeded synthetic "true silicon"
+     (per-kind work scales + lognormal measurement noise) the harness
+     recovers the injected scales, and a schedule compiled under the
+     recovered model *executes* (under the matching fault injection)
+     within its deadline, with a strictly smaller prediction error
+     than the static model's.
+  4. **Policy-table parity** — a (band × deadline) schedule family
+     compiled as ONE fleet batch is bit-identical to per-band solo
+     compiles on a fresh service.
+
+Usage:
+    PYTHONPATH=src python benchmarks/calib_accuracy.py \
+        [--out BENCH_calib.json] [--smoke] [--backend numpy|jax]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+try:
+    from benchmarks._host import host_meta
+except ImportError:  # direct script run: benchmarks/ is sys.path[0]
+    from _host import host_meta
+
+from repro.calib import (
+    HarnessConfig,
+    compile_policy_table,
+    identity_model,
+    run_harness,
+    solver_kernel_walls,
+    synthetic_measurement,
+)
+from repro.core import MinEnergy, OrchestratorConfig, ParetoFront
+from repro.core import compile as compile_goal
+from repro.core.schedule import PowerSchedule
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.perfmodel import characterize_network, plan_banks
+from repro.serve import PowerRuntime
+from repro.serve.faults import IntervalFaults
+from repro.service import CompileService
+
+HERE = pathlib.Path(__file__).parent
+
+NETWORK = "squeezenet1.1"
+POLICY = "pfdnn"
+SEED = 7
+
+#: the synthetic silicon: per-kind "true" work scales the harness must
+#: recover through its noisy measurements
+TRUE_SCALE = {"conv": 1.18, "dwconv": 1.10, "fc": 0.88, "attn": 1.05,
+              "pool": 1.00, "eltwise": 1.00}
+NOISE_SIGMA = 0.02
+RECOVERY_TOL = 0.03   # per-kind |recovered/true - 1| bound
+
+
+def _max_rate(specs) -> float:
+    costs = characterize_network(specs, ACC)
+    fs = [ACC.dvfs(d).freq(ACC.v_max) for d in range(3)]
+    t = sum(max(cy / f for cy, f in zip(c.cycles, fs)) for c in costs)
+    return 1.0 / t
+
+
+def _executed_t(sched: PowerSchedule, costs, plan,
+                op_scale: np.ndarray) -> float:
+    """One interval executed in the synthetic "true" world."""
+    rt = PowerRuntime(sched, costs, plan, ACC)
+    led = rt.execute_interval(faults=IntervalFaults(
+        op_scale=op_scale, trans_scale=np.ones(len(costs))))
+    return led.t_infer
+
+
+def run(backend: str | None) -> dict:
+    specs = edge_network(NETWORK)
+    costs = characterize_network(specs, ACC)
+    plan = plan_banks(costs, ACC)
+    cfg = OrchestratorConfig(policy=POLICY, backend=backend)
+    # 0.75 × the static max rate: tight enough that an 18% conv-work
+    # underestimate matters, loose enough that the calibrated model
+    # (whose min time is ~18% above static) stays feasible
+    deadline = 1.0 / (0.75 * _max_rate(specs))
+    results: dict = {"network": NETWORK, "policy": POLICY,
+                     "deadline_ms": deadline * 1e3,
+                     "true_scale": TRUE_SCALE,
+                     "noise_sigma": NOISE_SIGMA}
+
+    # -- 1. determinism -----------------------------------------------
+    hcfg = HarnessConfig(seed=SEED)
+    measure = synthetic_measurement(TRUE_SCALE, noise_sigma=NOISE_SIGMA)
+    tic = time.perf_counter()
+    table = run_harness(ACC, hcfg, measure=measure)
+    harness_wall = time.perf_counter() - tic
+    rerun = run_harness(ACC, hcfg, measure=measure)
+    deterministic = table.to_record() == rerun.to_record()
+    assert deterministic, \
+        "same-seed harness runs produced different roofline tables"
+    results["harness"] = {"wall_s": harness_wall,
+                          "n_points": len(table.points),
+                          "key": table.key,
+                          "deterministic": deterministic}
+
+    # -- 2. parity: self-measurement == static model ------------------
+    parity_table = run_harness(ACC, hcfg)          # measure=None
+    ratios = [r for pair in parity_table.ratios_by_kind().values()
+              for r in pair]
+    assert all(r == 1.0 for r in ratios), \
+        f"self-measuring harness ratios must be exactly 1.0: {ratios}"
+    static = compile_goal(specs, MinEnergy(deadline_s=deadline),
+                          cfg=cfg, network=NETWORK)
+    ident = compile_goal(specs, MinEnergy(deadline_s=deadline),
+                         cfg=cfg, network=NETWORK,
+                         cost_model=identity_model(len(specs)))
+    assert ident.e_total == static.e_total and \
+        ident.layer_voltages == static.layer_voltages, \
+        "identity cost model changed the compiled schedule"
+    assert static.cost_model == "static" != ident.cost_model, \
+        "schedule cost-model provenance must distinguish the paths"
+    results["parity"] = {"e_total_j": static.e_total,
+                         "identity_bit_identical": True}
+    print(f"parity: identity == static (E={static.e_total:.6g} J), "
+          f"provenance {static.cost_model} vs {ident.cost_model[:12]}")
+
+    # -- 3. truth recovery --------------------------------------------
+    recovered = {k: t for k, (t, _) in table.ratios_by_kind().items()}
+    rec_err = {k: abs(recovered[k] / TRUE_SCALE[k] - 1.0)
+               for k in TRUE_SCALE}
+    assert max(rec_err.values()) <= RECOVERY_TOL, \
+        f"harness failed to recover the injected scales: {rec_err}"
+    model = table.cost_model(specs)
+    true_per_layer = np.array(
+        [TRUE_SCALE.get(s.kind, 1.0) for s in specs])
+    calib = compile_goal(specs, MinEnergy(deadline_s=deadline),
+                         cfg=cfg, network=NETWORK, cost_model=model)
+    assert isinstance(calib, PowerSchedule), \
+        f"calibrated compile came back infeasible: {calib!r}"
+    t_static = _executed_t(static, costs, plan, true_per_layer)
+    t_calib = _executed_t(calib, costs, plan, true_per_layer)
+    err_static = abs(t_static / static.t_infer - 1.0)
+    err_calib = abs(t_calib / calib.t_infer - 1.0)
+    assert err_calib < err_static, \
+        f"calibrated prediction error {err_calib:.4f} not below " \
+        f"static {err_static:.4f}"
+    assert t_calib <= deadline * (1.0 + 1e-9), \
+        f"calibrated schedule missed its deadline on the true " \
+        f"silicon: {t_calib * 1e3:.3f} > {deadline * 1e3:.3f} ms"
+    results["recovery"] = {
+        "recovered_scale": recovered,
+        "max_kind_err": max(rec_err.values()),
+        "pred_err_static": err_static,
+        "pred_err_calibrated": err_calib,
+        "executed_ms_static": t_static * 1e3,
+        "executed_ms_calibrated": t_calib * 1e3,
+        "calibrated_meets_deadline": bool(t_calib <= deadline),
+    }
+    print(f"recovery: max kind err {max(rec_err.values()):.4f}, "
+          f"prediction err {err_static:.4f} -> {err_calib:.4f}, "
+          f"executed {t_calib * 1e3:.3f} <= {deadline * 1e3:.3f} ms")
+
+    # -- 4. policy-table family == solo compiles ----------------------
+    edges = (0.25, 0.75, 1.0)
+    grid = (deadline, 1.5 * deadline)
+    tic = time.perf_counter()
+    with CompileService(ACC) as svc:
+        ptable = compile_policy_table(
+            svc, specs, band_edges=edges, deadlines=grid,
+            cfg=cfg, network=NETWORK)
+    family_wall = time.perf_counter() - tic
+    n_pts, mismatches = 0, 0
+    with CompileService(ACC) as fresh:
+        for band in ptable.bands:
+            for d, sched in band.schedules.items():
+                solo = fresh.compile(
+                    specs, cfg=cfg, network=NETWORK,
+                    goal=MinEnergy(deadline_s=d),
+                    cost_model=band.cost_model)
+                n_pts += 1
+                if not (solo.e_total == sched.e_total and
+                        solo.layer_voltages == sched.layer_voltages):
+                    mismatches += 1
+    assert n_pts > 0 and mismatches == 0, \
+        f"policy-table family diverged from solo compiles: " \
+        f"{mismatches}/{n_pts}"
+    results["policy_table"] = {
+        "bands": len(ptable.bands), "n_points": n_pts,
+        "family_wall_s": family_wall, "solo_bit_identical": True}
+    print(f"policy table: {n_pts} family points bit-identical to solo "
+          f"compiles ({family_wall:.1f}s for the fleet batch)")
+
+    results["solver_walls"] = solver_kernel_walls(backend)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out",
+                    default=str(HERE.parent / "BENCH_calib.json"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert everything and exit without writing "
+                         "the JSON")
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"))
+    args = ap.parse_args()
+
+    tic = time.perf_counter()
+    results = run(args.backend)
+    if args.smoke:
+        print(f"calib accuracy smoke OK "
+              f"({time.perf_counter() - tic:.1f}s, "
+              f"backend={args.backend or 'default'})")
+        return
+    results["backend"] = args.backend or "default"
+    results["host"] = host_meta(args.backend)
+    pathlib.Path(args.out).write_text(json.dumps(results, indent=1))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

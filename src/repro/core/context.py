@@ -79,7 +79,8 @@ class CompilationContext:
                  *, acc: Edge40nmAccelerator = EDGE40NM_DEFAULT,
                  network: str = "net",
                  e_switch_nom: float | None = None,
-                 store=None, deadline_s: float | None = None):
+                 store=None, deadline_s: float | None = None,
+                 cost_model=None):
         if target_rate_hz is not None and deadline_s is not None:
             raise ValueError(
                 "give at most one of target_rate_hz / deadline_s")
@@ -100,13 +101,23 @@ class CompilationContext:
         self.levels: tuple[float, ...] = acc.levels()
         self.transition_model = acc.transitions(e_switch_nom)
         # content keys (deterministic digests of frozen-dataclass reprs):
-        # specs_acc_key addresses everything derived from (specs, acc) —
-        # characterization and master tables; content_key additionally
-        # folds in the transition model (e_switch_nom) and addresses
-        # transition-dependent artifacts — subset lane stores and the
-        # service's schedule cache
+        # specs_acc_key addresses everything derived from (specs, acc)
+        # under the *static* analytic cost model — the shared
+        # characterization; model_key additionally folds in an injected
+        # cost-model digest (repro.calib) and addresses everything
+        # derived from the *effective* costs — the master state tables;
+        # content_key folds in the transition model (e_switch_nom) on
+        # top and addresses transition-dependent artifacts — subset
+        # lane stores and the service's schedule cache.  With
+        # cost_model=None every key is byte-identical to the pre-calib
+        # scheme, so existing caches and goldens are untouched.
+        self.cost_model = cost_model
+        self.cost_model_digest = "static" if cost_model is None \
+            else cost_model.digest
         self.specs_acc_key = _digest(repr(tuple(self.specs)), repr(acc))
-        self.content_key = _digest(self.specs_acc_key,
+        self.model_key = self.specs_acc_key if cost_model is None \
+            else _digest(self.specs_acc_key, self.cost_model_digest)
+        self.content_key = _digest(self.model_key,
                                    repr(self.transition_model))
         self._tm_key = repr(self.transition_model)
         if store is not None:
@@ -115,6 +126,12 @@ class CompilationContext:
         else:
             self.costs = characterize_network(self.specs, acc)
             self.plan = plan_banks(self.costs, acc)
+        if cost_model is not None:
+            # per-layer corrections scale work (cycles + dynamic
+            # energy together, the fault model's op_scale semantics);
+            # the bank plan stays static — weight placement depends on
+            # spec bytes, not on measured timing
+            self.costs = cost_model.apply(self.costs)
         # gating flag -> per-layer master StateCost lists / voltage tables
         self._master: dict[bool, list[list[StateCost]]] = {}
         self._master_volts: dict[bool, list[np.ndarray]] = {}
@@ -159,7 +176,7 @@ class CompilationContext:
             if gating in self._master_volts:
                 return
             rec = None
-            mkey = (self.specs_acc_key, gating)
+            mkey = (self.model_key, gating)
             if self.store is not None:
                 rec = self.store.master(mkey)
             if rec is None:

@@ -79,6 +79,7 @@ def compile(
     network: str | None = None,
     ctx: CompilationContext | None = None,
     store=None,
+    cost_model=None,
 ) -> PowerSchedule | InfeasibleGoal | ParetoFrontier:
     """Compile a deployment power schedule for an explicit goal.
 
@@ -101,6 +102,12 @@ def compile(
     every process pointed at the same path (see
     :mod:`repro.service.disk`), so even one-shot ``compile`` calls
     can warm-start from (and publish to) a compile farm's cache.
+
+    ``cost_model`` compiles under a measured/learned cost model
+    (:class:`repro.calib.CalibratedCostModel` — anything with a
+    ``digest`` and an ``apply(costs)``) instead of the static analytic
+    one; the model's digest is folded into every derived artifact key
+    and stamped on the emitted schedule (``PowerSchedule.cost_model``).
     """
     goal = as_goal(goal)
     cfg = cfg or OrchestratorConfig()
@@ -111,10 +118,10 @@ def compile(
             network=network if network is not None else "net",
             e_switch_nom=cfg.e_switch_nom, store=store,
             deadline_s=goal.deadline if isinstance(goal, MinEnergy)
-            else None)
+            else None, cost_model=cost_model)
     else:
         _check_reused_context(ctx, specs, acc, cfg, network=network,
-                              store=store)
+                              store=store, cost_model=cost_model)
     if isinstance(goal, ParetoFront):
         return _compile_frontier(ctx, goal, cfg)
     sched = _dispatch(ctx, cfg, goal)
@@ -294,7 +301,8 @@ def _check_reused_context(ctx: CompilationContext,
                           specs: Sequence[LayerSpec],
                           acc: Edge40nmAccelerator,
                           cfg: OrchestratorConfig, *,
-                          network: str | None, store) -> None:
+                          network: str | None, store,
+                          cost_model=None) -> None:
     """A reused context must match the compile request — a silently
     mismatched context would emit a schedule for the wrong network or
     transition energies (or bypass the caller's artifact store).  The
@@ -322,3 +330,13 @@ def _check_reused_context(ctx: CompilationContext,
         raise ValueError(
             "ctx= was built with a different e_switch_nom than cfg "
             "requests; build a new CompilationContext")
+    # cost_model=None inherits whatever model the context carries; an
+    # explicit model must match it (a silent mismatch would emit a
+    # schedule stamped — and cached — under the wrong calibration)
+    if cost_model is not None \
+            and cost_model.digest != ctx.cost_model_digest:
+        raise ValueError(
+            f"ctx= was built under cost model "
+            f"{ctx.cost_model_digest!r} but the request passes "
+            f"{cost_model.digest!r}; build a matching "
+            "CompilationContext (or drop cost_model= to inherit)")

@@ -209,6 +209,7 @@ def emit_schedule(policy: str, ctx: CompilationContext,
         solver_stats=stats,
         goal=goal_desc,
         binding_constraint=binding,
+        cost_model=ctx.cost_model_digest,
     )
 
 

@@ -48,6 +48,12 @@ class PowerSchedule:
     # artifacts emitted before the goal API / by direct policy calls.
     goal: dict[str, Any] | None = None
     binding_constraint: str | None = None
+    # cost-model provenance: "static" for the analytic layer_costs
+    # model, else the CalibratedCostModel digest the compile ran under
+    # (see repro.calib).  Folded into the artifact-store schedule key
+    # via the context's content_key, so schedules compiled under
+    # different calibrations never collide on a shared disk tier.
+    cost_model: str = "static"
 
     @property
     def energy_uj(self) -> float:

@@ -27,6 +27,24 @@ blocking compile.  Three mechanisms stack:
      merges the new points when they land.  :class:`AsyncResolver`'s
      watchdog abandons a hung/slow compile (the serving loop polls and
      never blocks on it).
+  4. **Ledger-learned recalibration** (``calib_enabled``).  Executed
+     interval ledgers feed a
+     :class:`~repro.calib.learning.ResidualEstimator`; when the
+     windowed per-layer cost residual diverges from the correction the
+     plane last compiled under, it re-solves its contingency set under
+     a ledger-learned
+     :class:`~repro.calib.learning.CalibratedCostModel` — re-centering
+     the whole snap grid on the *true* costs instead of permanently
+     paying the degradation ladder's tightened-headroom energy
+     premium.  The re-solve rides the same async resolver (or runs
+     inline with ``calib_blocking`` — simulated-time tests and
+     benches).
+  5. **Input-adaptive policy table** (``policy_table=``).  A
+     :class:`~repro.calib.policy_table.SchedulePolicyTable` compiled
+     per observable band (activation density, batch, sequence length)
+     adds a fourth snap axis: ``observe_input`` records the current
+     band and the plane serves the band's frontier — still a table
+     lookup, never a compile.
 
 ``serve_trace`` is the event-driven serving loop shared by the
 robustness benchmark and the tests: it plays a seeded arrival trace
@@ -49,6 +67,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro.calib.learning import ResidualEstimator, model_from_residuals
 from repro.hw.edge40nm import Edge40nmAccelerator
 from repro.perfmodel.gating import BankPlan
 from repro.perfmodel.layer_costs import LayerCost, LayerSpec
@@ -250,7 +269,7 @@ class StaticSchedulePolicy:
         return self.schedule, self.runtime
 
     def record(self, interval: int, *, miss: bool, dropped: bool,
-               now: float) -> None:
+               now: float, ledger: IntervalLedger | None = None) -> None:
         pass
 
 
@@ -285,6 +304,19 @@ class AdaptiveConfig:
     resolve_rate_band: tuple[float, float] = (0.5, 2.0)
     resolve_points: int = 4
     watchdog_s: float = 30.0
+    # ledger-learned recalibration (see repro.calib.learning): observe
+    # executed-vs-predicted cost residuals and re-solve the contingency
+    # set under the learned CalibratedCostModel once the estimate
+    # diverges from the currently applied correction by more than
+    # calib_threshold.  calib_blocking compiles inline instead of
+    # through the async resolver — for simulated-time serving loops
+    # (tests, benches) whose wall clock is unrelated to trace time.
+    calib_enabled: bool = False
+    calib_threshold: float = 0.06
+    calib_window: int = 32
+    calib_min_samples: int = 12
+    calib_cooldown: int = 24          # min intervals between re-solves
+    calib_blocking: bool = False
 
     def __post_init__(self) -> None:
         if not (0.0 < self.util_target <= 1.0):
@@ -296,6 +328,19 @@ class AdaptiveConfig:
                 "hysteresis requires 0 <= recover_miss_rate < "
                 f"breach_miss_rate, got {self.recover_miss_rate!r} vs "
                 f"{self.breach_miss_rate!r}")
+        if not (self.calib_threshold > 0.0):
+            raise ValueError(
+                f"calib_threshold must be > 0, got "
+                f"{self.calib_threshold!r}")
+        if self.calib_min_samples < 1 \
+                or self.calib_window < self.calib_min_samples:
+            raise ValueError(
+                f"need 1 <= calib_min_samples <= calib_window, got "
+                f"{self.calib_min_samples!r} vs {self.calib_window!r}")
+        if self.calib_cooldown < 0:
+            raise ValueError(
+                f"calib_cooldown must be >= 0, got "
+                f"{self.calib_cooldown!r}")
 
 
 #: degradation-ladder rungs, in escalation order
@@ -321,6 +366,7 @@ class AdaptiveScheduler:
                  specs: Sequence[LayerSpec] | None = None,
                  compile_cfg: Any = None,
                  acfg: AdaptiveConfig | None = None,
+                 policy_table: Any = None,
                  clock: Callable[[], float] = time.monotonic):
         if not bundle.points:
             raise ValueError(
@@ -347,9 +393,30 @@ class AdaptiveScheduler:
             if service is not None else None
         self._grid = sorted(bundle.points)
         self._runtimes: dict[int, PowerRuntime] = {}
-        self._current: tuple[int, float, str] | None = None
+        self._current: tuple | None = None
         self._since_transition = 0
         self._drift_ticks = 0
+        # input-adaptive policy table (fourth snap axis)
+        self.policy_table = policy_table
+        self._observable: float | None = None
+        # ledger-learned recalibration state: the estimator tracks the
+        # world's per-layer cost bias in the *static-model frame* (the
+        # runtimes predict with static costs whatever model the
+        # schedule was compiled under), and _applied_scale is the
+        # correction the current contingency set was compiled under —
+        # in the same frame, so their divergence is the re-solve
+        # trigger
+        acfg = self.acfg
+        self._estimator = ResidualEstimator(
+            len(costs), window=acfg.calib_window,
+            min_samples=acfg.calib_min_samples) \
+            if acfg.calib_enabled else None
+        self._applied_scale = np.ones(len(costs))
+        self._applied_model = None     # CalibratedCostModel once landed
+        self._predicted: dict[int, IntervalLedger] = {}
+        self._last_pick: tuple[PowerSchedule, PowerRuntime] | None = None
+        self._pending_model = None
+        self._calib_cooldown = 0
 
     # -- plumbing ------------------------------------------------------
     def _abandon_pool(self) -> None:
@@ -402,6 +469,30 @@ class AdaptiveScheduler:
         eff_deadline = acfg.util_target / required_rate
         self._poll_resolver(interval, now)
         self._watch_drift(interval, now, eff_deadline)
+        # input-adaptive axis: at the healthy rung, an observed input
+        # band serves its own precompiled frontier (the degradation
+        # ladder outranks it — the table has no tightened variants)
+        if (self.rung == RUNG_POINT and self.policy_table is not None
+                and self._observable is not None):
+            tsched = self.policy_table.lookup(self._observable,
+                                              eff_deadline)
+            if tsched is not None:
+                band = self.policy_table.band_for(self._observable)
+                key = ("table", band.lo, band.hi, tsched.t_max)
+                if key != self._current:
+                    self.events.log(
+                        interval, now, "snap",
+                        deadline_s=tsched.t_max, variant="policy_table",
+                        rung=self.rung, eff_deadline_s=eff_deadline,
+                        rate_hz=required_rate, queue_depth=queue_depth,
+                        observable=self._observable,
+                        band=(band.lo, band.hi),
+                        schedule_t_max_s=tsched.t_max,
+                        schedule_t_infer_s=tsched.t_infer,
+                        precompiled=True, source="policy_table")
+                    self._current = key
+                self._last_pick = (tsched, self.runtime_for(tsched))
+                return self._last_pick
         deadline = self._snap_deadline(eff_deadline)
         sched, variant = self._schedule_for(self.rung, deadline)
         key = (self.rung, deadline, variant)
@@ -415,13 +506,23 @@ class AdaptiveScheduler:
                 schedule_t_infer_s=sched.t_infer,
                 precompiled=True, source="precompiled")
             self._current = key
-        return sched, self.runtime_for(sched)
+        self._last_pick = (sched, self.runtime_for(sched))
+        return self._last_pick
+
+    def observe_input(self, interval: int, observable: float) -> None:
+        """Record the cheap runtime observable (activation density,
+        batch size, ...) the policy table is indexed by; the next
+        :meth:`pick` serves the matching band."""
+        self._observable = float(observable)
 
     def record(self, interval: int, *, miss: bool, dropped: bool,
-               now: float) -> None:
+               now: float, ledger: IntervalLedger | None = None) -> None:
         if dropped:
             return
         acfg = self.acfg
+        if (self._estimator is not None and ledger is not None
+                and self._last_pick is not None):
+            self._observe_ledger(interval, now, ledger)
         self.misses.record(miss)
         self._since_transition += 1
         if self._since_transition < acfg.dwell_intervals:
@@ -449,6 +550,110 @@ class AdaptiveScheduler:
             self.misses.clear()
             self._since_transition = 0
 
+    # -- ledger-learned recalibration ---------------------------------
+    def _observe_ledger(self, interval: int, now: float,
+                        executed: IntervalLedger) -> None:
+        sched, rt = self._last_pick
+        pred = self._predicted.get(id(sched))
+        if pred is None:
+            # fault-free replay of the schedule the interval ran under:
+            # the per-layer executed/predicted time ratio is then
+            # exactly the world's op_scale for that interval
+            pred = rt.execute_interval()
+            self._predicted[id(sched)] = pred
+        self._estimator.observe(executed, pred)
+        if self._calib_cooldown > 0:
+            self._calib_cooldown -= 1
+            return
+        est = self._estimator.estimate()
+        if est is None:
+            return
+        dev = float(np.max(np.abs(est / self._applied_scale - 1.0)))
+        if dev > self.acfg.calib_threshold:
+            self._recalibrate(interval, now, est, dev)
+
+    def _recalibrate(self, interval: int, now: float,
+                     est: np.ndarray, dev: float) -> None:
+        if self.service is None or self.specs is None:
+            return
+        acfg = self.acfg
+        model = model_from_residuals(est)
+        # re-solve at the bundle's own base rate so the replacement
+        # grid *replaces* the live snap points (compile_contingencies
+        # always puts the base deadline itself on the grid) instead of
+        # extending coverage sideways
+        base_rate = 1.0 / self.bundle.base_deadline_s
+        kwargs = dict(rate_band=acfg.resolve_rate_band,
+                      n_points=acfg.resolve_points,
+                      tighten_frac=self.bundle.tighten_frac,
+                      budget_frac=None, cfg=self.compile_cfg,
+                      network=self.bundle.network, cost_model=model)
+        if acfg.calib_blocking:
+            self._calib_cooldown = acfg.calib_cooldown
+            self.events.log(
+                interval, now, "calibrate_start", deviation=dev,
+                model=model.digest, blocking=True,
+                scale_min=float(min(model.scale)),
+                scale_max=float(max(model.scale)))
+            fresh = self.service.compile_contingencies(
+                self.specs, base_rate, **kwargs)
+            self._land_calibration(interval, now, fresh, model)
+            return
+        if self.resolver is None or self.resolver.busy:
+            return                     # retry once the resolver frees
+        self._calib_cooldown = acfg.calib_cooldown
+        self.events.log(
+            interval, now, "calibrate_start", deviation=dev,
+            model=model.digest, blocking=False,
+            scale_min=float(min(model.scale)),
+            scale_max=float(max(model.scale)))
+        future = self.service.compile_contingencies_async(
+            self.specs, base_rate, **kwargs)
+        self._pending_model = model
+        self.resolver.watch(f"calibrate@{model.digest[:12]}", future)
+
+    def _land_calibration(self, interval: int, now: float,
+                          fresh: ContingencyBundle, model) -> None:
+        b = self.bundle
+        if not fresh.points:
+            # every grid point came back infeasible under the learned
+            # model (extreme transient): keep serving the stale set —
+            # wrong-but-runnable beats nothing — and let the next
+            # estimate retry
+            self.events.log(
+                interval, now, "calibrate_done", model=model.digest,
+                replaced_points=0, dropped_stale=0, n_points=0)
+            return
+        replaced = sum(1 for d in fresh.points if d in b.points)
+        dropped = len(b.points) - replaced
+        # a calibration invalidates every schedule compiled under the
+        # previous model, so the whole operating set is REPLACED, not
+        # merged: a stale point left at an off-grid deadline would keep
+        # serving a wrong-model schedule whenever the snap lands on it
+        b.points.clear()
+        b.points.update(fresh.points)
+        b.tightened.clear()
+        b.tightened.update(fresh.tightened)
+        b.aggressive = fresh.aggressive
+        b.budget = fresh.budget
+        b.infeasible.extend(fresh.infeasible)
+        self._grid = sorted(b.points)
+        self._runtimes.clear()
+        self._predicted.clear()
+        self._applied_scale = np.asarray(model.scale, dtype=float)
+        self._applied_model = model
+        self._estimator.clear()
+        # the old residual evidence and ladder state described the
+        # stale compile — restart both cleanly under the new one
+        self.misses.clear()
+        self.rung = RUNG_POINT
+        self._since_transition = 0
+        self._current = None           # force a fresh snap event
+        self.events.log(
+            interval, now, "calibrate_done", model=model.digest,
+            replaced_points=replaced, dropped_stale=dropped,
+            n_points=len(b.points))
+
     # -- background re-solve ------------------------------------------
     def _watch_drift(self, interval: int, now: float,
                      eff_deadline: float) -> None:
@@ -464,12 +669,16 @@ class AdaptiveScheduler:
                 or self.specs is None):
             return
         rate = 1.0 / eff_deadline
+        # coverage extensions stay in the live cost-model frame: after
+        # a calibration has landed, a static-model point merged into
+        # the calibrated grid would serve wrong-model schedules
         future = self.service.compile_contingencies_async(
             self.specs, rate, rate_band=acfg.resolve_rate_band,
             n_points=acfg.resolve_points,
             tighten_frac=self.bundle.tighten_frac,
             budget_frac=None, cfg=self.compile_cfg,
-            network=self.bundle.network)
+            network=self.bundle.network,
+            cost_model=self._applied_model)
         self.resolver.watch(f"resolve@{rate:.3g}Hz", future)
         self._drift_ticks = 0
         self.events.log(interval, now, "resolve_start",
@@ -483,6 +692,10 @@ class AdaptiveScheduler:
             return
         status, tag, payload = polled
         if status == "done":
+            if tag.startswith("calibrate@"):
+                model, self._pending_model = self._pending_model, None
+                self._land_calibration(interval, now, payload, model)
+                return
             n_before = len(self.bundle.points)
             self.bundle.merge_points(payload)
             self._grid = sorted(self.bundle.points)
@@ -490,9 +703,11 @@ class AdaptiveScheduler:
                 interval, now, "resolve_done", tag=tag,
                 new_points=len(self.bundle.points) - n_before)
         elif status == "timeout":
+            self._pending_model = None
             self.events.log(interval, now, "resolve_timeout", tag=tag,
                             elapsed_s=payload)
         else:
+            self._pending_model = None
             self.events.log(interval, now, "resolve_error", tag=tag,
                             error=payload)
 
@@ -525,6 +740,7 @@ class ServeReport:
 
 def serve_trace(frame_times: np.ndarray, policy: Any, *,
                 injector: FaultInjector | None = None,
+                observables: np.ndarray | None = None,
                 on_interval: Callable[[int, IntervalLedger], None]
                 | None = None) -> ServeReport:
     """Play an arrival trace against a schedule policy.
@@ -536,6 +752,12 @@ def serve_trace(frame_times: np.ndarray, policy: Any, *,
     arrival) and the previous frame finished.  Energy accounts real
     execution plus the idle model over the gaps the server spends
     waiting, over the identical horizon for every policy.
+
+    ``observables`` optionally carries one cheap per-frame runtime
+    observable (activation density, batch size, ...) fed to policies
+    that implement ``observe_input`` — the policy-table snap axis.
+    Executed ledgers are handed to ``policy.record(..., ledger=)`` so a
+    learning policy can estimate cost residuals.
     """
     times = np.asarray(frame_times, dtype=float)
     if times.ndim != 1 or len(times) < 2:
@@ -543,6 +765,14 @@ def serve_trace(frame_times: np.ndarray, policy: Any, *,
             "frame_times must hold at least 2 timestamps "
             "(n frames need n+1 times)")
     n = len(times) - 1
+    if observables is not None:
+        observables = np.asarray(observables, dtype=float)
+        if observables.shape != (n,):
+            raise ValueError(
+                f"observables must hold one value per frame "
+                f"({n}), got shape {observables.shape}")
+    observe = getattr(policy, "observe_input", None) \
+        if observables is not None else None
     t_free = float(times[0])
     e_exec = e_idle = 0.0
     misses = served = dropped = 0
@@ -566,6 +796,8 @@ def serve_trace(frame_times: np.ndarray, policy: Any, *,
                                       side="right")) - k - 1
         gap = float(times[k] - times[k - 1]) if k > 0 \
             else float(times[1] - times[0])
+        if observe is not None:
+            observe(k, float(observables[k]))
         sched, runtime = policy.pick(k, start, gap, max(backlog, 0))
         if start > t_free:
             e_idle += runtime.idle.energy(start - t_free)
@@ -576,7 +808,8 @@ def serve_trace(frame_times: np.ndarray, policy: Any, *,
         miss = finish > deadline + 1e-12
         misses += int(miss)
         served += 1
-        policy.record(k, miss=miss, dropped=False, now=finish)
+        policy.record(k, miss=miss, dropped=False, now=finish,
+                      ledger=led)
         if on_interval is not None:
             on_interval(k, led)
         t_free = finish

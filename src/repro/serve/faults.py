@@ -47,6 +47,23 @@ class FaultConfig:
     p_late: float = 0.0
     late_max_s: float = 0.0
 
+    def __post_init__(self) -> None:
+        for name in ("op_sigma", "trans_sigma", "late_max_s"):
+            v = getattr(self, name)
+            if not (v >= 0.0):           # catches negatives and NaN
+                raise ValueError(
+                    f"FaultConfig.{name} must be >= 0, got {v!r}")
+        for name in ("p_trans_spike", "p_drop", "p_late"):
+            v = getattr(self, name)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(
+                    f"FaultConfig.{name} is a probability and must lie "
+                    f"in [0, 1], got {v!r}")
+        if not (self.trans_spike_mult > 0.0):
+            raise ValueError(
+                f"FaultConfig.trans_spike_mult must be > 0, got "
+                f"{self.trans_spike_mult!r}")
+
 
 @dataclasses.dataclass(frozen=True)
 class IntervalFaults:

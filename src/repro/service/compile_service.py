@@ -91,6 +91,12 @@ class CompileRequest:
     cfg: OrchestratorConfig | None = None
     network: str = "net"
     goal: Goal | None = None
+    #: optional CalibratedCostModel (see repro.calib) the compile runs
+    #: under; its digest is part of the context's content key, so
+    #: calibrated and static requests never share schedule-cache
+    #: entries — but batches mixing models still co-schedule their
+    #: sweeps in one fleet (policy-table compilation relies on this).
+    cost_model: object | None = None
 
     def resolve_goal(self) -> Goal:
         if self.goal is not None:
@@ -200,13 +206,16 @@ class CompileService:
     def context_for(self, specs: Sequence[LayerSpec],
                     target_rate_hz: float | None = None, *,
                     cfg: OrchestratorConfig | None = None,
-                    network: str = "net") -> CompilationContext:
+                    network: str = "net",
+                    cost_model=None) -> CompilationContext:
         """A store-backed context for one network (reusable across
-        policies, goals, and deadlines via ``compile(..., ctx=...)``)."""
+        policies, goals, and deadlines via ``compile(..., ctx=...)``).
+        ``cost_model`` builds it under a calibrated characterization."""
         cfg = cfg or OrchestratorConfig()
         return CompilationContext(
             specs, target_rate_hz, acc=self.acc, network=network,
-            e_switch_nom=cfg.e_switch_nom, store=self.store)
+            e_switch_nom=cfg.e_switch_nom, store=self.store,
+            cost_model=cost_model)
 
     def _schedule_key(self, ctx: CompilationContext, goal: Goal,
                       cfg: OrchestratorConfig) -> tuple:
@@ -238,7 +247,8 @@ class CompileService:
     def compile(self, specs: Sequence[LayerSpec],
                 target_rate_hz: float | None = None, *,
                 cfg: OrchestratorConfig | None = None,
-                network: str = "net", goal: Goal | None = None
+                network: str = "net", goal: Goal | None = None,
+                cost_model=None
                 ) -> PowerSchedule | InfeasibleGoal | ParetoFrontier \
             | None:
         """Compile one deployment point through the store (schedule
@@ -249,7 +259,9 @@ class CompileService:
         the legacy rate-only form keeps returning ``None`` for an
         infeasible deadline.  ParetoFront goals cache *per point* under
         the equivalent MinEnergy keys, so frontier and point traffic
-        share cache entries.
+        share cache entries.  ``cost_model`` compiles under a
+        calibrated characterization (own cache namespace via the
+        context content key).
         """
         legacy = goal is None
         if goal is not None and target_rate_hz is not None:
@@ -266,8 +278,10 @@ class CompileService:
             # unit per point, per-point MinEnergy cache keys, in-batch
             # dedup of repeated deadlines)
             return self.compile_many([CompileRequest(
-                specs, cfg=cfg, network=network, goal=resolved)])[0]
-        ctx = self.context_for(specs, cfg=cfg, network=network)
+                specs, cfg=cfg, network=network, goal=resolved,
+                cost_model=cost_model)])[0]
+        ctx = self.context_for(specs, cfg=cfg, network=network,
+                               cost_model=cost_model)
         if isinstance(resolved, MinEnergy):
             # legacy custom policies read the deadline off the context;
             # the context is otherwise deadline-free (fresh per call)
@@ -336,7 +350,8 @@ class CompileService:
             cfg = req.cfg or OrchestratorConfig()
             goal = req.resolve_goal()
             ctx = self.context_for(req.specs, cfg=cfg,
-                                   network=req.network)
+                                   network=req.network,
+                                   cost_model=req.cost_model)
             ctxs[i] = ctx
             if isinstance(goal, ParetoFront):
                 deadlines = goal.resolve_deadlines(
@@ -439,7 +454,8 @@ class CompileService:
             budget_frac: float | None = 2.0,
             aggressive_frac: float = 0.95,
             cfg: OrchestratorConfig | None = None,
-            network: str = "net") -> ContingencyBundle:
+            network: str = "net",
+            cost_model=None) -> ContingencyBundle:
         """Precompile an online control plane's full contingency set in
         ONE ``compile_many`` fleet call (all sweeps co-scheduled, every
         artifact shared through the store):
@@ -462,6 +478,10 @@ class CompileService:
         Grid deadlines provably below the min-time bound are never
         requested; points that still come back infeasible are recorded
         in ``bundle.infeasible``.
+
+        ``cost_model`` compiles every contingency under a calibrated
+        characterization (the adaptive scheduler's ledger-learned
+        re-solve path, see :mod:`repro.calib`).
         """
         if not (base_rate_hz > 0.0):
             raise ValueError(
@@ -476,7 +496,8 @@ class CompileService:
             raise ValueError(
                 f"tighten_frac must lie in (0, 1), got {tighten_frac!r}")
         cfg = cfg or OrchestratorConfig()
-        ctx = self.context_for(specs, cfg=cfg, network=network)
+        ctx = self.context_for(specs, cfg=cfg, network=network,
+                               cost_model=cost_model)
         min_t = ctx.min_t_op_bound(ctx.levels)
         min_e = ctx.min_e_op_bound(ctx.levels)
         aggr_deadline = min_t / aggressive_frac
@@ -492,19 +513,23 @@ class CompileService:
 
         requests = [CompileRequest(
             specs, cfg=cfg, network=network,
-            goal=ParetoFront(deadlines=tuple(grid)))]
+            goal=ParetoFront(deadlines=tuple(grid)),
+            cost_model=cost_model)]
         if tight:
             requests.append(CompileRequest(
                 specs, cfg=cfg, network=network,
                 goal=ParetoFront(
-                    deadlines=tuple(sorted(tight.values())))))
+                    deadlines=tuple(sorted(tight.values()))),
+                cost_model=cost_model))
         requests.append(CompileRequest(
             specs, cfg=cfg, network=network,
-            goal=MinEnergy(deadline_s=aggr_deadline)))
+            goal=MinEnergy(deadline_s=aggr_deadline),
+            cost_model=cost_model))
         if budget_frac is not None:
             requests.append(CompileRequest(
                 specs, cfg=cfg, network=network,
-                goal=MinLatency(energy_budget_j=budget_frac * min_e)))
+                goal=MinLatency(energy_budget_j=budget_frac * min_e),
+                cost_model=cost_model))
         results = self.compile_many(requests)
 
         bundle = ContingencyBundle(

@@ -9,6 +9,7 @@ immutable files named by a content digest of their key*:
     <root>/transitions/<digest>.npz   # pairwise transition matrices
     <root>/schedules/<digest>.json    # compiled PowerSchedule JSON
     <root>/prunings/<digest>.json     # structure-pruning keep maps
+    <root>/calibrations/<digest>.json # characterization roofline tables
 
 Design rules (Levanter-checkpoint style, sized down to cache entries):
 
@@ -60,7 +61,8 @@ DISK_SCHEMA = 2
 #: format and never appears as a tier directory, but entry payloads
 #: migrated from it keep their own schema field honest)
 READABLE_SCHEMAS = (1, 2)
-CATEGORIES = ("masters", "transitions", "schedules", "prunings")
+CATEGORIES = ("masters", "transitions", "schedules", "prunings",
+              "calibrations")
 _META_NAME = "STORE_META.json"
 #: orphan temp files older than this are removed at open (a *fresh*
 #: orphan may belong to a live writer in another process — deleting it
@@ -342,6 +344,30 @@ class DiskTier:
         ent = json.loads(data.decode())
         _check_entry_schema(ent)
         return tuple(tuple(int(i) for i in m) for m in ent["maps"])
+
+    # -- calibrations --------------------------------------------------
+    # key: calibration content key (host fingerprint × accelerator ×
+    # harness config digest, see repro.calib.harness.calibration_key);
+    # value: the RooflineTable record (JSON dict) — how farm workers on
+    # one host share a single characterization pass
+    @staticmethod
+    def calibration_digest(key: str) -> str:
+        return entry_digest("calibration", key)
+
+    def put_calibration(self, key: str, rec: dict) -> None:
+        self._publish(
+            "calibrations", self.calibration_digest(key), ".json",
+            json.dumps({"schema": DISK_SCHEMA, "key": key,
+                        "payload": rec}).encode())
+
+    def get_calibration(self, key: str) -> dict | None:
+        data = self._read(self._path(
+            "calibrations", self.calibration_digest(key), ".json"))
+        if data is None:
+            return None
+        ent = json.loads(data.decode())
+        _check_entry_schema(ent)
+        return ent["payload"]
 
 
 def _check_entry_schema(meta: dict) -> None:

@@ -26,7 +26,11 @@ content-addressable and therefore shareable process-wide:
     goal, semantic config), serialized through
     ``PowerSchedule.to_json`` so a cache hit returns a fresh
     deserialized artifact; provably-impossible goals cache their
-    structured ``InfeasibleGoal`` (reason + bound) the same way.
+    structured ``InfeasibleGoal`` (reason + bound) the same way;
+  - **characterization calibrations** — measured roofline tables from
+    the :mod:`repro.calib` harness, keyed by (host fingerprint,
+    accelerator, harness config) content so every farm worker on one
+    host shares a single measurement pass.
 
 With ``disk_path=`` the store gains a second tier: a content-addressable
 on-disk store of per-entry digest-named immutable files
@@ -99,7 +103,7 @@ _INFEASIBLE_GOAL_PREFIX = "__infeasible_goal__:"
 #: stat categories (hit/miss/eviction counters); "lanes" counts the
 #: subset lane stores' warm-padded lookups (see StackCaches)
 _CATEGORIES = ("characterization", "master", "transition", "schedule",
-               "pruning", "lanes")
+               "pruning", "calibration", "lanes")
 
 
 def _migrate_schedule_key(key: tuple) -> tuple:
@@ -146,6 +150,11 @@ class ArtifactStore:
         # (structure pruning is deadline/goal-independent, so one entry
         # serves every rate, budget, and frontier point of a network)
         self._prunings: dict = {}
+        # calibration content key -> RooflineTable record (JSON dict);
+        # keyed on host fingerprint × accelerator × harness config, so
+        # farm workers on one host share a single characterization pass
+        # (see repro.calib.harness)
+        self._calibrations: dict = {}
         # persistent subset lane stores + round member-stack cache
         self.stack_caches = StackCaches()
         self.hits = {c: 0 for c in _CATEGORIES}
@@ -213,6 +222,8 @@ class ArtifactStore:
             self.disk.put_schedule(key, value)
         elif cat == "pruning":
             self.disk.put_pruning(key, value)
+        elif cat == "calibration":
+            self.disk.put_calibration(key, value)
         else:                               # pragma: no cover
             raise ValueError(f"unknown disk category {cat!r}")
 
@@ -313,6 +324,28 @@ class ArtifactStore:
             self._prunings.setdefault(key, maps)
         self._disk_put("pruning", key, maps)
 
+    # -- characterization calibrations --------------------------------
+    def calibration(self, key: str) -> dict | None:
+        """Cached harness roofline record for a calibration content key
+        (see :func:`repro.calib.harness.calibration_key`), or None on
+        miss — memory → disk → miss like every other category."""
+        rec = self._calibrations.get(key)
+        disk = False
+        if rec is None and self.disk is not None:
+            rec = self.disk.get_calibration(key)
+            if rec is not None:
+                disk = True
+                with self._lock:
+                    self._calibrations.setdefault(key, rec)
+                    rec = self._calibrations[key]
+        self._count("calibration", hit=rec is not None, disk=disk)
+        return rec
+
+    def put_calibration(self, key: str, rec: dict) -> None:
+        with self._lock:
+            self._calibrations.setdefault(key, rec)
+        self._disk_put("calibration", key, rec)
+
     # -- compiled schedules -------------------------------------------
     def schedule(self, key: tuple) -> PowerSchedule | None | str | \
             "InfeasibleGoal":
@@ -375,6 +408,7 @@ class ArtifactStore:
                 "transitions": len(self._transitions),
                 "schedules": len(self._schedules),
                 "prunings": len(self._prunings),
+                "calibrations": len(self._calibrations),
                 "resident_lanes": self.stack_caches.n_lanes(),
                 "hits": hits,
                 "misses": misses,
@@ -407,6 +441,7 @@ class ArtifactStore:
                 self._masters.clear()
                 self._transitions.clear()
                 self._prunings.clear()
+                self._calibrations.clear()
 
     def trim_stacks(self, max_lanes: int) -> bool:
         """Reset the subset lane stores once they exceed ``max_lanes``

@@ -1,0 +1,510 @@
+"""Calibration subsystem: cost models, the characterization harness,
+ledger-learned corrections, and input-adaptive policy tables."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.calib import (
+    CalibratedCostModel,
+    HarnessConfig,
+    ResidualEstimator,
+    RooflineTable,
+    SchedulePolicyTable,
+    calibration_key,
+    compile_policy_table,
+    host_fingerprint,
+    identity_model,
+    model_from_residuals,
+    run_harness,
+    solver_kernel_walls,
+    sparsity_cost_model,
+    synthetic_measurement,
+)
+from repro.calib.policy_table import PolicyBand
+from repro.core.goals import MinEnergy
+from repro.core.schedule import PowerSchedule
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.perfmodel.gating import plan_banks
+from repro.perfmodel.layer_costs import (
+    characterize_network,
+    conv_spec,
+    fc_spec,
+    pool_spec,
+)
+from repro.serve.control_plane import (
+    AdaptiveConfig,
+    AdaptiveScheduler,
+    serve_trace,
+)
+from repro.serve.faults import FaultConfig, FaultInjector, linear_drift
+from repro.service import ArtifactStore, CompileService
+
+SPECS = [conv_spec("c1", 14, 14, 8, 16, 3),
+         pool_spec("p1", 14, 14, 16, 2),
+         fc_spec("f1", 784, 10)]
+DEADLINE = 0.01
+
+
+def _same_schedule(a: PowerSchedule, b: PowerSchedule) -> bool:
+    return (a.rails == b.rails
+            and a.layer_voltages == b.layer_voltages
+            and a.awake_banks == b.awake_banks
+            and a.e_total == b.e_total)
+
+
+# ------------------------------------------------- CalibratedCostModel
+
+class TestCalibratedCostModel:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="layer"):
+            CalibratedCostModel(scale=())
+        with pytest.raises(ValueError, match="positive"):
+            CalibratedCostModel(scale=(1.0, 0.0))
+        with pytest.raises(ValueError, match="positive"):
+            CalibratedCostModel(scale=(1.0, -0.5))
+        with pytest.raises(ValueError, match="positive"):
+            CalibratedCostModel(scale=(float("nan"),))
+
+    def test_digest_depends_on_scale_and_source(self):
+        a = CalibratedCostModel(scale=(1.1, 0.9))
+        b = CalibratedCostModel(scale=(1.1, 0.9))
+        c = CalibratedCostModel(scale=(1.1, 0.95))
+        d = CalibratedCostModel(scale=(1.1, 0.9), source="harness")
+        assert a.digest == b.digest
+        assert a.digest != c.digest
+        assert a.digest != d.digest
+
+    def test_apply_scales_cycles_and_energy_together(self):
+        costs = characterize_network(SPECS, ACC)
+        model = CalibratedCostModel(scale=(2.0, 1.0, 0.5))
+        out = model.apply(costs)
+        for c0, c1, s in zip(costs, out, model.scale):
+            assert c1.cycles == tuple(cy * s for cy in c0.cycles)
+            assert c1.dyn_energy_nom == tuple(
+                e * s for e in c0.dyn_energy_nom)
+        # scale 1.0 layers are the same object, not a copy
+        assert out[1] is costs[1]
+
+    def test_apply_length_mismatch(self):
+        costs = characterize_network(SPECS, ACC)
+        with pytest.raises(ValueError, match="layers"):
+            CalibratedCostModel(scale=(1.0, 1.0)).apply(costs)
+
+    def test_max_deviation(self):
+        m = CalibratedCostModel(scale=(1.2, 0.8))
+        assert m.max_deviation() == pytest.approx(0.2)
+        other = CalibratedCostModel(scale=(1.2, 1.0))
+        assert m.max_deviation(other) == pytest.approx(0.2)
+
+    def test_identity_model(self):
+        m = identity_model(3)
+        assert m.scale == (1.0, 1.0, 1.0)
+        costs = characterize_network(SPECS, ACC)
+        assert all(a is b for a, b in zip(m.apply(costs), costs))
+
+
+# --------------------------------------------------- ResidualEstimator
+
+def _ledger_like(t_ops):
+    layer = dataclasses.make_dataclass("L", ["t_op"])
+    led = dataclasses.make_dataclass("Led", ["layers"])
+    return led(layers=[layer(t_op=float(t)) for t in t_ops])
+
+
+class TestResidualEstimator:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="n_layers"):
+            ResidualEstimator(0)
+        with pytest.raises(ValueError, match="min_samples"):
+            ResidualEstimator(2, window=4, min_samples=8)
+
+    def test_withholds_until_min_samples(self):
+        est = ResidualEstimator(2, window=8, min_samples=3)
+        pred = _ledger_like([1.0, 2.0])
+        est.observe(_ledger_like([1.3, 2.6]), pred)
+        est.observe(_ledger_like([1.3, 2.6]), pred)
+        assert est.estimate() is None
+        est.observe(_ledger_like([1.3, 2.6]), pred)
+        np.testing.assert_allclose(est.estimate(), [1.3, 1.3])
+
+    def test_median_rejects_noise(self, rng):
+        est = ResidualEstimator(1, window=32, min_samples=16)
+        pred = _ledger_like([1.0])
+        for _ in range(32):
+            noise = float(np.exp(rng.normal(0.0, 0.05)))
+            est.observe(_ledger_like([1.25 * noise]), pred)
+        assert est.estimate()[0] == pytest.approx(1.25, rel=0.05)
+
+    def test_dead_layer_pinned_to_one(self):
+        est = ResidualEstimator(2, window=4, min_samples=1)
+        est.observe(_ledger_like([1.5, 0.0]), _ledger_like([1.0, 0.0]))
+        np.testing.assert_allclose(est.estimate(), [1.5, 1.0])
+
+    def test_shape_mismatch(self):
+        est = ResidualEstimator(2, window=4, min_samples=1)
+        with pytest.raises(ValueError, match="mismatch"):
+            est.observe(_ledger_like([1.0]), _ledger_like([1.0, 2.0]))
+
+    def test_clear(self):
+        est = ResidualEstimator(1, window=4, min_samples=1)
+        est.observe(_ledger_like([2.0]), _ledger_like([1.0]))
+        assert est.n == 1
+        est.clear()
+        assert est.n == 0 and est.estimate() is None
+
+    def test_model_from_residuals_clamps_and_quantizes(self):
+        model = model_from_residuals(np.array([100.0, 0.001, 1.23456]))
+        assert model.scale == (4.0, 0.25, 1.235)
+        # near-equal estimates share one digest (store-fragmentation
+        # guard)
+        a = model_from_residuals(np.array([1.30001]))
+        b = model_from_residuals(np.array([1.29999]))
+        assert a.digest == b.digest
+
+
+# ------------------------------------------------------------- harness
+
+class TestHarness:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="repeats"):
+            HarnessConfig(repeats=0)
+        with pytest.raises(ValueError, match="kinds"):
+            HarnessConfig(kinds=("conv", "nosuch"))
+
+    def test_parity_mode_all_ones(self):
+        table = run_harness(ACC, HarnessConfig(repeats=1))
+        for kind, (tr, er) in table.ratios_by_kind().items():
+            assert tr == 1.0 and er == 1.0, kind
+        model = table.cost_model(SPECS)
+        assert model.scale == (1.0, 1.0, 1.0)
+
+    def test_deterministic_with_noise(self):
+        cfg = HarnessConfig(seed=7, repeats=3)
+        meas = synthetic_measurement({"conv": 1.2}, noise_sigma=0.05)
+        t1 = run_harness(ACC, cfg, measure=meas)
+        t2 = run_harness(ACC, cfg, measure=meas)
+        assert t1.to_record() == t2.to_record()
+
+    def test_synthetic_truth_recovered(self):
+        truth = {"conv": 1.3, "fc": 0.8}
+        table = run_harness(
+            ACC, HarnessConfig(repeats=5, seed=1),
+            measure=synthetic_measurement(truth, noise_sigma=0.02))
+        ratios = table.ratios_by_kind()
+        assert ratios["conv"][0] == pytest.approx(1.3, rel=0.05)
+        assert ratios["fc"][0] == pytest.approx(0.8, rel=0.05)
+        assert ratios["pool"][0] == pytest.approx(1.0, rel=0.05)
+        model = table.cost_model(SPECS)
+        assert model.scale[0] == pytest.approx(1.3, abs=0.1)   # conv
+        assert model.scale[1] == pytest.approx(1.0, abs=0.05)  # pool
+        assert model.scale[2] == pytest.approx(0.8, abs=0.1)   # fc
+
+    def test_record_round_trip(self):
+        table = run_harness(ACC, HarnessConfig(repeats=1))
+        back = RooflineTable.from_record(table.to_record())
+        assert back.to_record() == table.to_record()
+        assert back.key == table.key
+
+    def test_key_sensitivity(self):
+        host = host_fingerprint()
+        base = calibration_key(ACC, HarnessConfig(), host)
+        assert calibration_key(ACC, HarnessConfig(), host) == base
+        assert calibration_key(ACC, HarnessConfig(seed=1), host) != base
+        assert calibration_key(
+            ACC, HarnessConfig(), {**host, "machine": "other"}) != base
+
+    def test_store_publication_and_reuse(self, tmp_path):
+        store = ArtifactStore(disk_path=tmp_path / "tier")
+        cfg = HarnessConfig(repeats=1)
+        t1 = run_harness(ACC, cfg, store=store)
+        assert store.misses["calibration"] == 1
+        t2 = run_harness(ACC, cfg, store=store)
+        assert store.hits["calibration"] == 1
+        assert t2.to_record() == t1.to_record()
+        # a second store over the same disk tier (another process in
+        # farm terms) reuses the published artifact
+        store2 = ArtifactStore(disk_path=tmp_path / "tier")
+        t3 = run_harness(ACC, cfg, store=store2)
+        assert store2.disk_hits["calibration"] == 1
+        assert t3.to_record() == t1.to_record()
+
+    def test_solver_kernel_walls(self):
+        w = solver_kernel_walls(repeats=1, n_layers=6, s_pad=8,
+                                k_weights=4)
+        assert w["wall_s_median"] > 0.0
+        assert w["backend"]
+        # the timed slab is a real solve: the checksum pins the paths
+        w2 = solver_kernel_walls(repeats=1, n_layers=6, s_pad=8,
+                                 k_weights=4)
+        assert w2["checksum"] == w["checksum"]
+
+
+# --------------------------------------------- cost-model compilation
+
+class TestCalibratedCompile:
+    def test_identity_model_bit_identical_to_static(self):
+        with CompileService(ACC) as svc:
+            static = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE))
+            ident = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE), cost_model=identity_model(3))
+        assert _same_schedule(static, ident)
+        assert static.cost_model == "static"
+        assert ident.cost_model == identity_model(3).digest
+
+    def test_cache_namespaces_never_collide(self):
+        with CompileService(ACC) as svc:
+            static = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE))
+            model = sparsity_cost_model(0.5, SPECS)
+            cal = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE), cost_model=model)
+            # two distinct cache entries; repeats hit their own
+            assert svc.store.stats()["schedules"] == 2
+            again = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE), cost_model=model)
+        assert _same_schedule(cal, again)
+        assert cal.cost_model == model.digest != static.cost_model
+        # the calibrated solve planned for less MAC work
+        assert cal.e_total < static.e_total
+
+    def test_schedule_json_round_trip_keeps_provenance(self):
+        with CompileService(ACC) as svc:
+            model = sparsity_cost_model(0.5, SPECS)
+            sched = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE), cost_model=model)
+        back = PowerSchedule.from_json(sched.to_json())
+        assert back.cost_model == model.digest
+        # pre-calibration serialized schedules deserialize as static
+        d = __import__("json").loads(sched.to_json())
+        d.pop("cost_model")
+        legacy = PowerSchedule.from_json(__import__("json").dumps(d))
+        assert legacy.cost_model == "static"
+
+    def test_reused_context_model_mismatch_raises(self):
+        from repro.core import orchestrator
+
+        with CompileService(ACC) as svc:
+            model = sparsity_cost_model(0.5, SPECS)
+            ctx = svc.context_for(SPECS, cost_model=model)
+            with pytest.raises(ValueError, match="cost model"):
+                orchestrator.compile(
+                    SPECS, MinEnergy(deadline_s=DEADLINE), acc=ACC,
+                    ctx=ctx, cost_model=sparsity_cost_model(0.7, SPECS))
+            # None inherits the context's model
+            sched = orchestrator.compile(
+                SPECS, MinEnergy(deadline_s=DEADLINE), acc=ACC, ctx=ctx)
+        assert sched.cost_model == model.digest
+
+    def test_harness_parity_model_compiles_identical(self):
+        """A calibration measured from the analytic model itself (all
+        ratios 1.0) must compile bit-identical schedules to static."""
+        table = run_harness(ACC, HarnessConfig(repeats=1))
+        model = table.cost_model(SPECS)
+        with CompileService(ACC) as svc:
+            static = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE))
+            cal = svc.compile(SPECS, goal=MinEnergy(
+                deadline_s=DEADLINE), cost_model=model)
+        assert _same_schedule(static, cal)
+
+
+# ------------------------------------------------------- policy table
+
+class TestPolicyTable:
+    def test_sparsity_model(self):
+        m = sparsity_cost_model(0.4, SPECS)
+        # conv and fc scale; pool holds
+        assert m.scale == (0.4, 1.0, 0.4)
+        assert sparsity_cost_model(0.01, SPECS).scale[0] == 0.05  # floor
+        with pytest.raises(ValueError, match="density"):
+            sparsity_cost_model(0.0, SPECS)
+        with pytest.raises(ValueError, match="floor"):
+            sparsity_cost_model(0.5, SPECS, floor=0.0)
+
+    def test_table_validation(self):
+        m = identity_model(3)
+        with pytest.raises(ValueError, match="band"):
+            SchedulePolicyTable("density", [])
+        overlapping = [
+            PolicyBand(0.0, 0.6, m, {}),
+            PolicyBand(0.5, 1.0, m, {}),
+        ]
+        with pytest.raises(ValueError, match="overlap"):
+            SchedulePolicyTable("density", overlapping)
+
+    def test_band_and_deadline_snapping(self):
+        m = identity_model(3)
+        s_lo, s_hi = object(), object()
+        bands = [PolicyBand(0.0, 0.5, m, {0.01: s_lo, 0.02: s_hi})]
+        table = SchedulePolicyTable("density", bands)
+        assert table.band_for(-1.0) is bands[0]   # clamps below
+        assert table.band_for(2.0) is bands[0]    # clamps above
+        assert table.lookup(0.2, 0.015) is s_lo   # largest <= request
+        assert table.lookup(0.2, 0.005) is s_lo   # tighter than grid ->
+        assert table.lookup(0.2, 0.5) is s_hi     # fastest available
+        assert table.deadlines() == [0.01, 0.02]
+
+    def test_compile_validation(self):
+        with CompileService(ACC) as svc:
+            with pytest.raises(ValueError, match="band_edges"):
+                compile_policy_table(svc, SPECS, band_edges=[0.5],
+                                     deadlines=[DEADLINE])
+            with pytest.raises(ValueError, match="deadline"):
+                compile_policy_table(svc, SPECS,
+                                     band_edges=[0.0, 1.0], deadlines=[])
+
+    def test_family_identical_to_solo_compiles(self):
+        """The acceptance pin: every (band, deadline) entry of the
+        fleet-compiled family is bit-identical to a solo compile under
+        the same cost model on a fresh service."""
+        deadlines = [DEADLINE, 2 * DEADLINE]
+        with CompileService(ACC) as svc:
+            table = compile_policy_table(
+                svc, SPECS, band_edges=[0.0, 0.5, 1.0],
+                deadlines=deadlines)
+        assert len(table.bands) == 2
+        for band in table.bands:
+            assert sorted(band.schedules) == sorted(deadlines)
+            assert not band.infeasible
+            for d, sched in band.schedules.items():
+                with CompileService(ACC) as solo_svc:
+                    solo = solo_svc.compile(
+                        SPECS, goal=MinEnergy(deadline_s=d),
+                        cost_model=band.cost_model)
+                assert _same_schedule(sched, solo)
+                assert sched.cost_model == band.cost_model.digest
+
+    def test_denser_band_costs_more_energy(self):
+        with CompileService(ACC) as svc:
+            table = compile_policy_table(
+                svc, SPECS, band_edges=[0.0, 0.4, 1.0],
+                deadlines=[DEADLINE])
+        sparse = table.lookup(0.2, DEADLINE)
+        dense = table.lookup(0.8, DEADLINE)
+        assert sparse.e_total < dense.e_total
+
+
+# ------------------------------------------- adaptive learning plane
+
+def _bundle_and_runtime(svc, rate):
+    costs = characterize_network(SPECS, ACC)
+    plan = plan_banks(costs, ACC)
+    bundle = svc.compile_contingencies(SPECS, rate, network="net")
+    return bundle, costs, plan
+
+
+class TestAdaptivePlaneCalibration:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="calib_threshold"):
+            AdaptiveConfig(calib_threshold=0.0)
+        with pytest.raises(ValueError, match="calib_min_samples"):
+            AdaptiveConfig(calib_window=4, calib_min_samples=8)
+        with pytest.raises(ValueError, match="calib_cooldown"):
+            AdaptiveConfig(calib_cooldown=-1)
+
+    def test_blocking_recalibration_recenters(self):
+        rate = 60.0
+        n = 120
+        times = np.arange(n + 1) / rate
+        with CompileService(ACC) as svc:
+            bundle, costs, plan = _bundle_and_runtime(svc, rate)
+            acfg = AdaptiveConfig(
+                calib_enabled=True, calib_blocking=True,
+                calib_window=12, calib_min_samples=6,
+                calib_cooldown=12)
+            plane = AdaptiveScheduler(
+                bundle, costs, plan, ACC, service=svc, specs=SPECS,
+                acfg=acfg)
+            inj = FaultInjector(
+                FaultConfig(seed=5, op_sigma=0.01), len(SPECS),
+                op_bias=linear_drift(0.25 / (n // 2), peak=n // 2))
+            report = serve_trace(times, plane, injector=inj)
+        assert report.served == n
+        starts = plane.events.of("calibrate_start")
+        dones = plane.events.of("calibrate_done")
+        assert starts and len(dones) == len(starts)
+        assert all(e.detail["blocking"] for e in starts)
+        # the re-solve replaced live snap points (the base deadline is
+        # always on the regenerated grid)
+        assert any(e.detail["replaced_points"] > 0 for e in dones)
+        # the plane's applied correction moved off identity
+        assert not np.allclose(plane._applied_scale, 1.0)
+
+    def test_calibration_disabled_never_estimates(self):
+        rate = 60.0
+        times = np.arange(41) / rate
+        with CompileService(ACC) as svc:
+            bundle, costs, plan = _bundle_and_runtime(svc, rate)
+            plane = AdaptiveScheduler(bundle, costs, plan, ACC,
+                                      service=svc, specs=SPECS)
+            inj = FaultInjector(
+                FaultConfig(seed=5, op_sigma=0.01), len(SPECS),
+                op_bias=linear_drift(0.01))
+            serve_trace(times, plane, injector=inj)
+        assert plane._estimator is None
+        assert not plane.events.of("calibrate_start")
+
+    def test_policy_table_axis(self):
+        rate = 60.0
+        n = 40
+        times = np.arange(n + 1) / rate
+        with CompileService(ACC) as svc:
+            bundle, costs, plan = _bundle_and_runtime(svc, rate)
+            table = compile_policy_table(
+                svc, SPECS, band_edges=[0.0, 0.5, 1.0],
+                deadlines=[1.0 / rate * 0.85])
+            plane = AdaptiveScheduler(bundle, costs, plan, ACC,
+                                      policy_table=table)
+            obs = np.where(np.arange(n) < n // 2, 0.2, 0.8)
+            report = serve_trace(times, plane, observables=obs)
+        snaps = plane.events.of("snap")
+        table_snaps = [e for e in snaps
+                       if e.detail.get("variant") == "policy_table"]
+        # one snap per band regime
+        assert len(table_snaps) == 2
+        bands = [tuple(e.detail["band"]) for e in table_snaps]
+        assert bands == [(0.0, 0.5), (0.5, 1.0)]
+        assert report.served == n
+
+    def test_observables_shape_validated(self):
+        rate = 60.0
+        times = np.arange(5) / rate
+        with CompileService(ACC) as svc:
+            bundle, costs, plan = _bundle_and_runtime(svc, rate)
+            plane = AdaptiveScheduler(bundle, costs, plan, ACC)
+            with pytest.raises(ValueError, match="observables"):
+                serve_trace(times, plane,
+                            observables=np.zeros(3))
+
+
+# ----------------------------------------------- FaultConfig validation
+
+class TestFaultConfigValidation:
+    def test_defaults_valid(self):
+        FaultConfig()
+
+    @pytest.mark.parametrize("field", ["op_sigma", "trans_sigma",
+                                       "late_max_s"])
+    def test_negative_magnitudes_rejected(self, field):
+        with pytest.raises(ValueError, match=field):
+            FaultConfig(**{field: -0.1})
+
+    @pytest.mark.parametrize("field", ["p_trans_spike", "p_drop",
+                                       "p_late"])
+    def test_probabilities_bounded(self, field):
+        with pytest.raises(ValueError, match=field):
+            FaultConfig(**{field: -0.01})
+        with pytest.raises(ValueError, match=field):
+            FaultConfig(**{field: 1.5})
+        FaultConfig(**{field: 1.0})     # boundary is legal
+
+    def test_nan_rejected(self):
+        with pytest.raises(ValueError, match="op_sigma"):
+            FaultConfig(op_sigma=float("nan"))
+
+    def test_spike_mult_positive(self):
+        with pytest.raises(ValueError, match="trans_spike_mult"):
+            FaultConfig(trans_spike_mult=0.0)

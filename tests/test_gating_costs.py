@@ -1,0 +1,180 @@
+"""Edge cases of the perf model: bank-gating plans for weightless and
+gating-disabled paths, per-kind cycle formulas incl. zero-cost layers,
+and single-voltage tables."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.goals import MinEnergy
+from repro.core.orchestrator import compile as pfdnn_compile
+from repro.hw.dvfs import V_GATED, DvfsModel, voltage_levels
+from repro.hw.edge40nm import (
+    D_COMPUTE,
+    D_FEEDER,
+    D_RRAM,
+    EDGE40NM_DEFAULT as ACC,
+    Edge40nmAccelerator,
+)
+from repro.perfmodel.gating import plan_banks
+from repro.perfmodel.layer_costs import (
+    attention_spec,
+    characterize_layer,
+    characterize_network,
+    conv_spec,
+    dwconv_spec,
+    eltwise_spec,
+    fc_spec,
+    nominal_latency,
+    pool_spec,
+)
+
+
+# --------------------------------------------------------- bank plans
+
+class TestBankPlan:
+    def test_weightless_layers_get_sentinel_span(self):
+        specs = [conv_spec("c", 8, 8, 8, 8, 3),
+                 pool_spec("p", 8, 8, 8, 2),
+                 eltwise_spec("e", 4, 4, 8)]
+        plan = plan_banks(characterize_network(specs, ACC), ACC)
+        assert plan.spans[1] == (-1, -1)
+        assert plan.spans[2] == (-1, -1)
+        assert plan.spans[0][0] == 0
+
+    def test_all_weightless_network_keeps_one_bank(self):
+        specs = [pool_spec("p", 8, 8, 8, 2), eltwise_spec("e", 4, 4, 8)]
+        plan = plan_banks(characterize_network(specs, ACC), ACC)
+        assert plan.n_banks == 1
+        assert plan.spans == ((-1, -1), (-1, -1))
+        # pg_manager bank is always on, even with nothing to fetch
+        assert plan.awake_banks(0, gating=True) == 1
+        assert plan.wake_events(0, gating=True) == 0
+
+    def test_gating_disabled_wakes_everything(self):
+        specs = [fc_spec("f1", 512, 512), fc_spec("f2", 512, 512)]
+        plan = plan_banks(characterize_network(specs, ACC), ACC)
+        assert plan.n_banks > 1
+        for i in range(len(specs)):
+            assert plan.awake_banks(i, gating=False) == plan.n_banks
+            assert plan.wake_events(i, gating=False) == 0
+
+    def test_prefetch_includes_next_layer(self):
+        specs = [fc_spec("f1", 512, 512), fc_spec("f2", 512, 512)]
+        plan = plan_banks(characterize_network(specs, ACC), ACC)
+        lo0, hi0 = plan.spans[0]
+        lo1, hi1 = plan.spans[1]
+        both = len(set(range(lo0, hi0 + 1)) | set(range(lo1, hi1 + 1)))
+        assert plan.awake_banks(0, gating=True) == both
+        assert plan.awake_banks(0, gating=True, prefetch=False) == (
+            hi0 - lo0 + 1)
+        # last layer has no successor to prefetch
+        assert plan.awake_banks(1, gating=True) == hi1 - lo1 + 1
+        assert plan.wake_events(1, gating=True) == 0
+
+    def test_wake_events_skip_already_awake_banks(self):
+        # two layers sharing one bank: prefetching layer 1 during
+        # layer 0 wakes nothing new
+        specs = [fc_spec("f1", 16, 16), fc_spec("f2", 16, 16)]
+        plan = plan_banks(characterize_network(specs, ACC), ACC)
+        assert plan.spans[0] == plan.spans[1] == (0, 0)
+        assert plan.wake_events(0, gating=True) == 0
+
+    def test_wake_events_weightless_successor(self):
+        specs = [fc_spec("f", 512, 512), pool_spec("p", 8, 8, 8, 2)]
+        plan = plan_banks(characterize_network(specs, ACC), ACC)
+        assert plan.wake_events(0, gating=True) == 0
+
+    def test_span_straddles_bank_boundary(self):
+        bank = ACC.rram_bank_bytes
+        specs = [fc_spec("f1", bank // 32, 16),    # exactly half a bank
+                 fc_spec("f2", bank // 16, 16)]    # one full bank
+        plan = plan_banks(characterize_network(specs, ACC), ACC)
+        assert plan.spans[0] == (0, 0)
+        assert plan.spans[1] == (0, 1)   # starts mid-bank, spills over
+        assert plan.n_banks == 2
+
+
+# --------------------------------------------------------- layer costs
+
+class TestLayerCosts:
+    def test_zero_cost_layers_have_no_compute_energy(self):
+        for spec in (pool_spec("p", 8, 8, 16, 2),
+                     eltwise_spec("e", 8, 8, 16)):
+            cost = characterize_layer(spec, ACC)
+            assert spec.macs == 0 and spec.weight_bytes == 0
+            assert cost.cycles[D_RRAM] == 0
+            assert cost.dyn_energy_nom[D_RRAM] == 0.0
+            assert cost.cycles[D_COMPUTE] > 0      # ALU work remains
+            assert cost.dyn_energy_nom[D_FEEDER] > 0.0
+            # latency stays finite with a zero-cycle domain in the max
+            assert nominal_latency(cost, ACC) > 0.0
+
+    def test_conv_cycle_formula(self):
+        spec = conv_spec("c", 14, 14, 16, 32, 3)
+        cost = characterize_layer(spec, ACC)
+        p_tiles = -(-spec.p_out // ACC.pe_rows)
+        c_tiles = -(-spec.c_out // ACC.pe_cols)
+        assert cost.cycles[D_COMPUTE] == p_tiles * c_tiles * 16 * 9
+        moved = (spec.act_in_bytes + spec.act_out_bytes
+                 + spec.weight_bytes)
+        assert cost.cycles[D_FEEDER] == -(-moved // 8)
+        assert cost.cycles[D_RRAM] == -(-spec.weight_bytes // 8)
+
+    def test_dwconv_drops_cin_factor(self):
+        dw = characterize_layer(dwconv_spec("d", 14, 14, 64, 3), ACC)
+        full = characterize_layer(conv_spec("c", 14, 14, 64, 64, 3), ACC)
+        assert full.cycles[D_COMPUTE] == 64 * dw.cycles[D_COMPUTE]
+
+    def test_fc_is_rram_dominant(self):
+        cost = characterize_layer(fc_spec("f", 1024, 1024), ACC)
+        assert cost.dyn_energy_nom[D_RRAM] == max(cost.dyn_energy_nom)
+
+    def test_attn_overhead_factor(self):
+        spec = attention_spec("a", 16, 64, 4, d_ff=128)
+        cost = characterize_layer(spec, ACC)
+        assert cost.cycles[D_COMPUTE] == int(spec.macs / 64 * 1.15) + 1
+
+    def test_single_output_fc(self):
+        cost = characterize_layer(fc_spec("f", 8, 1), ACC)
+        assert cost.cycles[D_COMPUTE] == ACC.pe_rows
+        assert nominal_latency(cost, ACC) > 0.0
+
+
+# ----------------------------------------------- single-voltage tables
+
+class TestSingleVoltage:
+    def test_degenerate_level_table(self):
+        assert voltage_levels(1.1, 1.1, 0.05) == (1.1,)
+
+    def test_dvfs_model_below_threshold_and_gated(self):
+        m = DvfsModel()
+        assert m.freq(m.v_th) == 0.0
+        assert m.freq(V_GATED) == 0.0
+        assert m.leak_power(V_GATED) == 0.0
+        assert m.dyn_energy_scale(m.v_nom) == 1.0
+
+    def test_compile_with_single_voltage_acc(self):
+        acc = dataclasses.replace(ACC, v_min=ACC.v_nom, v_max=ACC.v_nom)
+        assert acc.levels() == (ACC.v_nom,)
+        specs = [conv_spec("c", 8, 8, 8, 16, 3), fc_spec("f", 256, 10)]
+        costs = characterize_network(specs, acc)
+        floor = sum(nominal_latency(c, acc) for c in costs)
+        sched = pfdnn_compile(
+            specs, MinEnergy(deadline_s=4 * floor), acc=acc)
+        # every non-gated assignment sits on the only rail
+        for lv in sched.layer_voltages:
+            for v in lv:
+                assert v in (ACC.v_nom, V_GATED)
+        assert sched.t_infer <= 4 * floor
+
+    def test_single_voltage_infeasible_when_too_tight(self):
+        from repro.core.goals import InfeasibleGoal
+
+        acc = dataclasses.replace(ACC, v_min=ACC.v_nom, v_max=ACC.v_nom)
+        specs = [conv_spec("c", 8, 8, 8, 16, 3)]
+        floor = sum(nominal_latency(c, ACC)
+                    for c in characterize_network(specs, acc))
+        result = pfdnn_compile(
+            specs, MinEnergy(deadline_s=floor * 0.01), acc=acc)
+        assert isinstance(result, InfeasibleGoal)
