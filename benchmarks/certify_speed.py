@@ -1,0 +1,157 @@
+"""Wall-clock benchmark of the verification suite.
+
+Certifies every committed golden pipeline case with the independent
+scalar certifier (``repro.analysis.certify``) and audits a populated
+artifact store, recording:
+
+  - per-case certification wall (with and without the λ-envelope dual
+    bound — the dual DP dominates, so both are interesting), compile
+    wall for scale, PASS/FAIL, and the dual gap;
+  - store-audit throughput (entries/s) over the goldens persisted to a
+    throwaway disk tier.
+
+Every case must certify PASS — a FAIL here means the certifier and the
+compiler disagree about the ledger, which is exactly the regression
+this suite exists to catch, so the script exits nonzero.
+
+Usage:
+    PYTHONPATH=src python benchmarks/certify_speed.py \
+        [--out BENCH_certify.json] [--smoke] [--backend numpy|jax|...]
+
+``--smoke`` certifies one network's cases only (CI guard; no timing
+asserted, PASS still required).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+try:
+    from benchmarks.common import max_rate
+    from benchmarks._host import host_meta
+except ImportError:  # direct script run: benchmarks/ is sys.path[0]
+    from common import max_rate
+    from _host import host_meta
+
+from repro.analysis.certify import certify, certify_store
+from repro.core import OrchestratorConfig, compile_power_schedule
+from repro.hw.edge40nm import EDGE40NM_DEFAULT as ACC
+from repro.models.edge_cnn import edge_network
+from repro.service.store import ArtifactStore
+
+_GOLDEN = pathlib.Path(__file__).resolve().parents[1] \
+    / "tests" / "golden" / "pipeline.json"
+
+
+def golden_cases() -> list[tuple[str, float, int, str]]:
+    cases = []
+    for key in sorted(json.loads(_GOLDEN.read_text())):
+        network, frac, n_rails, policy = key.split("|")
+        cases.append((network, float(frac), int(n_rails), policy))
+    return cases
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_certify.json")
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    cases = golden_cases()
+    if args.smoke:
+        first_net = cases[0][0]
+        cases = [c for c in cases if c[0] == first_net]
+
+    rates: dict[str, float] = {}
+    rows = []
+    failures = 0
+    store = ArtifactStore(disk_path=None)
+    scheds = []
+    for network, frac, n_rails, policy in cases:
+        if network not in rates:
+            rates[network] = max_rate(network)
+        specs = edge_network(network)
+        tic = time.perf_counter()
+        sched = compile_power_schedule(
+            specs, rates[network] * frac,
+            cfg=OrchestratorConfig(policy=policy, n_max_rails=n_rails,
+                                   backend=args.backend),
+            network=network)
+        compile_wall = time.perf_counter() - tic
+        tag = f"{network}|{frac}|{n_rails}|{policy}"
+        if sched is None:
+            rows.append({"case": tag, "compile_s": compile_wall,
+                         "infeasible": True})
+            continue
+        scheds.append((tag, sched))
+
+        tic = time.perf_counter()
+        cert = certify(sched, specs, acc=ACC, n_max_rails=n_rails)
+        certify_wall = time.perf_counter() - tic
+        tic = time.perf_counter()
+        cert_nodual = certify(sched, specs, acc=ACC,
+                              n_max_rails=n_rails, dual=False)
+        nodual_wall = time.perf_counter() - tic
+        ok = cert.ok and cert_nodual.ok
+        failures += 0 if ok else 1
+        rows.append({
+            "case": tag,
+            "ok": ok,
+            "compile_s": round(compile_wall, 4),
+            "certify_s": round(certify_wall, 4),
+            "certify_nodual_s": round(nodual_wall, 4),
+            "dual_gap_rel": None if cert.dual is None
+            else round(cert.dual.gap_rel, 6),
+        })
+        print(f"{tag}: {'PASS' if ok else 'FAIL'}  "
+              f"certify={certify_wall:.3f}s")
+        if not ok:
+            print(cert.summary())
+
+    # store-audit throughput over the goldens on a throwaway tier
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        tiered = ArtifactStore(disk_path=tmp)
+        for tag, sched in scheds:
+            tiered.put_schedule((tag, "goal", "cfg"), sched)
+        tic = time.perf_counter()
+        audit = certify_store(tiered)
+        audit_wall = time.perf_counter() - tic
+    failures += 0 if audit["ok"] else 1
+
+    results = {
+        "host": host_meta(args.backend),
+        "smoke": args.smoke,
+        "n_cases": len(rows),
+        "failures": failures,
+        "cases": rows,
+        "store_audit": {
+            "entries": audit["entries"],
+            "wall_s": round(audit_wall, 4),
+            "entries_per_s": round(audit["entries"]
+                                   / max(audit_wall, 1e-9), 1),
+            "ok": audit["ok"],
+        },
+        "totals": {
+            "certify_s": round(sum(r.get("certify_s", 0.0)
+                                   for r in rows), 4),
+            "compile_s": round(sum(r.get("compile_s", 0.0)
+                                   for r in rows), 4),
+        },
+    }
+    pathlib.Path(args.out).write_text(json.dumps(results, indent=2)
+                                      + "\n")
+    print(f"wrote {args.out}: {len(rows)} cases, "
+          f"{failures} failure(s), "
+          f"audit {results['store_audit']['entries_per_s']} entries/s")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

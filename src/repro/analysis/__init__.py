@@ -1,0 +1,42 @@
+"""Independent verification layer: schedule certification and
+static/runtime analysis of the compiler itself.
+
+Three coordinated pieces (see ``python -m repro.analysis --help``):
+
+  - :mod:`repro.analysis.certify` — an intentionally independent,
+    dead-simple re-derivation of every :class:`PowerSchedule` claim
+    (per-layer time/energy, transition costs, gating wake overheads,
+    rail membership, deadline slack, idle arithmetic) plus a
+    λ-envelope dual lower bound on the schedule's energy and a
+    content-addressed store audit.  It shares *no* solver code with
+    ``repro.core`` — only the hardware spec (``repro.hw``) and the
+    performance model (``repro.perfmodel``) it certifies against.
+  - :mod:`repro.analysis.lint_determinism` — AST determinism linter
+    over the source tree (unseeded RNG, wall-clock reads, set
+    iteration feeding ordered outputs, float accumulation over
+    unordered iterables) with inline ``# pfdnn: allow(<rule>)``
+    suppressions and a committed baseline.
+  - :mod:`repro.analysis.lockcheck` — opt-in runtime lock-acquisition
+    instrumentation (``PFDNN_LOCKCHECK=1``) recording the cross-module
+    acquisition graph, failing on cycles and locks held across the
+    ``compile_many`` dispatch barrier, plus a static ``with``-nesting
+    companion cross-checked against the recorded graph.
+
+This ``__init__`` stays import-light on purpose: ``repro.core`` and
+``repro.service`` construct their locks through
+``repro.analysis.lockcheck.make_lock``, so importing the package must
+never pull the certifier (which imports ``repro.core.schedule``) into
+that import chain.
+"""
+
+from __future__ import annotations
+
+_SUBMODULES = ("certify", "lint_determinism", "lockcheck")
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        import importlib
+
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

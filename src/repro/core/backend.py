@@ -77,6 +77,8 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+
+from repro.analysis.lockcheck import make_lock
 from typing import Sequence
 
 import numpy as np
@@ -343,7 +345,7 @@ class BucketStack:
         self.n = 0
         self._cap = 8
         self.slot: dict = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("backend.bucket._lock")
         # monotonic lane-padding floor for the jitted stacked kernels:
         # remembering the bucket's high-water mark means recompiles
         # happen only on genuine growth, never when a fleet's live lane
@@ -463,7 +465,7 @@ class StackCaches:
     def __init__(self):
         self.buckets: dict[tuple, BucketStack] = {}
         self.member_stacks: dict[tuple, StackedArrays] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("backend.stacks._lock")
         # warm-lane lookup counters (the "lanes" category of
         # ArtifactStore.stats): a hit means a task reused a resident
         # lane's padded tensors and skipped build_padded entirely

@@ -28,6 +28,8 @@ from __future__ import annotations
 
 import hashlib
 import threading
+
+from repro.analysis.lockcheck import make_lock
 from typing import Sequence
 
 import numpy as np
@@ -157,7 +159,7 @@ class CompilationContext:
         # and slice caches stay lock-free — concurrent misses recompute
         # the same immutable value and dict writes are atomic under the
         # GIL, so a race only wastes work.
-        self._master_lock = threading.Lock()
+        self._master_lock = make_lock("context._master_lock")
 
     # -- master state table -------------------------------------------
     def _master_arrays(self, gating: bool) -> None:

@@ -29,6 +29,8 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+
+from repro.analysis.lockcheck import make_lock
 import time
 from typing import Callable
 
@@ -609,7 +611,7 @@ def _solve_sweep(policy: str, ctx: CompilationContext,
     problems: dict[tuple, ScheduleProblem] = {}
     agg = {"dp_calls": 0, "dp_lambdas": 0, "candidates_evaluated": 0,
            "lambda_iterations": 0, "refinement_moves": 0}
-    agg_lock = threading.Lock()     # sweep workers share the aggregates
+    agg_lock = make_lock("policies._agg_lock")  # sweep workers share the aggregates
 
     def solve_subset(rails: tuple[float, ...],
                      hint: dict | None = None) -> dict | None:

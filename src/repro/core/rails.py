@@ -159,16 +159,17 @@ def _select_rails_parallel(
     subset the sequential sweep would have solved to a winner — see
     :func:`select_rails` for why the selection is exactly preserved.
     """
-    import threading
     from concurrent.futures import (
         FIRST_COMPLETED,
         ThreadPoolExecutor,
         wait,
     )
 
+    from repro.analysis.lockcheck import make_lock
+
     stats = {"subsets_total": 0, "subsets_solved": 0,
              "subsets_skipped": 0, "subsets_cut": 0, "workers": workers}
-    lock = threading.Lock()
+    lock = make_lock("rails._sweep_lock")
     # the incumbent is the lexicographic (e_total, enumeration index)
     # minimum so far — the index matters for cut soundness: a subset may
     # only be cut on a bound *tie* when the incumbent enumerates earlier

@@ -21,6 +21,26 @@ from typing import Any
 
 from repro.hw.edge40nm import DOMAINS
 
+#: serialized-payload schema version.  Mirrors the DiskTier STORE_META
+#: policy: every ``to_json`` payload carries its schema, and payloads
+#: from an unknown *newer* schema refuse loudly instead of misreading.
+#: Pre-versioning payloads (no ``schema`` field) migrate through the
+#: legacy shim in :meth:`PowerSchedule.from_json`.
+SCHEDULE_SCHEMA = 1
+READABLE_SCHEDULE_SCHEMAS = (1,)
+
+_REQUIRED_FIELDS = frozenset({
+    "policy", "network", "rails", "layer_voltages", "awake_banks",
+    "t_max", "t_infer", "e_total", "e_op", "e_trans", "e_idle",
+    "z_active_idle", "n_rail_switches", "feasible",
+})
+#: fields added after the first serialized artifacts shipped — absent
+#: in legacy payloads, filled from the dataclass defaults on load
+_OPTIONAL_FIELDS = frozenset({
+    "solver_stats", "domains", "goal", "binding_constraint",
+    "cost_model",
+})
+
 
 @dataclasses.dataclass
 class PowerSchedule:
@@ -84,6 +104,7 @@ class PowerSchedule:
 
     def to_json(self) -> str:
         d = dataclasses.asdict(self)
+        d["schema"] = SCHEDULE_SCHEMA
         d["rails"] = list(self.rails)
         d["domains"] = list(self.domains)
         return json.dumps(d, indent=2)
@@ -91,8 +112,32 @@ class PowerSchedule:
     @classmethod
     def from_json(cls, text: str) -> "PowerSchedule":
         d = json.loads(text)
+        if not isinstance(d, dict):
+            raise ValueError(
+                f"power-schedule payload must be a JSON object, "
+                f"got {type(d).__name__}")
+        schema = d.pop("schema", None)
+        # migration shim: pre-versioning payloads carry no schema field
+        # and are read as schema 1 (every schema-1 field they may lack
+        # is optional and defaulted below)
+        if schema is not None and schema not in READABLE_SCHEDULE_SCHEMAS:
+            raise ValueError(
+                f"power-schedule payload has schema {schema!r}; this "
+                f"build reads {READABLE_SCHEDULE_SCHEMAS} — refusing "
+                f"to misread a newer layout")
+        unknown = set(d) - _REQUIRED_FIELDS - _OPTIONAL_FIELDS
+        if unknown:
+            raise ValueError(
+                "power-schedule payload has unknown fields "
+                f"{sorted(unknown)} (schema {schema!r})")
+        missing = _REQUIRED_FIELDS - set(d)
+        if missing:
+            raise ValueError(
+                "power-schedule payload is missing required fields "
+                f"{sorted(missing)} (schema {schema!r})")
         d["rails"] = tuple(d["rails"])
-        d["domains"] = tuple(d["domains"])
+        if "domains" in d:
+            d["domains"] = tuple(d["domains"])
         d["layer_voltages"] = [tuple(v) for v in d["layer_voltages"]]
         return cls(**d)
 

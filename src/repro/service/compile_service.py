@@ -31,6 +31,9 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import threading
+
+from repro.analysis.lockcheck import barrier as lock_barrier
+from repro.analysis.lockcheck import make_lock
 from typing import Sequence
 
 import numpy as np
@@ -176,7 +179,7 @@ class CompileService:
         self.store = store if store is not None \
             else ArtifactStore(disk_path=disk_path)
         self.use_schedule_cache = use_schedule_cache
-        self._async_lock = threading.Lock()
+        self._async_lock = make_lock("compile_service._async_lock")
         self._async_pool: concurrent.futures.Executor | None = None
 
     # -- lifecycle -----------------------------------------------------
@@ -420,6 +423,11 @@ class CompileService:
         for backend, units in fleets.items():
             for unit in units:
                 unit["job"].start_clock()  # exclude other fleets' solves
+            # the stacked-sweep round loop blocks until every live rail
+            # subset converges — entering it with a service/store lock
+            # held would starve every other compilation (checked under
+            # PFDNN_LOCKCHECK=1)
+            lock_barrier("compile_many")
             fleet = run_stacked_sweeps(
                 [unit["job"].sweep for unit in units], backend=backend,
                 caches=self.store.stack_caches)

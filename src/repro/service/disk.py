@@ -51,6 +51,8 @@ import json
 import os
 import pathlib
 import threading
+
+from repro.analysis.lockcheck import make_lock
 import time
 from hashlib import blake2b
 
@@ -107,7 +109,7 @@ class DiskTier:
         self.root = pathlib.Path(path)
         self.max_bytes = max_bytes
         self.max_entries = max_entries
-        self._lock = threading.Lock()
+        self._lock = make_lock("disk._lock")
         self._puts_since_evict = 0
         self.evictions = {c: 0 for c in CATEGORIES}
         self.orphans_swept = 0
@@ -141,7 +143,9 @@ class DiskTier:
         temps are left alone (their writer may still be alive); lookups
         never see temps either way — entries are only ever the
         ``os.replace`` targets."""
-        cutoff = time.time() - _STALE_TMP_S
+        # epoch clock on purpose: compared against st_mtime, which is
+        # epoch-based too
+        cutoff = time.time() - _STALE_TMP_S  # pfdnn: allow(wall-clock)
         for cat in CATEGORIES:
             for tmp in (self.root / cat).glob("*.tmp"):
                 try:

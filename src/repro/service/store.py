@@ -78,6 +78,8 @@ import json
 import os
 import pathlib
 import threading
+
+from repro.analysis.lockcheck import make_lock
 from typing import Sequence
 
 import numpy as np
@@ -137,7 +139,7 @@ class ArtifactStore:
     def __init__(self, disk_path=None, *,
                  max_disk_bytes: int | None = None,
                  max_disk_entries: int | None = None):
-        self._lock = threading.RLock()
+        self._lock = make_lock("store._lock", reentrant=True)
         # specs_acc_key -> (costs, plan)
         self._characterization: dict = {}
         # (specs_acc_key, gating) -> master record (volts/t_op/e_op/vkey)

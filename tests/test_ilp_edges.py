@@ -1,0 +1,105 @@
+"""Edge-case coverage for the exact ILP oracles (``repro.core.ilp``):
+solver-failure paths (time limit, infeasible model), degenerate
+instances (single layer), and the variable-budget blowup guard."""
+
+import numpy as np
+import pytest
+
+from conftest import random_problem
+from repro.core.ilp import IlpBlowupError, solve_ilp, solve_ilp_min_latency
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+def test_time_limit_returns_failure_dict(rng):
+    problem = random_problem(rng, n_layers=12, n_states=6)
+    res = solve_ilp(problem, time_limit=1e-9)
+    assert res["feasible"] is False
+    assert res["status"] == 1                 # HiGHS: limit reached
+    assert "Time limit" in res["message"]
+    assert res["wall_time_s"] >= 0.0
+    # no partial evaluation keys leak out of the failure path
+    assert "e_total" not in res and "path" not in res
+
+
+def test_infeasible_deadline(rng):
+    problem = random_problem(rng, n_layers=4, n_states=3,
+                             t_max_scale=1e-6)
+    res = solve_ilp(problem)
+    assert res["feasible"] is False
+    assert res["status"] == 2                 # proven infeasible
+    assert "wall_time_s" in res and "message" in res
+
+
+def test_single_layer_matches_brute_force(rng):
+    problem = random_problem(rng, n_layers=1, n_states=5)
+    res = solve_ilp(problem)
+    assert res["feasible"] is True
+    # no transitions on a single layer; the optimum is the cheapest
+    # deadline-holding state, which brute force finds directly
+    best = min(
+        (problem.evaluate([s]) for s in range(len(problem.layer_states[0]))
+         if problem.evaluate([s])["feasible"]),
+        key=lambda r: r["e_total"])
+    assert res["e_total"] == pytest.approx(best["e_total"], rel=1e-6)
+    assert res["e_trans"] == 0.0
+    assert res["n_variables"] >= len(problem.layer_states[0])
+
+
+def test_blowup_guard(rng):
+    problem = random_problem(rng, n_layers=12, n_states=6)
+    with pytest.raises(IlpBlowupError, match="variables"):
+        solve_ilp(problem, max_variables=10)
+    # the message reports the layered-graph arithmetic
+    with pytest.raises(IlpBlowupError, match=r"Σ\|S_i\|"):
+        solve_ilp_min_latency(problem, budget=1.0, max_variables=10)
+
+
+def test_min_latency_budget_infeasible(rng):
+    problem = random_problem(rng, n_layers=3, n_states=4)
+    res = solve_ilp_min_latency(problem, budget=1e-12)
+    assert res["feasible"] is False
+    assert res["status"] == 2
+    assert "wall_time_s" in res
+
+
+def test_min_latency_generous_budget_is_fastest_path(rng):
+    problem = random_problem(rng, n_layers=3, n_states=4)
+    res = solve_ilp_min_latency(problem, budget=1.0)
+    assert res["feasible"] is True
+    # with the budget slack, the optimum is the unconstrained
+    # min-time path; lower-bound it by the sum of per-layer minima
+    t_floor = sum(min(s.t_op for s in states)
+                  for states in problem.layer_states)
+    assert res["t_infer"] >= t_floor - 1e-12
+    assert res["ilp_objective"] == pytest.approx(res["t_infer"],
+                                                 rel=1e-6)
+
+
+def test_min_latency_single_layer(rng):
+    problem = random_problem(rng, n_layers=1, n_states=4)
+    res = solve_ilp_min_latency(problem, budget=1.0)
+    assert res["feasible"] is True
+    t_best = min(s.t_op for s in problem.layer_states[0])
+    assert res["t_infer"] == pytest.approx(t_best, rel=1e-9)
+
+
+def test_ilp_matches_brute_force_small(rng):
+    """Exactness sanity on an enumerable instance: the ILP optimum
+    equals exhaustive search over every layered path."""
+    import itertools
+
+    problem = random_problem(rng, n_layers=3, n_states=3)
+    res = solve_ilp(problem)
+    evals = [problem.evaluate(list(p))
+             for p in itertools.product(range(3), repeat=3)]
+    feas = [e for e in evals if e["feasible"]]
+    if not feas:
+        assert res["feasible"] is False
+        return
+    best = min(e["e_total"] for e in feas)
+    assert res["feasible"] is True
+    assert res["e_total"] == pytest.approx(best, rel=1e-6)
